@@ -1,0 +1,54 @@
+//! Cross-device comparison: SqueezeNet, K80 → RTX 2060, all four
+//! strategies side by side (the Fig. 4 / Fig. 5 view for one cell).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cross_device
+//! ```
+
+use moses::device::presets;
+use moses::metrics::experiments::{self, ExpConfig};
+use moses::util::table::{pct_gain, Table};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExpConfig::default();
+    let target = presets::rtx_2060();
+    let trials = 48;
+
+    println!("== SqueezeNet, K80 -> RTX 2060, all strategies ==\n");
+    let pretrained = experiments::pretrained_source_checkpoint(&cfg)?;
+
+    let mut rows = Vec::new();
+    for strategy in experiments::eval_strategies() {
+        println!("tuning with {} ...", strategy.name());
+        let s = experiments::run_session(
+            &cfg, &pretrained, "squeezenet", &target, strategy.clone(), trials,
+        )?;
+        rows.push((strategy.name().to_string(), s));
+    }
+
+    let raw_ms = rows[0].1.total_default_latency_ms();
+    let mut t = Table::new(
+        "SqueezeNet on RTX 2060",
+        &["strategy", "latency ms", "vs raw", "search s", "measurements"],
+    );
+    t.row(vec!["raw (no tuning)".into(), format!("{raw_ms:.3}"), "-".into(), "0".into(), "0".into()]);
+    for (name, s) in &rows {
+        t.row(vec![
+            name.clone(),
+            format!("{:.3}", s.total_best_latency_ms()),
+            pct_gain(raw_ms / s.total_best_latency_ms()),
+            format!("{:.0}", s.search_time_s()),
+            s.total_measurements().to_string(),
+        ]);
+    }
+    t.print();
+
+    let finetune = rows.iter().find(|(n, _)| n == "tenset-finetune").unwrap();
+    let moses_row = rows.iter().find(|(n, _)| n == "moses").unwrap();
+    println!(
+        "Moses vs Tenset-Finetune: {} latency, {} search efficiency",
+        pct_gain(finetune.1.total_best_latency_ms() / moses_row.1.total_best_latency_ms()),
+        pct_gain(finetune.1.search_time_s() / moses_row.1.search_time_s()),
+    );
+    Ok(())
+}

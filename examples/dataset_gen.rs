@@ -1,0 +1,61 @@
+//! Reproduce the paper's §4.1 contribution: a program-performance
+//! dataset for two embedded devices (Jetson TX2 + AGX Xavier), scaled to
+//! run in seconds (DESIGN.md §2 records the scaling).
+//!
+//! ```bash
+//! cargo run --release --example dataset_gen
+//! ```
+
+use moses::dataset::gen::{generate, GenConfig, TaskSource};
+use moses::dataset::io;
+use moses::device::presets;
+use moses::util::stats::Summary;
+use moses::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::path::PathBuf::from("artifacts");
+    std::fs::create_dir_all(&out_dir)?;
+    let cfg = GenConfig { records_per_task: 160, seed: 0 };
+
+    let mut t = Table::new(
+        "Embedded-device dataset (paper §4.1, scaled)",
+        &["device", "tasks", "records", "failed %", "median GFLOP/s", "file"],
+    );
+    for device in [presets::jetson_tx2(), presets::jetson_xavier()] {
+        // "tasks from over 50 DNN models": zoo + 50 random realistic tasks.
+        let mut ds = generate(&device, TaskSource::Random { count: 50 }, &cfg);
+        let zoo_ds = generate(&device, TaskSource::Zoo, &cfg);
+        for r in &zoo_ds.records {
+            let idx = ds.add_task(zoo_ds.tasks[r.task_idx].clone());
+            let sched = moses::program::Schedule::decode(&r.knobs);
+            ds.push(idx, &sched, r.gflops, r.latency_s);
+        }
+        let path = out_dir.join(format!("{}.moses-ds", device.name));
+        io::save(&ds, &path)?;
+
+        let ok: Vec<f64> =
+            ds.records.iter().filter(|r| r.gflops > 0.0).map(|r| r.gflops).collect();
+        let failed = ds.len() - ok.len();
+        let mut sorted = ok.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if sorted.is_empty() { 0.0 } else { sorted[sorted.len() / 2] };
+        t.row(vec![
+            device.name.clone(),
+            ds.tasks.len().to_string(),
+            ds.len().to_string(),
+            format!("{:.1}", failed as f64 / ds.len() as f64 * 100.0),
+            format!("{median:.1}"),
+            path.display().to_string(),
+        ]);
+        // Round-trip check.
+        let back = io::load(&path)?;
+        assert_eq!(back.len(), ds.len());
+        let s = Summary::of(&ok);
+        println!(
+            "{}: throughput mean {:.1} GFLOP/s (min {:.2}, max {:.1})",
+            device.name, s.mean, s.min, s.max
+        );
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: tune one convolution task on a simulated Jetson TX2 with
+//! Moses and print what happened.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use moses::coordinator::{AutoTuner, BackendKind, TuneConfig};
+use moses::device::presets;
+use moses::metrics::experiments::{pretrained_source_checkpoint, ExpConfig};
+use moses::program::{Subgraph, SubgraphKind};
+use moses::transfer::{MosesConfig, Strategy};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's Fig. 1 running example: Conv2d(3→64, k3, s1).
+    let task = Subgraph::new(
+        "quickstart.conv",
+        SubgraphKind::Conv2d {
+            n: 1,
+            h: 224,
+            w: 224,
+            cin: 3,
+            cout: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 0,
+        },
+    );
+
+    // 1. Pre-train (or load the cached) source cost model on the
+    //    simulated K80 — paper §3.6 Step 1.
+    let exp = ExpConfig::default();
+    println!("loading/pre-training the K80 source cost model ...");
+    let pretrained = pretrained_source_checkpoint(&exp)?;
+
+    // 2. Transfer to the target (TX2) and tune with Moses — Steps 2-4.
+    let cfg = TuneConfig {
+        trials_per_task: 64,
+        strategy: Strategy::Moses(MosesConfig::default()),
+        backend: BackendKind::Xla,
+        ..TuneConfig::default()
+    };
+    let model = moses::costmodel::CostModel::with_params(exp.backend_arc()?, pretrained);
+    let mut tuner = AutoTuner::with_model(&cfg, presets::jetson_tx2(), model);
+    let session = tuner.tune(&[task])?;
+
+    let r = &session.tasks[0];
+    println!("\ntask           : {}", r.task.name);
+    println!("default latency: {:.3} ms", r.default_latency_s * 1e3);
+    println!("tuned latency  : {:.3} ms  ({:.2}x speedup)", r.best_latency_s * 1e3, r.speedup());
+    println!("best schedule  : {:?}", r.best_schedule);
+    println!(
+        "measurements   : {} on-device, {} prediction-only trials",
+        r.measured, r.predicted_only
+    );
+    println!("virtual search : {:.0} s", session.search_time_s());
+    Ok(())
+}

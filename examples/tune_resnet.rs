@@ -1,0 +1,88 @@
+//! End-to-end driver (DESIGN.md §4): the full Moses pipeline on a real
+//! small workload — ResNet-18, K80 → TX2 — reporting the paper's
+//! headline metrics and the convergence log.
+//!
+//! Pipeline exercised: dataset generation (simulated K80 corpus) →
+//! offline pre-training via the AOT Pallas/JAX artifacts on PJRT →
+//! cross-device transfer → per-task evolutionary search with
+//! lottery-ticket masked adaptation + AC early termination → end-to-end
+//! latency & search-efficiency report vs. the Tenset-Finetune baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example tune_resnet
+//! ```
+
+use moses::metrics::{self, experiments::{self, ExpConfig}};
+use moses::device::presets;
+use moses::transfer::{MosesConfig, Strategy};
+use moses::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExpConfig::default();
+    let target = presets::jetson_tx2();
+    let trials = 48;
+
+    println!("== Moses end-to-end: ResNet-18, K80 -> TX2 ==\n");
+    println!("[1/3] source cost model (simulated K80 Tenset corpus, AOT/PJRT training)");
+    let t0 = std::time::Instant::now();
+    let pretrained = experiments::pretrained_source_checkpoint(&cfg)?;
+    println!("      ready in {:.1}s (cached across runs)\n", t0.elapsed().as_secs_f64());
+
+    println!("[2/3] tuning with Tenset-Finetune (baseline) ...");
+    let tf = experiments::run_session(
+        &cfg, &pretrained, "resnet18", &target, Strategy::TensetFinetune, trials,
+    )?;
+    println!("[3/3] tuning with Moses ...");
+    let mo = experiments::run_session(
+        &cfg,
+        &pretrained,
+        "resnet18",
+        &target,
+        Strategy::Moses(MosesConfig::default()),
+        trials,
+    )?;
+
+    let mut t = Table::new(
+        "ResNet-18 on TX2 (paper headline metrics)",
+        &["metric", "tenset-finetune", "moses", "moses gain"],
+    );
+    t.row(vec![
+        "end-to-end latency (ms)".into(),
+        format!("{:.3}", tf.total_best_latency_ms()),
+        format!("{:.3}", mo.total_best_latency_ms()),
+        format!(
+            "{:.2}x",
+            metrics::latency_reduction(tf.total_best_latency_ms(), mo.total_best_latency_ms())
+        ),
+    ]);
+    t.row(vec![
+        "virtual search time (s)".into(),
+        format!("{:.0}", tf.search_time_s()),
+        format!("{:.0}", mo.search_time_s()),
+        format!("{:.2}x", metrics::search_gain(tf.search_time_s(), mo.search_time_s())),
+    ]);
+    t.row(vec![
+        "on-device measurements".into(),
+        tf.total_measurements().to_string(),
+        mo.total_measurements().to_string(),
+        String::new(),
+    ]);
+    let cmat = metrics::cmat(
+        metrics::search_gain(tf.search_time_s(), mo.search_time_s()),
+        metrics::latency_reduction(tf.total_best_latency_ms(), mo.total_best_latency_ms()),
+    );
+    t.row(vec!["CMAT (%)".into(), String::new(), format!("{cmat:.1}"), String::new()]);
+    t.print();
+
+    // Convergence curves (best-so-far per round) for the 3 biggest tasks.
+    println!("convergence (best-so-far latency per round, ms):");
+    let mut tasks: Vec<_> = mo.tasks.iter().collect();
+    tasks.sort_by(|a, b| b.task.flops().partial_cmp(&a.task.flops()).unwrap());
+    for r in tasks.iter().take(3) {
+        let curve: Vec<String> =
+            r.history.iter().map(|l| format!("{:.3}", l * 1e3)).collect();
+        println!("  {:<28} {}", r.task.name, curve.join(" -> "));
+    }
+    println!("\nspeedup over untuned default schedules: {:.2}x", mo.speedup());
+    Ok(())
+}

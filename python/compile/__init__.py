@@ -1,0 +1,6 @@
+"""Build-time compile package: JAX model (L2) + Pallas kernels (L1).
+
+Nothing in this package is imported at tuning time; ``make artifacts``
+runs :mod:`compile.aot` once and the Rust coordinator consumes the HLO
+text artifacts through PJRT.
+"""

@@ -1,0 +1,106 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for Rust/PJRT.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Everything is lowered with ``return_tuple=True``; the Rust side unwraps
+with ``to_tuple1``/``to_tuple4``.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+P = ref.N_PARAMS
+NF = ref.N_FEATURES
+
+
+def entry_points():
+    """(name, fn, example specs) for every artifact.
+
+    Two predict batch sizes: the evolutionary search scores populations
+    of ~64 candidates per generation, so a dedicated 64-row executable
+    avoids padding every query 8x to the 512-row dataset-scoring shape
+    (measured ~7x faster per query — EXPERIMENTS.md §Perf).
+    """
+    vec = _spec(P)
+    xb_pred = _spec(model.PRED_BATCH, NF)
+    xb_pred_small = _spec(model.PRED_BATCH_SMALL, NF)
+    xb_train = _spec(model.TRAIN_BATCH, NF)
+    yb = _spec(model.TRAIN_BATCH)
+    hp = _spec(4)
+    return [
+        ("predict", model.predict, (vec, xb_pred)),
+        ("predict_small", model.predict, (vec, xb_pred_small)),
+        ("train_step", model.train_step, (vec, vec, vec, xb_train, yb, yb, vec, hp)),
+        ("xi", model.xi_scores, (vec, xb_train, yb, yb)),
+        ("loss_eval", model.loss_eval, (vec, xb_train, yb, yb)),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact dir")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meta = {
+        "n_params": P,
+        "n_features": NF,
+        "hidden": ref.HIDDEN,
+        "pred_batch": model.PRED_BATCH,
+        "pred_batch_small": model.PRED_BATCH_SMALL,
+        "train_batch": model.TRAIN_BATCH,
+        "adam": {"b1": ref.ADAM_B1, "b2": ref.ADAM_B2, "eps": ref.ADAM_EPS},
+        "artifacts": {},
+    }
+    for name, fn, specs in entry_points():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        meta["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "num_inputs": len(specs),
+        }
+        print(f"wrote {path}: {len(text)} chars sha={digest}")
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the Moses cost model.
+
+Two kernels:
+  * :mod:`mlp` — fused 3-layer MLP forward (the prediction hot path).
+  * :mod:`update` — masked Adam + weight-decay parameter update
+    (the Moses lottery-ticket update rule, Eq. 6/7 of the paper).
+
+Both are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and are verified against the pure-jnp oracles in
+:mod:`ref` by the pytest suite.
+"""
+
+from . import mlp, ref, update  # noqa: F401

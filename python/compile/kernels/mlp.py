@@ -1,0 +1,89 @@
+"""Fused 3-layer MLP forward as a Pallas kernel — the prediction hot path.
+
+The auto-tuner scores millions of candidate tensor programs per session,
+so the cost-model forward dominates Layer-1 compute.  TPU mapping (see
+DESIGN.md §Hardware-Adaptation — the paper targets CUDA GPUs; we rethink
+for the MXU instead of porting threadblocks):
+
+* the batch is tiled at ``TILE_B = 128`` rows per grid step (the MXU
+  systolic dimension), expressed with a ``BlockSpec`` over the batch axis
+  so Pallas pipelines the HBM->VMEM streaming of ``x`` tiles;
+* ALL weights stay resident in VMEM across grid steps (their index_map is
+  constant, so the pipeline loads them once): ~348k f32 = 1.39 MB, far
+  under the ~16 MB VMEM budget.  The whole forward therefore runs on-chip
+  with no inter-layer HBM round-trips — the TPU analogue of the
+  persistent-weights trick the CUDA era used for small MLPs;
+* matmul accumulation is forced to f32 via ``preferred_element_type`` so
+  an eventual bf16 weight variant keeps MXU-friendly accumulation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO and the BlockSpec
+structure is what carries the TPU scheduling intent (analysed statically
+in DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_B = 128  # MXU systolic dim; batch tile per grid step.
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    """One batch tile: x[TILE_B,164] -> scores[TILE_B], all three layers
+    computed from VMEM-resident weights."""
+    x = x_ref[...]
+    h1 = jnp.maximum(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...],
+        0.0,
+    )
+    h2 = jnp.maximum(
+        jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...],
+        0.0,
+    )
+    out = jnp.dot(h2, w3_ref[...], preferred_element_type=jnp.float32) + b3_ref[...]
+    o_ref[...] = out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlp_forward(params, x, interpret=True):
+    """Pallas MLP forward: params f32[N_PARAMS], x f32[B,164] -> f32[B].
+
+    ``B`` must be a multiple of ``TILE_B`` (the AOT entry points use
+    B=512; Rust pads partial batches and slices the scores).
+    """
+    batch, nf = x.shape
+    assert nf == ref.N_FEATURES, x.shape
+    # Tile at the MXU dim when the batch allows it; small-batch variants
+    # (e.g. the 64-row evolutionary-population entry point) use the whole
+    # batch as a single tile.
+    tile_b = min(TILE_B, batch)
+    assert batch % tile_b == 0, f"batch {batch} not a multiple of {tile_b}"
+    w1, b1, w2, b2, w3, b3 = ref.unflatten(params)
+
+    grid = (batch // tile_b,)
+    # Weights use a constant index_map: Pallas keeps them VMEM-resident
+    # across grid steps instead of re-streaming per tile.
+    resident = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, ref.N_FEATURES), lambda i: (i, 0)),
+            resident((ref.N_FEATURES, ref.HIDDEN)),
+            resident((ref.HIDDEN,)),
+            resident((ref.HIDDEN, ref.HIDDEN)),
+            resident((ref.HIDDEN,)),
+            resident((ref.HIDDEN, 1)),
+            resident((1,)),
+        ],
+        out_specs=pl.BlockSpec((tile_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2, w3, b3)

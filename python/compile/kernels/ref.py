@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the *semantics*; the Pallas kernels in :mod:`mlp` and
+:mod:`update` must match them under ``interpret=True``.  The pytest suite
+sweeps shapes and seeds with hypothesis and asserts ``assert_allclose``
+at tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Cost-model geometry (Ansor's representative backbone, paper §4.2):
+# 164-d program features -> 512 -> 512 -> 1, ReLU activations.
+N_FEATURES = 164
+HIDDEN = 512
+
+# Flat-parameter layout offsets.  All cost-model parameters travel as one
+# f32[N_PARAMS] vector across the Rust<->HLO boundary so the FFI stays a
+# single literal; unflatten() is the canonical decoder and the Rust side
+# (rust/src/costmodel/layout.rs) mirrors these offsets exactly.
+_SIZES = (
+    N_FEATURES * HIDDEN,  # w1
+    HIDDEN,               # b1
+    HIDDEN * HIDDEN,      # w2
+    HIDDEN,               # b2
+    HIDDEN,               # w3 (HIDDEN x 1, stored as vector)
+    1,                    # b3
+)
+N_PARAMS = sum(_SIZES)  # 347_649
+
+# Adam constants (fixed; not runtime inputs).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def unflatten(params):
+    """Decode the flat f32[N_PARAMS] vector into (w1, b1, w2, b2, w3, b3)."""
+    assert params.shape == (N_PARAMS,), params.shape
+    out = []
+    off = 0
+    for size in _SIZES:
+        out.append(params[off : off + size])
+        off += size
+    w1, b1, w2, b2, w3, b3 = out
+    return (
+        w1.reshape(N_FEATURES, HIDDEN),
+        b1,
+        w2.reshape(HIDDEN, HIDDEN),
+        b2,
+        w3.reshape(HIDDEN, 1),
+        b3,
+    )
+
+
+def flatten(w1, b1, w2, b2, w3, b3):
+    """Inverse of :func:`unflatten`."""
+    return jnp.concatenate(
+        [w1.ravel(), b1.ravel(), w2.ravel(), b2.ravel(), w3.ravel(), b3.ravel()]
+    )
+
+
+def mlp_forward(params, x):
+    """Reference MLP forward: f32[B, 164] -> f32[B] throughput scores."""
+    w1, b1, w2, b2, w3, b3 = unflatten(params)
+    h1 = jnp.maximum(x @ w1 + b1, 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2, 0.0)
+    return (h2 @ w3 + b3)[:, 0]
+
+
+def masked_adam_update(params, m, v, grads, mask, lr, wd, step):
+    """Reference Moses update (paper Eq. 6/7 combined with Adam).
+
+    Transferable parameters (mask==1) take a bias-corrected Adam step on
+    the masked gradient; domain-variant parameters (mask==0) are pulled
+    toward zero by weight decay: ``w_v <- w_v - lr * wd * w_v`` (Eq. 7).
+
+    ``step`` is the 1-based Adam timestep (f32 scalar for HLO uniformity).
+    Returns (params', m', v').
+    """
+    g = grads * mask
+    m_new = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v_new = ADAM_B2 * v + (1.0 - ADAM_B2) * (g * g)
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    adam_step = lr * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS)
+    decay = lr * wd * params
+    params_new = params - mask * adam_step - (1.0 - mask) * decay
+    return params_new, m_new, v_new
+
+
+def pairwise_rank_loss(scores, y, w):
+    """Weighted pairwise logistic ranking loss (Ansor-style rank objective).
+
+    For every ordered pair (i, j) with y_i != y_j the model should rank the
+    higher-throughput program higher; the per-pair loss is
+    ``softplus(-(s_i - s_j) * sign(y_i - y_j))``.  ``w`` carries validity
+    weights (0 for padding rows) so Rust can pad partial batches.
+    """
+    s_diff = scores[:, None] - scores[None, :]
+    y_diff = y[:, None] - y[None, :]
+    sign = jnp.sign(y_diff)
+    pair_w = w[:, None] * w[None, :] * jnp.abs(sign)
+    # log(1 + exp(-x)) computed stably.
+    x = s_diff * sign
+    per_pair = jnp.logaddexp(0.0, -x)
+    total_w = jnp.maximum(jnp.sum(pair_w), 1.0)
+    return jnp.sum(per_pair * pair_w) / total_w

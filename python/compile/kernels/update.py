@@ -1,0 +1,70 @@
+"""Masked Adam + weight-decay update as a Pallas kernel (Moses Eq. 6/7).
+
+This is the lottery-ticket update rule over the flat parameter vector:
+transferable parameters (mask==1) take a bias-corrected Adam step on the
+masked gradient; domain-variant parameters (mask==0) decay toward zero
+(``w_v <- w_v - lr*wd*w_v``, paper Eq. 7).
+
+TPU mapping: pure elementwise over f32[N_PARAMS]; the vector is padded to
+a multiple of ``CHUNK`` and gridded so each step streams one VMEM-sized
+chunk of (params, m, v, grads, mask) through the VPU.  Hyper-parameters
+arrive as a tiny f32[4] vector ``hp = [lr, wd, step, _reserved]`` kept
+VMEM-resident (constant index_map).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+CHUNK = 8192  # elements per grid step; 5 operands * 32 KiB each << VMEM.
+
+
+def _update_kernel(p_ref, m_ref, v_ref, g_ref, mask_ref, hp_ref,
+                   p_out, m_out, v_out):
+    lr = hp_ref[0]
+    wd = hp_ref[1]
+    step = hp_ref[2]
+    p = p_ref[...]
+    mask = mask_ref[...]
+    g = g_ref[...] * mask
+    m_new = ref.ADAM_B1 * m_ref[...] + (1.0 - ref.ADAM_B1) * g
+    v_new = ref.ADAM_B2 * v_ref[...] + (1.0 - ref.ADAM_B2) * (g * g)
+    bc1 = 1.0 - ref.ADAM_B1**step
+    bc2 = 1.0 - ref.ADAM_B2**step
+    adam_step = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + ref.ADAM_EPS)
+    p_out[...] = p - mask * adam_step - (1.0 - mask) * (lr * wd * p)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_adam_update(params, m, v, grads, mask, hp, interpret=True):
+    """Pallas Moses update.
+
+    All vector args are f32[N_PARAMS]; ``hp = [lr, wd, step, _]`` (f32[4]).
+    Returns (params', m', v').
+    """
+    n = params.shape[0]
+    pad = (-n) % CHUNK
+    padded = n + pad
+
+    def pad1(a):
+        return jnp.pad(a, (0, pad))
+
+    grid = (padded // CHUNK,)
+    chunk_spec = pl.BlockSpec((CHUNK,), lambda i: (i,))
+    p_new, m_new, v_new = pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[chunk_spec] * 5 + [pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=[chunk_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((padded,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(pad1(params), pad1(m), pad1(v), pad1(grads), pad1(mask), hp)
+    return p_new[:n], m_new[:n], v_new[:n]

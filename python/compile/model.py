@@ -1,0 +1,69 @@
+"""Layer-2 JAX graphs for the Moses cost model.
+
+Four AOT entry points, all over ONE flat f32[N_PARAMS] parameter vector
+(layout in :mod:`kernels.ref`; mirrored by rust/src/costmodel/layout.rs):
+
+* :func:`predict`    — score a batch of candidate programs (Pallas MLP
+  forward; THE search-loop hot path).
+* :func:`train_step` — one masked Adam step of the pairwise ranking loss.
+  ``mask`` selects the transferable (domain-invariant) parameters: Moses
+  passes the lottery-ticket mask, vanilla fine-tuning passes all-ones.
+  Gradients flow through the pure-jnp forward (pallas_call is not
+  differentiable); the parameter update itself is the Pallas
+  ``masked_adam_update`` kernel.
+* :func:`xi_scores`  — per-parameter saliency xi = |w * grad w| (paper
+  Eq. 5); Rust ranks these to draw the transferable/variant boundary.
+* :func:`loss_eval`  — held-out ranking loss for the AC module.
+
+Batch geometry is fixed at lowering time (PRED_BATCH / TRAIN_BATCH);
+Rust pads partial batches with zero-weight rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp, ref, update
+
+PRED_BATCH = 512
+# Small-batch predict variant for evolutionary-population scoring (one
+# population = 64 candidates); see aot.entry_points.
+PRED_BATCH_SMALL = 64
+TRAIN_BATCH = 256
+
+
+def predict(params, x):
+    """Scores for x f32[PRED_BATCH, 164] via the Pallas fused MLP."""
+    return mlp.mlp_forward(params, x)
+
+
+def _rank_loss(params, x, y, w):
+    scores = ref.mlp_forward(params, x)
+    return ref.pairwise_rank_loss(scores, y, w)
+
+
+_loss_and_grad = jax.value_and_grad(_rank_loss)
+
+
+def train_step(params, m, v, x, y, w, mask, hp):
+    """One Moses/vanilla training step.
+
+    Args: params/m/v/mask f32[N_PARAMS], x f32[TRAIN_BATCH,164],
+    y/w f32[TRAIN_BATCH], hp = [lr, wd, step, _reserved] f32[4].
+    Returns (params', m', v', loss f32[1]).
+    """
+    loss, grads = _loss_and_grad(params, x, y, w)
+    p_new, m_new, v_new = update.masked_adam_update(params, m, v, grads, mask, hp)
+    return p_new, m_new, v_new, jnp.reshape(loss, (1,))
+
+
+def xi_scores(params, x, y, w):
+    """Saliency xi = |w * grad w| over the ranking loss (paper Eq. 5)."""
+    grads = jax.grad(_rank_loss)(params, x, y, w)
+    return jnp.abs(params * grads)
+
+
+def loss_eval(params, x, y, w):
+    """Held-out ranking loss, f32[1]."""
+    return jnp.reshape(_rank_loss(params, x, y, w), (1,))

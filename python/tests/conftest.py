@@ -1,0 +1,23 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+
+def make_params(seed: int, scale: float = 0.05) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, ref.N_PARAMS).astype(np.float32))
+
+
+def make_batch(seed: int, batch: int):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0.0, 1.0, (batch, ref.N_FEATURES)).astype(np.float32))
+    y = jnp.asarray(rng.uniform(0.0, 10.0, batch).astype(np.float32))
+    w = jnp.ones(batch, jnp.float32)
+    return x, y, w
+
+
+@pytest.fixture(scope="session")
+def params():
+    return make_params(0)

@@ -1,0 +1,122 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps batch shapes, seeds and hyper-parameters; every case
+asserts allclose against :mod:`compile.kernels.ref`.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp, ref, update
+from .conftest import make_batch, make_params
+
+SETTINGS = dict(deadline=None, max_examples=12)
+
+
+# ---------------------------------------------------------------- MLP ----
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 4),
+    scale=st.sampled_from([0.01, 0.05, 0.2]),
+)
+def test_mlp_forward_matches_ref(seed, tiles, scale):
+    batch = tiles * mlp.TILE_B
+    params = make_params(seed, scale)
+    x, _, _ = make_batch(seed + 1, batch)
+    got = np.asarray(mlp.mlp_forward(params, x))
+    want = np.asarray(ref.mlp_forward(params, x))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_mlp_forward_small_batch_64():
+    """The predict_small AOT entry point uses a 64-row batch (single
+    sub-TILE_B tile); must match the oracle exactly like the big one."""
+    params = make_params(21)
+    x, _, _ = make_batch(22, 64)
+    got = np.asarray(mlp.mlp_forward(params, x))
+    want = np.asarray(ref.mlp_forward(params, x))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_mlp_forward_zero_params_zero_scores():
+    params = jnp.zeros(ref.N_PARAMS, jnp.float32)
+    x, _, _ = make_batch(7, mlp.TILE_B)
+    assert np.all(np.asarray(mlp.mlp_forward(params, x)) == 0.0)
+
+
+def test_mlp_forward_row_independence():
+    """Scores must not leak across batch rows (tiling correctness)."""
+    params = make_params(3)
+    x, _, _ = make_batch(4, 2 * mlp.TILE_B)
+    full = np.asarray(mlp.mlp_forward(params, x))
+    # Perturb the second tile; first tile scores must be unchanged.
+    x2 = x.at[mlp.TILE_B :].set(x[mlp.TILE_B :] * 2.0 + 1.0)
+    half = np.asarray(mlp.mlp_forward(params, x2))
+    np.testing.assert_array_equal(full[: mlp.TILE_B], half[: mlp.TILE_B])
+
+
+def test_mlp_forward_relu_saturation():
+    """Strongly negative biases must zero the network output head-bias."""
+    rng = np.random.default_rng(11)
+    w1 = rng.normal(0, 0.05, (ref.N_FEATURES, ref.HIDDEN)).astype(np.float32)
+    b1 = np.full(ref.HIDDEN, -1e6, np.float32)  # kills layer 1
+    w2 = rng.normal(0, 0.05, (ref.HIDDEN, ref.HIDDEN)).astype(np.float32)
+    b2 = np.full(ref.HIDDEN, -1e6, np.float32)
+    w3 = rng.normal(0, 0.05, (ref.HIDDEN, 1)).astype(np.float32)
+    b3 = np.array([1.5], np.float32)
+    params = ref.flatten(*(jnp.asarray(a) for a in (w1, b1, w2, b2, w3, b3)))
+    x, _, _ = make_batch(12, mlp.TILE_B)
+    got = np.asarray(mlp.mlp_forward(params, x))
+    np.testing.assert_allclose(got, np.full(mlp.TILE_B, 1.5), rtol=1e-6)
+
+
+# ------------------------------------------------------------- update ----
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    lr=st.sampled_from([1e-4, 1e-3, 1e-2]),
+    wd=st.sampled_from([0.0, 1e-3, 0.1]),
+    step=st.integers(1, 50),
+    ratio=st.floats(0.0, 1.0),
+)
+def test_masked_adam_matches_ref(seed, lr, wd, step, ratio):
+    rng = np.random.default_rng(seed)
+    p = make_params(seed)
+    m = jnp.asarray(rng.normal(0, 0.01, ref.N_PARAMS).astype(np.float32))
+    v = jnp.asarray(np.abs(rng.normal(0, 1e-4, ref.N_PARAMS)).astype(np.float32))
+    g = jnp.asarray(rng.normal(0, 0.1, ref.N_PARAMS).astype(np.float32))
+    mask = jnp.asarray((rng.random(ref.N_PARAMS) < ratio).astype(np.float32))
+    hp = jnp.array([lr, wd, float(step), 0.0], jnp.float32)
+    got = update.masked_adam_update(p, m, v, g, mask, hp)
+    # step as f32 so the bias-correction pow matches the kernel's f32 math.
+    want = ref.masked_adam_update(p, m, v, g, mask, lr, wd, jnp.float32(step))
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=1e-7)
+
+
+def test_masked_adam_variant_params_decay_only():
+    """mask==0 parameters must follow pure weight decay (paper Eq. 7)."""
+    p = make_params(5)
+    zeros = jnp.zeros(ref.N_PARAMS, jnp.float32)
+    g = jnp.asarray(np.random.default_rng(6).normal(0, 1, ref.N_PARAMS).astype(np.float32))
+    lr, wd = 0.01, 0.1
+    hp = jnp.array([lr, wd, 1.0, 0.0], jnp.float32)
+    p_new, m_new, v_new = update.masked_adam_update(p, zeros, zeros, g, zeros, hp)
+    np.testing.assert_allclose(
+        np.asarray(p_new), np.asarray(p) * (1.0 - lr * wd), rtol=1e-6
+    )
+    # Moments never see the masked-out gradient.
+    assert np.all(np.asarray(m_new) == 0.0) and np.all(np.asarray(v_new) == 0.0)
+
+
+def test_masked_adam_full_mask_moves_every_param():
+    p = make_params(8)
+    zeros = jnp.zeros(ref.N_PARAMS, jnp.float32)
+    ones = jnp.ones(ref.N_PARAMS, jnp.float32)
+    g = jnp.asarray(np.random.default_rng(9).normal(0.5, 1, ref.N_PARAMS).astype(np.float32))
+    hp = jnp.array([1e-3, 0.0, 1.0, 0.0], jnp.float32)
+    p_new, _, _ = update.masked_adam_update(p, zeros, zeros, g, ones, hp)
+    moved = np.mean(np.asarray(p_new) != np.asarray(p))
+    assert moved > 0.999

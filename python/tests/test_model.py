@@ -1,0 +1,138 @@
+"""L2 graph semantics: ranking loss, train_step, xi saliency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import make_batch, make_params
+
+SETTINGS = dict(deadline=None, max_examples=10)
+
+
+# ---------------------------------------------------------- rank loss ----
+def test_rank_loss_perfect_ranking_is_small():
+    y = jnp.linspace(0.0, 10.0, 32)
+    scores = y * 100.0  # same order, huge margins
+    w = jnp.ones(32)
+    loss = float(ref.pairwise_rank_loss(scores, y, w))
+    assert loss < 1e-3
+
+
+def test_rank_loss_inverted_ranking_is_large():
+    y = jnp.linspace(0.0, 10.0, 32)
+    w = jnp.ones(32)
+    good = float(ref.pairwise_rank_loss(y, y, w))
+    bad = float(ref.pairwise_rank_loss(-y, y, w))
+    assert bad > good
+
+
+def test_rank_loss_ignores_zero_weight_rows():
+    """Padding rows (w=0) must not influence the loss."""
+    x, y, _ = make_batch(1, 64)
+    scores = ref.mlp_forward(make_params(1), x)
+    w_full = jnp.ones(64)
+    loss_32 = float(ref.pairwise_rank_loss(scores[:32], y[:32], w_full[:32]))
+    # Same 32 rows + 32 garbage rows with zero weight.
+    y_pad = y.at[32:].set(-999.0)
+    w_pad = w_full.at[32:].set(0.0)
+    loss_pad = float(ref.pairwise_rank_loss(scores, y_pad, w_pad))
+    np.testing.assert_allclose(loss_pad, loss_32, rtol=1e-6)
+
+
+def test_rank_loss_constant_labels_is_zero():
+    scores = jnp.linspace(-1, 1, 16)
+    y = jnp.full(16, 3.0)
+    assert float(ref.pairwise_rank_loss(scores, y, jnp.ones(16))) == 0.0
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rank_loss_scale_invariant_labels(seed):
+    """Only label *order* matters, not magnitude."""
+    x, y, w = make_batch(seed, 32)
+    scores = ref.mlp_forward(make_params(seed), x)
+    a = float(ref.pairwise_rank_loss(scores, y, w))
+    b = float(ref.pairwise_rank_loss(scores, y * 1000.0 + 5.0, w))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+# ---------------------------------------------------------- train step ----
+def _step(params, m, v, x, y, w, mask, lr=1e-3, wd=1e-2, step=1.0):
+    hp = jnp.array([lr, wd, step, 0.0], jnp.float32)
+    return model.train_step(params, m, v, x, y, w, mask, hp)
+
+
+def test_train_step_reduces_loss():
+    params = make_params(2)
+    x, y, w = make_batch(3, model.TRAIN_BATCH)
+    m = jnp.zeros(ref.N_PARAMS)
+    v = jnp.zeros(ref.N_PARAMS)
+    mask = jnp.ones(ref.N_PARAMS)
+    losses = []
+    for i in range(8):
+        params, m, v, loss = _step(params, m, v, x, y, w, mask, lr=1e-2, wd=0.0,
+                                   step=float(i + 1))
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_respects_mask():
+    """Untouched (variant) params must follow exactly the decay path."""
+    params = make_params(4)
+    x, y, w = make_batch(5, model.TRAIN_BATCH)
+    zeros = jnp.zeros(ref.N_PARAMS)
+    rng = np.random.default_rng(6)
+    mask = jnp.asarray((rng.random(ref.N_PARAMS) < 0.5).astype(np.float32))
+    lr, wd = 1e-3, 0.1
+    p_new, _, _, _ = _step(params, zeros, zeros, x, y, w, mask, lr=lr, wd=wd)
+    variant = np.asarray(mask) == 0.0
+    np.testing.assert_allclose(
+        np.asarray(p_new)[variant],
+        np.asarray(params)[variant] * (1.0 - lr * wd),
+        rtol=1e-6,
+    )
+
+
+def test_train_step_loss_matches_loss_eval():
+    params = make_params(7)
+    x, y, w = make_batch(8, model.TRAIN_BATCH)
+    zeros = jnp.zeros(ref.N_PARAMS)
+    _, _, _, loss = _step(params, zeros, zeros, x, y, w, jnp.ones(ref.N_PARAMS))
+    loss2 = model.loss_eval(params, x, y, w)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(loss2), rtol=1e-6)
+
+
+# ------------------------------------------------------------------ xi ----
+def test_xi_matches_finite_difference_sign():
+    """xi = |w * grad|; check grad direction against finite differences on
+    a handful of coordinates."""
+    params = make_params(9)
+    x, y, w = make_batch(10, model.TRAIN_BATCH)
+    xi = np.asarray(model.xi_scores(params, x, y, w))
+    grads = np.asarray(jax.grad(lambda p: ref.pairwise_rank_loss(
+        ref.mlp_forward(p, x), y, w))(params))
+    np.testing.assert_allclose(xi, np.abs(np.asarray(params) * grads),
+                               rtol=1e-5, atol=1e-9)
+
+
+def test_xi_zero_params_zero_xi():
+    x, y, w = make_batch(11, model.TRAIN_BATCH)
+    xi = np.asarray(model.xi_scores(jnp.zeros(ref.N_PARAMS), x, y, w))
+    assert np.all(xi == 0.0)
+
+
+def test_xi_nonnegative_and_finite(params):
+    x, y, w = make_batch(12, model.TRAIN_BATCH)
+    xi = np.asarray(model.xi_scores(params, x, y, w))
+    assert np.all(xi >= 0.0) and np.all(np.isfinite(xi))
+    assert xi.shape == (ref.N_PARAMS,)
+
+
+def test_predict_pallas_matches_jnp(params):
+    x, _, _ = make_batch(13, model.PRED_BATCH)
+    got = np.asarray(model.predict(params, x))
+    want = np.asarray(ref.mlp_forward(params, x))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,31 @@
+//! Component ablation bench (design-choice study, DESIGN.md §4): the
+//! contribution of each Moses component (lottery mask, variant weight
+//! decay, AC early termination) vs Tenset-Finetune on MobileNet,
+//! K80→TX2.
+//!
+//! Run: `make artifacts && cargo bench --bench ablation`
+
+use moses::coordinator::BackendKind;
+use moses::metrics::experiments::{self, ExpConfig};
+use moses::runtime::Engine;
+use moses::util::bench::Bencher;
+
+fn main() {
+    if !Engine::default_dir().join("meta.json").exists() {
+        println!("ablation: SKIPPED (no artifacts — run `make artifacts`)");
+        return;
+    }
+    let cfg = ExpConfig {
+        backend: BackendKind::Xla,
+        trials_small: std::env::var("MOSES_BENCH_TRIALS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(24),
+        ..ExpConfig::default()
+    };
+    let b = Bencher::default();
+    let (_, table) = b.run_once("ablation_components", || {
+        experiments::ablation_table(&cfg, "mobilenet").expect("ablation")
+    });
+    table.print();
+}

@@ -1,0 +1,35 @@
+//! Regenerates **paper Fig. 4** — end-to-end DNN inference-latency gains
+//! of Moses over the domain-adaptation baselines, on K80→2060 and
+//! K80→TX2 for MobileNet / ResNet-18 / BERT-base / SqueezeNet.
+//!
+//! Scale note: bench-tier trials (default 32/task vs the paper's 200+)
+//! keep `cargo bench` minutes-scale; `moses tables --exp fig4` runs the
+//! full tier.  Override with MOSES_BENCH_TRIALS.
+//!
+//! Run: `make artifacts && cargo bench --bench fig4_inference`
+
+use moses::coordinator::BackendKind;
+use moses::device::presets;
+use moses::metrics::experiments::{self, ExpConfig};
+use moses::runtime::Engine;
+use moses::util::bench::Bencher;
+
+fn main() {
+    if !Engine::default_dir().join("meta.json").exists() {
+        println!("fig4: SKIPPED (no artifacts — run `make artifacts`)");
+        return;
+    }
+    let trials: usize = std::env::var("MOSES_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let cfg = ExpConfig { backend: BackendKind::Xla, ..ExpConfig::default() };
+    let b = Bencher::default();
+    let targets = [presets::rtx_2060(), presets::jetson_tx2()];
+
+    let (_, outs) = b.run_once("fig4_grid_end_to_end", || {
+        experiments::run_grid(&cfg, trials, &targets).expect("grid")
+    });
+    let names: Vec<&str> = targets.iter().map(|t| t.name.as_str()).collect();
+    experiments::fig4_table(&outs, &names).print();
+}

@@ -1,0 +1,32 @@
+//! Regenerates **paper Fig. 5** — auto-tuning search-efficiency gains of
+//! Moses over the baselines (virtual search seconds, dominated by
+//! simulated on-device measurement cost, paper §2.3).
+//!
+//! Run: `make artifacts && cargo bench --bench fig5_search`
+//! (bench-tier trials; `moses tables --exp fig5` for the full tier).
+
+use moses::coordinator::BackendKind;
+use moses::device::presets;
+use moses::metrics::experiments::{self, ExpConfig};
+use moses::runtime::Engine;
+use moses::util::bench::Bencher;
+
+fn main() {
+    if !Engine::default_dir().join("meta.json").exists() {
+        println!("fig5: SKIPPED (no artifacts — run `make artifacts`)");
+        return;
+    }
+    let trials: usize = std::env::var("MOSES_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let cfg = ExpConfig { backend: BackendKind::Xla, ..ExpConfig::default() };
+    let b = Bencher::default();
+    let targets = [presets::rtx_2060(), presets::jetson_tx2()];
+
+    let (_, outs) = b.run_once("fig5_grid_end_to_end", || {
+        experiments::run_grid(&cfg, trials, &targets).expect("grid")
+    });
+    let names: Vec<&str> = targets.iter().map(|t| t.name.as_str()).collect();
+    experiments::fig5_table(&outs, &names).print();
+}

@@ -1,0 +1,31 @@
+//! Regenerates **paper Fig. 6** — the transferable-parameter-ratio
+//! ablation {0.01, 0.3, 0.5, 0.7} (mean ± std across seeds), showing
+//! the optimum around 0.5 and low sensitivity in 0.3–0.7.
+//!
+//! Run: `make artifacts && cargo bench --bench fig6_ratio`
+//! (bench tier: 2 seeds; `moses tables --exp fig6` for 3+).
+
+use moses::coordinator::BackendKind;
+use moses::metrics::experiments::{self, ExpConfig};
+use moses::runtime::Engine;
+use moses::util::bench::Bencher;
+
+fn main() {
+    if !Engine::default_dir().join("meta.json").exists() {
+        println!("fig6: SKIPPED (no artifacts — run `make artifacts`)");
+        return;
+    }
+    let cfg = ExpConfig {
+        backend: BackendKind::Xla,
+        trials_small: std::env::var("MOSES_BENCH_TRIALS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(24),
+        ..ExpConfig::default()
+    };
+    let b = Bencher::default();
+    let (_, table) = b.run_once("fig6_ratio_ablation", || {
+        experiments::fig6_table(&cfg, "mobilenet", &[0, 1]).expect("fig6")
+    });
+    table.print();
+}

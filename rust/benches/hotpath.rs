@@ -1,0 +1,102 @@
+//! Hot-path microbenchmarks (perf-pass instrumentation, EXPERIMENTS.md
+//! §Perf): feature extraction, simulator, search, mask derivation, and
+//! the XLA cost-model predict/train calls.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+
+use moses::costmodel::{layout, CostModel, Mask, RustBackend, XlaBackend};
+use moses::device::{presets, DeviceSim};
+use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
+use moses::runtime::Engine;
+use moses::search::{EvolutionarySearch, SearchPolicy};
+use moses::util::bench::Bencher;
+use moses::util::rng::Rng;
+
+fn task() -> Subgraph {
+    Subgraph::new(
+        "bench.conv",
+        SubgraphKind::Conv2d {
+            n: 1, h: 56, w: 56, cin: 64, cout: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+        },
+    )
+}
+
+fn main() {
+    let b = Bencher::default();
+    let sub = task();
+    let gen = SpaceGenerator::new(sub.geometry());
+    let mut rng = Rng::new(1);
+    let sched = gen.sample(&mut rng);
+    let prog = TensorProgram::new(sub.clone(), sched);
+    let sim = DeviceSim::new(presets::rtx_2060());
+
+    // --- L3 scalar hot paths -------------------------------------------
+    b.run("featurize_164d", || featurize(&sub, &sched));
+    b.run("sim_true_latency", || sim.true_latency(&prog));
+    b.run("sim_measure", || sim.measure(&prog, &mut rng));
+    b.run("schedule_sample", || gen.sample(&mut rng));
+    b.run("schedule_mutate", || gen.mutate(&sched, &mut rng));
+
+    let xi: Vec<f32> = (0..layout::N_PARAMS).map(|_| rng.uniform() as f32).collect();
+    b.run("mask_from_xi_ratio", || Mask::from_xi_ratio(&xi, 0.5));
+
+    // --- batched scoring (the inner search loop) ------------------------
+    let pop: Vec<_> = gen.sample_distinct(&mut rng, 64);
+    b.run("featurize_batch64", || {
+        let mut buf = Vec::with_capacity(64 * 164);
+        for s in &pop {
+            buf.extend_from_slice(&featurize(&sub, s));
+        }
+        buf
+    });
+
+    // --- Rust backend ----------------------------------------------------
+    let rust_model =
+        CostModel::new(Arc::new(RustBackend { pred_batch: 64, train_batch: 64 }), &mut rng);
+    let mut feats = Vec::with_capacity(64 * 164);
+    for s in &pop {
+        feats.extend_from_slice(&featurize(&sub, s));
+    }
+    b.run("rust_predict_64", || rust_model.predict(&feats, 64).unwrap());
+
+    // --- evolutionary round (rust backend) -------------------------------
+    let mut evo = EvolutionarySearch::new(sub.clone());
+    evo.population = 64;
+    evo.generations = 3;
+    b.run("evolutionary_propose_8of64x3", || {
+        evo.propose(8, &rust_model, &|_| false, &mut rng, &mut || {})
+    });
+
+    // --- XLA backend (skipped without artifacts) --------------------------
+    let dir = Engine::default_dir();
+    if dir.join("meta.json").exists() {
+        let engine = Arc::new(Engine::load(&dir).expect("engine"));
+        let xla_model = CostModel::new(Arc::new(XlaBackend { engine }), &mut rng);
+        let mut feats512 = Vec::with_capacity(512 * 164);
+        let pop512 = gen.sample_distinct(&mut rng, 512);
+        for s in &pop512 {
+            feats512.extend_from_slice(&featurize(&sub, s));
+        }
+        b.run("xla_predict_512", || xla_model.predict(&feats512, 512).unwrap());
+        // Population-sized scoring through the small-batch artifact
+        // (the evolutionary hot path; compare against xla_predict_512
+        // to see the padding win — EXPERIMENTS.md §Perf).
+        b.run("xla_predict_64_small", || xla_model.predict(&feats, 64).unwrap());
+
+        let mut xla_train = CostModel::new(
+            Arc::new(XlaBackend { engine: Arc::new(Engine::load(&dir).unwrap()) }),
+            &mut rng,
+        );
+        let x: Vec<f32> = (0..256 * 164).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..256).map(|_| rng.uniform() as f32).collect();
+        let mask = Mask::all_ones(layout::N_PARAMS);
+        b.run("xla_train_step_256", || {
+            xla_train.train_step(&x, &y, &mask, 1e-3, 0.0).unwrap()
+        });
+        b.run("xla_xi_256", || xla_train.xi(&x, &y).unwrap());
+    } else {
+        println!("bench xla_*: SKIPPED (no artifacts — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,35 @@
+//! Regenerates **paper Table 1** — CMAT (%) of Moses vs Tenset-Finetune
+//! under small and large trial budgets across the 2060-S/R/M/B and
+//! TX2-S/R/M settings.
+//!
+//! Run: `make artifacts && cargo bench --bench table1_cmat`
+//! (bench tier 16/64 trials; `moses tables --exp table1` for full tier).
+
+use moses::coordinator::BackendKind;
+use moses::metrics::experiments::{self, ExpConfig};
+use moses::runtime::Engine;
+use moses::util::bench::Bencher;
+
+fn main() {
+    if !Engine::default_dir().join("meta.json").exists() {
+        println!("table1: SKIPPED (no artifacts — run `make artifacts`)");
+        return;
+    }
+    let cfg = ExpConfig {
+        backend: BackendKind::Xla,
+        trials_small: std::env::var("MOSES_BENCH_TRIALS_SMALL")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(12),
+        trials_large: std::env::var("MOSES_BENCH_TRIALS_LARGE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(32),
+        ..ExpConfig::default()
+    };
+    let b = Bencher::default();
+    let (_, table) = b.run_once("table1_end_to_end", || {
+        experiments::table1(&cfg).expect("table1")
+    });
+    table.print();
+}

@@ -1,0 +1,21 @@
+//! The auto-tuning coordinator: drives search ↔ measurement ↔ online
+//! cost-model adaptation per task, with virtual-time accounting — the
+//! Ansor tuning loop of paper §2.2 with Moses' §3.6 working flow:
+//!
+//! 1. initialize the model per the [`Strategy`] (random / pre-trained);
+//! 2. per task and round, the evolutionary engine proposes predicted
+//!    top-k candidates;
+//! 3. measured rounds: run them on the (simulated) device, add records
+//!    to the replay buffer, update the model (masked updates + variant
+//!    weight decay for Moses, full updates for vanilla fine-tuning);
+//! 4. the AC module (Moses only) watches prediction stability and cuts
+//!    the measurement phase early, after which rounds are
+//!    prediction-only;
+//! 5. the best configuration is returned with its TRUE latency and the
+//!    total virtual search time.
+
+mod session;
+mod tuner;
+
+pub use session::{Session, TaskResult};
+pub use tuner::{AutoTuner, BackendKind, TuneConfig};

@@ -1,0 +1,114 @@
+//! Tuning session results: per-task outcomes + aggregate metrics.
+
+use crate::device::VirtualClock;
+use crate::program::{Schedule, Subgraph};
+
+/// Outcome of tuning one task.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: Subgraph,
+    /// True (noise-free) latency of the chosen schedule, seconds.
+    pub best_latency_s: f64,
+    pub best_schedule: Schedule,
+    /// True latency of the heuristic default schedule ("Raw").
+    pub default_latency_s: f64,
+    /// On-device measurements consumed.
+    pub measured: usize,
+    /// Trials served by cost-model prediction alone.
+    pub predicted_only: usize,
+    /// Best-so-far true latency after each round (convergence curve).
+    pub history: Vec<f64>,
+}
+
+impl TaskResult {
+    /// Speedup of the tuned schedule over the default.
+    pub fn speedup(&self) -> f64 {
+        self.default_latency_s / self.best_latency_s
+    }
+}
+
+/// Outcome of tuning a whole model on one device.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub device: String,
+    pub strategy: String,
+    pub tasks: Vec<TaskResult>,
+    /// Total virtual search time (measurements + model queries/updates).
+    pub clock: VirtualClock,
+}
+
+impl Session {
+    /// End-to-end tuned latency (weighted by task repeats), ms.
+    pub fn total_best_latency_ms(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| t.best_latency_s * t.task.repeats as f64)
+            .sum::<f64>()
+            * 1e3
+    }
+
+    /// End-to-end default-schedule latency, ms ("Raw" baseline).
+    pub fn total_default_latency_ms(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| t.default_latency_s * t.task.repeats as f64)
+            .sum::<f64>()
+            * 1e3
+    }
+
+    /// End-to-end speedup over the default schedules.
+    pub fn speedup(&self) -> f64 {
+        self.total_default_latency_ms() / self.total_best_latency_ms()
+    }
+
+    /// Total virtual search time in seconds.
+    pub fn search_time_s(&self) -> f64 {
+        self.clock.seconds()
+    }
+
+    /// Total on-device measurements.
+    pub fn total_measurements(&self) -> usize {
+        self.tasks.iter().map(|t| t.measured).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::program::{Schedule, SubgraphKind};
+
+    fn mk_task(lat: f64, default: f64, repeats: usize) -> TaskResult {
+        let sub = Subgraph::new("t", SubgraphKind::Dense { m: 8, n: 8, k: 8 })
+            .with_repeats(repeats);
+        let sched = Schedule::default_for(&sub.geometry());
+        TaskResult {
+            task: sub,
+            best_latency_s: lat,
+            best_schedule: sched,
+            default_latency_s: default,
+            measured: 10,
+            predicted_only: 5,
+            history: vec![default, lat],
+        }
+    }
+
+    #[test]
+    fn aggregates_weighted_by_repeats() {
+        let s = Session {
+            device: "d".into(),
+            strategy: "moses".into(),
+            tasks: vec![mk_task(1e-3, 2e-3, 1), mk_task(2e-3, 6e-3, 2)],
+            clock: VirtualClock::new(),
+        };
+        assert!((s.total_best_latency_ms() - (1.0 + 4.0)).abs() < 1e-9);
+        assert!((s.total_default_latency_ms() - (2.0 + 12.0)).abs() < 1e-9);
+        assert!((s.speedup() - 14.0 / 5.0).abs() < 1e-12);
+        assert_eq!(s.total_measurements(), 20);
+    }
+
+    #[test]
+    fn task_speedup() {
+        let t = mk_task(1e-3, 3e-3, 1);
+        assert!((t.speedup() - 3.0).abs() < 1e-12);
+    }
+}

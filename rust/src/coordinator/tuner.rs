@@ -1,0 +1,516 @@
+//! The AutoTuner: per-task tuning loop + session orchestration.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::session::{Session, TaskResult};
+use crate::costmodel::{layout, CostModel, Mask, RustBackend, XlaBackend};
+use crate::device::{DeviceArch, DeviceSim, VirtualClock};
+use crate::program::{featurize, Schedule, Subgraph, TensorProgram, N_FEATURES};
+use crate::runtime::Engine;
+use crate::search::{EvolutionarySearch, RandomSearch, SearchPolicy};
+use crate::transfer::{self, AdaptiveController, MosesAdapter, Strategy};
+use crate::util::rng::Rng;
+
+/// Which compute backend executes the cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT Pallas/JAX artifacts via PJRT (production path).
+    Xla,
+    /// Pure-Rust mirror (artifact-less fallback, tests).
+    Rust,
+}
+
+/// Tuning configuration (one model × one device × one strategy).
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// Candidate budget per task (TVM's "trials").
+    pub trials_per_task: usize,
+    /// Candidates measured per round (TVM measure batch).
+    pub measure_batch: usize,
+    pub strategy: Strategy,
+    /// Online learning rate (paper §4: α = 0.001).
+    pub lr: f32,
+    /// Training epochs over the replay buffer per measured round.
+    pub epochs_per_round: usize,
+    /// Replay-buffer row cap (most recent kept).
+    pub replay_cap: usize,
+    pub seed: u64,
+    pub backend: BackendKind,
+    /// Pre-trained source checkpoint (required by pretrain strategies).
+    pub pretrained_path: Option<PathBuf>,
+    /// Evolutionary engine parameters.
+    pub population: usize,
+    pub generations: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            trials_per_task: 64,
+            measure_batch: 8,
+            strategy: Strategy::Moses(transfer::MosesConfig::default()),
+            lr: 1e-3,
+            // One epoch over a 1k replay per round: measured as the best
+            // wall-time/quality tradeoff on this CPU testbed
+            // (EXPERIMENTS.md §Perf) — the train step is the hot call.
+            epochs_per_round: 1,
+            replay_cap: 1024,
+            seed: 0,
+            backend: BackendKind::Rust,
+            pretrained_path: None,
+            population: 64,
+            generations: 3,
+        }
+    }
+}
+
+/// Replay buffer entry: raw measurement for one schedule of one task.
+struct Sample {
+    task_ord: usize,
+    feats: [f32; N_FEATURES],
+    gflops: f64,
+}
+
+/// The tuner for one (device, strategy) pair.  Reusable across models;
+/// the cost model persists across `tune` calls (continual learning).
+pub struct AutoTuner {
+    pub config: TuneConfig,
+    sim: DeviceSim,
+    model: CostModel,
+    adapter: Option<MosesAdapter>,
+    replay: Vec<Sample>,
+    best_gflops_per_task: Vec<f64>,
+    rng: Rng,
+}
+
+impl AutoTuner {
+    /// Build a tuner; loads the backend and (if required) the
+    /// pre-trained checkpoint.
+    pub fn from_config(config: &TuneConfig, target: DeviceArch) -> Result<AutoTuner> {
+        let backend: Arc<dyn crate::costmodel::Backend> = match config.backend {
+            BackendKind::Rust => Arc::new(RustBackend::default()),
+            BackendKind::Xla => {
+                let dir = Engine::default_dir();
+                Arc::new(XlaBackend { engine: Arc::new(Engine::load(&dir)?) })
+            }
+        };
+        let mut rng = Rng::new(config.seed);
+        let pretrained: Option<Vec<f32>> = if config.strategy.uses_pretrained() {
+            let path = config
+                .pretrained_path
+                .as_ref()
+                .context("strategy requires --pretrained checkpoint")?;
+            Some(layout::load_checkpoint(path)?)
+        } else {
+            None
+        };
+        let model =
+            transfer::init_model(&config.strategy, backend, pretrained.as_deref(), &mut rng);
+        let adapter = match &config.strategy {
+            Strategy::Moses(cfg) => Some(MosesAdapter::new(*cfg)),
+            _ => None,
+        };
+        Ok(AutoTuner {
+            config: config.clone(),
+            sim: DeviceSim::new(target),
+            model,
+            adapter,
+            replay: Vec::new(),
+            best_gflops_per_task: Vec::new(),
+            rng,
+        })
+    }
+
+    /// Build with an externally-constructed model (tests, custom
+    /// checkpoints already in memory).
+    pub fn with_model(config: &TuneConfig, target: DeviceArch, model: CostModel) -> AutoTuner {
+        let adapter = match &config.strategy {
+            Strategy::Moses(cfg) => Some(MosesAdapter::new(*cfg)),
+            _ => None,
+        };
+        AutoTuner {
+            config: config.clone(),
+            sim: DeviceSim::new(target),
+            model,
+            adapter,
+            replay: Vec::new(),
+            best_gflops_per_task: Vec::new(),
+            rng: Rng::new(config.seed),
+        }
+    }
+
+    /// Access the underlying cost model (diagnostics).
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    /// The device being tuned for.
+    pub fn device_name(&self) -> &str {
+        &self.sim.arch.name
+    }
+
+    /// Tune a list of tasks; returns the session with aggregate metrics.
+    pub fn tune(&mut self, tasks: &[Subgraph]) -> Result<Session> {
+        let mut results = Vec::with_capacity(tasks.len());
+        let mut clock = VirtualClock::new();
+        for (i, task) in tasks.iter().enumerate() {
+            let mut task_rng = self.rng.fork(i as u64);
+            let res = self.tune_task(task, &mut task_rng, &mut clock)?;
+            results.push(res);
+        }
+        Ok(Session {
+            device: self.sim.arch.name.clone(),
+            strategy: self.config.strategy.name().to_string(),
+            tasks: results,
+            clock,
+        })
+    }
+
+    /// Rebuild training arrays from the replay buffer with labels
+    /// normalized per task by its best-so-far throughput.
+    fn training_arrays(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(self.replay.len() * N_FEATURES);
+        let mut y = Vec::with_capacity(self.replay.len());
+        for s in &self.replay {
+            x.extend_from_slice(&s.feats);
+            let denom = self.best_gflops_per_task[s.task_ord];
+            y.push(if denom > 0.0 { (s.gflops / denom) as f32 } else { 0.0 });
+        }
+        (x, y)
+    }
+
+    fn push_replay(&mut self, sample: Sample) {
+        self.replay.push(sample);
+        if self.replay.len() > self.config.replay_cap {
+            let drop = self.replay.len() - self.config.replay_cap;
+            self.replay.drain(..drop);
+        }
+    }
+
+    /// One task's tuning loop.
+    fn tune_task(
+        &mut self,
+        task: &Subgraph,
+        rng: &mut Rng,
+        clock: &mut VirtualClock,
+    ) -> Result<TaskResult> {
+        let geometry = task.geometry();
+        let default_sched = Schedule::default_for(&geometry);
+        let default_latency =
+            self.sim.true_latency(&TensorProgram::new(task.clone(), default_sched));
+
+        // Non-compute tasks (tiny elementwise/pool) are barely tunable;
+        // the loop below handles them fine, they just converge instantly.
+        let rounds = (self.config.trials_per_task / self.config.measure_batch).max(1);
+        let task_ord = self.best_gflops_per_task.len();
+        self.best_gflops_per_task.push(0.0);
+
+        let mut evo = EvolutionarySearch::new(task.clone());
+        evo.population = self.config.population;
+        evo.generations = self.config.generations;
+        let mut random = RandomSearch::new(evo.generator.clone());
+
+        let mut ac = match &self.config.strategy {
+            Strategy::Moses(cfg) => {
+                Some(AdaptiveController::new(cfg.ac_cv_threshold, cfg.ac_min_batches))
+            }
+            _ => None,
+        };
+        let measured_round_budget = match &self.config.strategy {
+            Strategy::Moses(cfg) => {
+                ((rounds as f64) * cfg.train_fraction).ceil() as usize
+            }
+            _ => rounds,
+        };
+
+        let mut seen_fps: Vec<u64> = Vec::new();
+        let fp = |task: &Subgraph, s: &Schedule| {
+            TensorProgram::new(task.clone(), *s).fingerprint()
+        };
+
+        let mut best_latency = f64::INFINITY;
+        let mut best_sched = default_sched;
+        let mut measured = 0usize;
+        let mut predicted_only = 0usize;
+        let mut history = Vec::with_capacity(rounds);
+        // Best prediction-only candidate awaiting final verification.
+        let mut pending_predicted: Option<(Schedule, f32)> = None;
+
+        for round in 0..rounds {
+            let seen = |s: &Schedule| seen_fps.contains(&fp(task, s));
+            let mut charge = || clock.charge_query();
+            let candidates = match &self.config.strategy {
+                Strategy::RandomSearch => random.propose(
+                    self.config.measure_batch,
+                    &self.model,
+                    &seen,
+                    rng,
+                    &mut charge,
+                ),
+                _ => evo.propose(
+                    self.config.measure_batch,
+                    &self.model,
+                    &seen,
+                    rng,
+                    &mut charge,
+                ),
+            };
+            if candidates.is_empty() {
+                break;
+            }
+
+            let do_measure = match &self.config.strategy {
+                Strategy::TensetPretrain => round == 0 || round == rounds - 1,
+                Strategy::Moses(_) => {
+                    round < measured_round_budget
+                        && ac.as_ref().map(|a| a.keep_measuring()).unwrap_or(true)
+                }
+                _ => true,
+            };
+
+            if do_measure {
+                // For pretrain: only verify the single top prediction.
+                let to_measure: &[Schedule] = match &self.config.strategy {
+                    Strategy::TensetPretrain => &candidates[..1],
+                    _ => &candidates[..],
+                };
+                let mut batch_x = Vec::with_capacity(to_measure.len() * N_FEATURES);
+                let mut batch_y = Vec::with_capacity(to_measure.len());
+                for s in to_measure {
+                    let prog = TensorProgram::new(task.clone(), *s);
+                    let m = self.sim.measure(&prog, rng);
+                    clock.charge_measurement(m.cost_s);
+                    measured += 1;
+                    seen_fps.push(prog.fingerprint());
+                    let feats = featurize(task, s);
+                    let gflops = if m.ok { m.gflops } else { 0.0 };
+                    if m.ok {
+                        let true_lat = self.sim.true_latency(&prog);
+                        if true_lat < best_latency {
+                            best_latency = true_lat;
+                            best_sched = *s;
+                        }
+                        evo.add_seed(*s);
+                        if gflops > self.best_gflops_per_task[task_ord] {
+                            self.best_gflops_per_task[task_ord] = gflops;
+                        }
+                    }
+                    batch_x.extend_from_slice(&feats);
+                    batch_y.push(gflops as f32);
+                    self.push_replay(Sample { task_ord, feats, gflops });
+                }
+
+                if self.config.strategy.trains_online() {
+                    // Mask + variant decay per strategy.
+                    let denom = self.best_gflops_per_task[task_ord].max(1e-9) as f32;
+                    let y_norm: Vec<f32> = batch_y.iter().map(|g| g / denom).collect();
+                    let (mask, wd) = if let Some(ad) = self.adapter.as_mut() {
+                        if ad.maybe_refresh(&self.model, &batch_x, &y_norm)? {
+                            clock.charge_xi();
+                        }
+                        (ad.mask().clone(), ad.weight_decay())
+                    } else {
+                        (Mask::all_ones(layout::N_PARAMS), 0.0)
+                    };
+                    let (tx, ty) = self.training_arrays();
+                    let bt = 256; // backend train batch (both backends)
+                    let steps_per_epoch = ty.len().div_ceil(bt).max(1);
+                    for _ in 0..self.config.epochs_per_round {
+                        self.model.train_epoch(&tx, &ty, &mask, self.config.lr, wd, rng)?;
+                        for _ in 0..steps_per_epoch {
+                            clock.charge_update();
+                        }
+                    }
+                }
+
+                // AC watches post-update prediction stability on the
+                // just-measured batch.
+                if let Some(a) = ac.as_mut() {
+                    let preds = self.model.predict(&batch_x, batch_y.len())?;
+                    clock.charge_query();
+                    a.observe_batch(&preds);
+                }
+            } else {
+                // Prediction-only round: trust the model's ranking for
+                // the batch, but VERIFY the top prediction with one cheap
+                // measurement (1 vs measure_batch) so the final choice is
+                // grounded — the AC saves the other 7/8ths.
+                predicted_only += candidates.len().saturating_sub(1);
+                let mut cx = Vec::with_capacity(candidates.len() * N_FEATURES);
+                for s in &candidates {
+                    cx.extend_from_slice(&featurize(task, s));
+                    seen_fps.push(fp(task, s));
+                }
+                let preds = self.model.predict(&cx, candidates.len())?;
+                clock.charge_query();
+                let top = preds
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let prog = TensorProgram::new(task.clone(), candidates[top]);
+                let meas = self.sim.measure(&prog, rng);
+                clock.charge_measurement(meas.cost_s);
+                measured += 1;
+                if meas.ok {
+                    let true_lat = self.sim.true_latency(&prog);
+                    if true_lat < best_latency {
+                        best_latency = true_lat;
+                        best_sched = candidates[top];
+                    }
+                    evo.add_seed(candidates[top]);
+                }
+                for (i, (s, &p)) in candidates.iter().zip(&preds).enumerate() {
+                    if i == top {
+                        continue;
+                    }
+                    if pending_predicted.map(|(_, bp)| p > bp).unwrap_or(true) {
+                        pending_predicted = Some((*s, p));
+                    }
+                }
+            }
+            history.push(if best_latency.is_finite() { best_latency } else { default_latency });
+        }
+
+        // Verify the best prediction-only candidate with one final
+        // measurement (TVM always builds/measures the final choice).
+        if let Some((s, _)) = pending_predicted {
+            let prog = TensorProgram::new(task.clone(), s);
+            let m = self.sim.measure(&prog, rng);
+            clock.charge_measurement(m.cost_s);
+            measured += 1;
+            if m.ok {
+                let true_lat = self.sim.true_latency(&prog);
+                if true_lat < best_latency {
+                    best_latency = true_lat;
+                    best_sched = s;
+                }
+            }
+        }
+
+        // The default schedule is always available at deploy time: if the
+        // search never beat it (tiny budgets, unlucky measurements), ship
+        // the default — as TVM's fallback configuration does.
+        if !best_latency.is_finite() || best_latency > default_latency {
+            best_latency = default_latency;
+            best_sched = default_sched;
+        }
+
+        Ok(TaskResult {
+            task: task.clone(),
+            best_latency_s: best_latency,
+            best_schedule: best_sched,
+            default_latency_s: default_latency,
+            measured,
+            predicted_only,
+            history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::program::SubgraphKind;
+
+    fn small_cfg(strategy: Strategy) -> TuneConfig {
+        TuneConfig {
+            trials_per_task: 24,
+            measure_batch: 4,
+            strategy,
+            epochs_per_round: 1,
+            population: 24,
+            generations: 2,
+            backend: BackendKind::Rust,
+            seed: 42,
+            ..TuneConfig::default()
+        }
+    }
+
+    fn tiny_tasks() -> Vec<Subgraph> {
+        vec![
+            Subgraph::new(
+                "tt.conv",
+                SubgraphKind::Conv2d {
+                    n: 1, h: 28, w: 28, cin: 64, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+                },
+            ),
+            Subgraph::new("tt.dense", SubgraphKind::Dense { m: 64, n: 512, k: 512 }),
+        ]
+    }
+
+    #[test]
+    fn ansor_random_improves_over_default() {
+        let cfg = small_cfg(Strategy::AnsorRandom);
+        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+        let session = tuner.tune(&tiny_tasks()).unwrap();
+        assert_eq!(session.tasks.len(), 2);
+        assert!(
+            session.speedup() > 1.0,
+            "tuning should beat the default schedule: {}",
+            session.speedup()
+        );
+        assert!(session.search_time_s() > 0.0);
+        assert!(session.total_measurements() > 0);
+    }
+
+    #[test]
+    fn random_search_also_works() {
+        let cfg = small_cfg(Strategy::RandomSearch);
+        let mut tuner = AutoTuner::from_config(&cfg, presets::jetson_tx2()).unwrap();
+        let session = tuner.tune(&tiny_tasks()[..1]).unwrap();
+        assert!(session.tasks[0].best_latency_s.is_finite());
+        assert!(session.tasks[0].best_latency_s <= session.tasks[0].default_latency_s * 1.01);
+    }
+
+    #[test]
+    fn moses_uses_fewer_measurements_than_finetune() {
+        let mut rng = Rng::new(0);
+        let backend: Arc<dyn crate::costmodel::Backend> = Arc::new(RustBackend::default());
+        let pre = layout::init_params(&mut rng);
+
+        let cfg_ft = small_cfg(Strategy::TensetFinetune);
+        let model_ft = CostModel::with_params(backend.clone(), pre.clone());
+        let mut t_ft = AutoTuner::with_model(&cfg_ft, presets::jetson_tx2(), model_ft);
+        let s_ft = t_ft.tune(&tiny_tasks()).unwrap();
+
+        let cfg_mo = small_cfg(Strategy::Moses(transfer::MosesConfig::default()));
+        let model_mo = CostModel::with_params(backend, pre);
+        let mut t_mo = AutoTuner::with_model(&cfg_mo, presets::jetson_tx2(), model_mo);
+        let s_mo = t_mo.tune(&tiny_tasks()).unwrap();
+
+        assert!(
+            s_mo.total_measurements() < s_ft.total_measurements(),
+            "moses {} vs finetune {}",
+            s_mo.total_measurements(),
+            s_ft.total_measurements()
+        );
+        assert!(s_mo.search_time_s() < s_ft.search_time_s());
+    }
+
+    #[test]
+    fn history_is_monotone_nonincreasing() {
+        let cfg = small_cfg(Strategy::AnsorRandom);
+        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2080()).unwrap();
+        let session = tuner.tune(&tiny_tasks()[..1]).unwrap();
+        let h = &session.tasks[0].history;
+        for w in h.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "history not monotone: {h:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg(Strategy::AnsorRandom);
+        let run = || {
+            let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+            tuner.tune(&tiny_tasks()).unwrap().total_best_latency_ms()
+        };
+        assert_eq!(run(), run());
+    }
+}

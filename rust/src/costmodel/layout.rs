@@ -1,0 +1,210 @@
+//! Flat-parameter layout of the cost-model MLP.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly: one f32 vector holds
+//! (w1[164×512], b1[512], w2[512×512], b2[512], w3[512×1], b3[1]) in that
+//! order.  `runtime::ArtifactMeta::load` cross-checks these constants
+//! against the artifacts at startup.
+
+use crate::util::rng::Rng;
+
+/// Ansor's 164-dimensional program feature vector (paper §2.2).
+pub const N_FEATURES: usize = 164;
+/// Hidden width of the representative Ansor MLP backbone (paper §4.2).
+pub const HIDDEN: usize = 512;
+
+/// Segment sizes in flat order.
+pub const SIZES: [usize; 6] = [
+    N_FEATURES * HIDDEN, // w1
+    HIDDEN,              // b1
+    HIDDEN * HIDDEN,     // w2
+    HIDDEN,              // b2
+    HIDDEN,              // w3 (HIDDEN x 1)
+    1,                   // b3
+];
+
+/// Total flat parameter count (347,649).
+pub const N_PARAMS: usize =
+    N_FEATURES * HIDDEN + HIDDEN + HIDDEN * HIDDEN + HIDDEN + HIDDEN + 1;
+
+/// Byte offsets of each segment in the flat vector.
+pub const fn offsets() -> [usize; 6] {
+    let mut off = [0usize; 6];
+    let mut acc = 0;
+    let mut i = 0;
+    while i < 6 {
+        off[i] = acc;
+        acc += SIZES[i];
+        i += 1;
+    }
+    off
+}
+
+/// Named views into a flat parameter vector.
+#[derive(Debug)]
+pub struct ParamView<'a> {
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+    pub w3: &'a [f32],
+    pub b3: &'a [f32],
+}
+
+/// Split a flat parameter vector into named segments.
+pub fn view(params: &[f32]) -> ParamView<'_> {
+    assert_eq!(params.len(), N_PARAMS);
+    let off = offsets();
+    ParamView {
+        w1: &params[off[0]..off[0] + SIZES[0]],
+        b1: &params[off[1]..off[1] + SIZES[1]],
+        w2: &params[off[2]..off[2] + SIZES[2]],
+        b2: &params[off[3]..off[3] + SIZES[3]],
+        w3: &params[off[4]..off[4] + SIZES[4]],
+        b3: &params[off[5]..off[5] + SIZES[5]],
+    }
+}
+
+/// Which layer a flat index belongs to (0..6 in SIZES order) — used by
+/// per-layer transfer diagnostics.
+pub fn segment_of(index: usize) -> usize {
+    let off = offsets();
+    for i in (0..6).rev() {
+        if index >= off[i] {
+            return i;
+        }
+    }
+    0
+}
+
+/// Xavier/Glorot-style initialization of the flat vector (matches what a
+/// PyTorch `nn.Linear` default would roughly give; exact scheme is not
+/// performance-critical, determinism is).
+pub fn init_params(rng: &mut Rng) -> Vec<f32> {
+    let mut p = vec![0.0f32; N_PARAMS];
+    let off = offsets();
+    let layer_dims: [(usize, usize, usize); 3] = [
+        (off[0], N_FEATURES, HIDDEN),
+        (off[2], HIDDEN, HIDDEN),
+        (off[4], HIDDEN, 1),
+    ];
+    for (start, fan_in, fan_out) in layer_dims {
+        let scale = (2.0 / (fan_in + fan_out) as f64).sqrt();
+        for i in 0..(fan_in * fan_out) {
+            p[start + i] = rng.normal_ms(0.0, scale) as f32;
+        }
+    }
+    // Biases start at zero (already).
+    p
+}
+
+/// Serialize a f32 vector as little-endian bytes (checkpoint format).
+pub fn to_bytes(params: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(params.len() * 4);
+    for &x in params {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize a little-endian f32 vector.
+pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(bytes.len() % 4 == 0, "checkpoint length not a multiple of 4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a parameter checkpoint.
+pub fn save_checkpoint(path: &std::path::Path, params: &[f32]) -> anyhow::Result<()> {
+    anyhow::ensure!(params.len() == N_PARAMS, "checkpoint has wrong length");
+    std::fs::write(path, to_bytes(params))?;
+    Ok(())
+}
+
+/// Load a parameter checkpoint, validating length.
+pub fn load_checkpoint(path: &std::path::Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading checkpoint {path:?}: {e}"))?;
+    let params = from_bytes(&bytes)?;
+    anyhow::ensure!(
+        params.len() == N_PARAMS,
+        "checkpoint {path:?} has {} params, expected {}",
+        params.len(),
+        N_PARAMS
+    );
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_params_matches_python() {
+        // ref.py: 164*512 + 512 + 512*512 + 512 + 512 + 1
+        assert_eq!(N_PARAMS, 347_649);
+        assert_eq!(SIZES.iter().sum::<usize>(), N_PARAMS);
+    }
+
+    #[test]
+    fn offsets_are_cumulative() {
+        let off = offsets();
+        assert_eq!(off[0], 0);
+        for i in 1..6 {
+            assert_eq!(off[i], off[i - 1] + SIZES[i - 1]);
+        }
+    }
+
+    #[test]
+    fn view_partitions_whole_vector() {
+        let p: Vec<f32> = (0..N_PARAMS).map(|i| i as f32).collect();
+        let v = view(&p);
+        assert_eq!(v.w1.len(), N_FEATURES * HIDDEN);
+        assert_eq!(v.b3.len(), 1);
+        assert_eq!(v.w1[0], 0.0);
+        assert_eq!(v.b3[0], (N_PARAMS - 1) as f32);
+    }
+
+    #[test]
+    fn segment_of_boundaries() {
+        let off = offsets();
+        assert_eq!(segment_of(0), 0);
+        assert_eq!(segment_of(off[1]), 1);
+        assert_eq!(segment_of(off[1] - 1), 0);
+        assert_eq!(segment_of(N_PARAMS - 1), 5);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let a = init_params(&mut Rng::new(1));
+        let b = init_params(&mut Rng::new(1));
+        assert_eq!(a, b);
+        let v = view(&a);
+        // Biases zero.
+        assert!(v.b1.iter().all(|&x| x == 0.0));
+        // Weights non-degenerate and small.
+        let mean: f32 = v.w1.iter().sum::<f32>() / v.w1.len() as f32;
+        assert!(mean.abs() < 0.01);
+        assert!(v.w1.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let p = init_params(&mut Rng::new(2));
+        let q = from_bytes(&to_bytes(&p)).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_validation() {
+        let dir = std::env::temp_dir().join("moses_layout_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let p = init_params(&mut Rng::new(3));
+        save_checkpoint(&path, &p).unwrap();
+        assert_eq!(load_checkpoint(&path).unwrap(), p);
+        std::fs::write(&path, [0u8; 8]).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+}

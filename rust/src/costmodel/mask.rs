@@ -1,0 +1,224 @@
+//! Lottery-ticket masks over the flat parameter vector (paper §3.4).
+//!
+//! A mask marks each parameter as *transferable* (1.0 — domain-invariant,
+//! fine-tuned on the target device) or *domain-variant* (0.0 — decayed to
+//! zero).  Masks are derived from the ξ = |w · ∇w| saliency either by an
+//! absolute threshold ϑ or by ranking to a user-set transferable ratio
+//! (the paper exposes both; the ratio form drives the Fig. 6 ablation).
+
+use crate::costmodel::layout;
+
+/// A 0/1 mask over the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mask {
+    pub values: Vec<f32>,
+}
+
+impl Mask {
+    /// All-ones mask (vanilla fine-tuning trains every parameter).
+    pub fn all_ones(n: usize) -> Mask {
+        Mask { values: vec![1.0; n] }
+    }
+
+    /// All-zeros mask (frozen model).
+    pub fn all_zeros(n: usize) -> Mask {
+        Mask { values: vec![0.0; n] }
+    }
+
+    /// Threshold form: transferable iff ξ(i) > ϑ (paper's default
+    /// criterion with ϑ = 0.5 *after per-batch normalization*; raw ξ
+    /// magnitudes depend on loss scale, so we normalize ξ to [0, 1] by
+    /// its max before thresholding).
+    pub fn from_xi_threshold(xi: &[f32], theta: f32) -> Mask {
+        let max = xi.iter().cloned().fold(0.0f32, f32::max);
+        if max <= 0.0 {
+            // Degenerate saliency (e.g. zero grads): keep everything
+            // trainable rather than freezing the whole model.
+            return Mask::all_ones(xi.len());
+        }
+        let values = xi.iter().map(|&s| if s / max > theta { 1.0 } else { 0.0 }).collect();
+        Mask { values }
+    }
+
+    /// Ranking form: keep exactly `ceil(ratio * n)` highest-ξ parameters
+    /// transferable (paper §3.4 "ranking mechanism"; Fig. 6 ablation).
+    pub fn from_xi_ratio(xi: &[f32], ratio: f64) -> Mask {
+        let n = xi.len();
+        let keep = ((ratio * n as f64).ceil() as usize).min(n);
+        if keep == 0 {
+            return Mask::all_zeros(n);
+        }
+        if keep == n {
+            return Mask::all_ones(n);
+        }
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        // Partial selection of the top-`keep` by ξ (descending).
+        idx.select_nth_unstable_by(keep - 1, |&a, &b| {
+            xi[b as usize]
+                .partial_cmp(&xi[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut values = vec![0.0f32; n];
+        for &i in &idx[..keep] {
+            values[i as usize] = 1.0;
+        }
+        Mask { values }
+    }
+
+    /// Number of transferable parameters.
+    pub fn count_transferable(&self) -> usize {
+        self.values.iter().filter(|&&v| v == 1.0).count()
+    }
+
+    /// Transferable fraction.
+    pub fn ratio(&self) -> f64 {
+        if self.values.is_empty() {
+            0.0
+        } else {
+            self.count_transferable() as f64 / self.values.len() as f64
+        }
+    }
+
+    /// Per-layer transferable fractions (diagnostics: the paper argues
+    /// early layers carry more hardware-independent structure).
+    pub fn per_segment_ratio(&self) -> [f64; 6] {
+        let off = layout::offsets();
+        let mut out = [0.0f64; 6];
+        for (seg, item) in out.iter_mut().enumerate() {
+            let start = off[seg];
+            let len = layout::SIZES[seg];
+            let ones = self.values[start..start + len].iter().filter(|&&v| v == 1.0).count();
+            *item = ones as f64 / len as f64;
+        }
+        out
+    }
+
+    /// Union with another mask (parameter transferable in either).
+    pub fn union(&self, other: &Mask) -> Mask {
+        assert_eq!(self.values.len(), other.values.len());
+        Mask {
+            values: self
+                .values
+                .iter()
+                .zip(&other.values)
+                .map(|(&a, &b)| if a == 1.0 || b == 1.0 { 1.0 } else { 0.0 })
+                .collect(),
+        }
+    }
+
+    /// Exponential-moving blend of mask refreshes: a parameter stays
+    /// transferable if it was recently salient — stabilizes the
+    /// iterative boundary updates across tuning phases (paper §3.4
+    /// "iteratively update the boundary").
+    pub fn ema_refresh(history: &Mask, fresh: &Mask, keep_prob: f64) -> Mask {
+        assert_eq!(history.values.len(), fresh.values.len());
+        let mut values = fresh.values.clone();
+        for i in 0..values.len() {
+            if history.values[i] == 1.0 && fresh.values[i] == 0.0 {
+                // Previously-transferable param: retain with probability
+                // keep_prob using a deterministic hash of the index so
+                // refreshes are reproducible.
+                if crate::util::rng::hash_unit(i as u64 ^ 0x5EED) < keep_prob {
+                    values[i] = 1.0;
+                }
+            }
+        }
+        Mask { values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_xi(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform().powi(2) as f32).collect()
+    }
+
+    #[test]
+    fn ratio_mask_exact_count() {
+        let mut rng = Rng::new(1);
+        let xi = random_xi(&mut rng, 1000);
+        for ratio in [0.01, 0.3, 0.5, 0.7, 1.0] {
+            let m = Mask::from_xi_ratio(&xi, ratio);
+            assert_eq!(m.count_transferable(), (ratio * 1000.0).ceil() as usize);
+        }
+    }
+
+    #[test]
+    fn ratio_mask_keeps_highest_xi() {
+        let xi = vec![0.1, 0.9, 0.5, 0.7, 0.2];
+        let m = Mask::from_xi_ratio(&xi, 0.4); // keep 2
+        assert_eq!(m.values, vec![0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn threshold_mask_normalizes() {
+        let xi = vec![0.0, 10.0, 4.0, 6.0];
+        let m = Mask::from_xi_threshold(&xi, 0.5);
+        assert_eq!(m.values, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn threshold_degenerate_keeps_all() {
+        let m = Mask::from_xi_threshold(&[0.0; 8], 0.5);
+        assert_eq!(m.count_transferable(), 8);
+    }
+
+    #[test]
+    fn per_segment_ratio_sums() {
+        let m = Mask::all_ones(layout::N_PARAMS);
+        assert!(m.per_segment_ratio().iter().all(|&r| (r - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn union_is_or() {
+        let a = Mask { values: vec![1.0, 0.0, 0.0] };
+        let b = Mask { values: vec![0.0, 1.0, 0.0] };
+        assert_eq!(a.union(&b).values, vec![1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn ema_refresh_keeps_all_with_prob_one() {
+        let hist = Mask { values: vec![1.0, 1.0, 0.0, 0.0] };
+        let fresh = Mask { values: vec![0.0, 1.0, 1.0, 0.0] };
+        let m = Mask::ema_refresh(&hist, &fresh, 1.0);
+        assert_eq!(m.values, vec![1.0, 1.0, 1.0, 0.0]);
+        let m0 = Mask::ema_refresh(&hist, &fresh, 0.0);
+        assert_eq!(m0.values, fresh.values);
+    }
+
+    #[test]
+    fn prop_ratio_mask_invariants() {
+        prop::check(|rng| {
+            let n = rng.below(2000) + 1;
+            let xi = random_xi(rng, n);
+            let ratio = rng.uniform();
+            let m = Mask::from_xi_ratio(&xi, ratio);
+            assert_eq!(m.values.len(), n);
+            let keep = (ratio * n as f64).ceil() as usize;
+            assert_eq!(m.count_transferable(), keep.min(n));
+            // Every selected element's xi >= every unselected element's xi
+            // (up to ties at the boundary).
+            let sel_min = m
+                .values
+                .iter()
+                .zip(&xi)
+                .filter(|(v, _)| **v == 1.0)
+                .map(|(_, &s)| s)
+                .fold(f32::INFINITY, f32::min);
+            let unsel_max = m
+                .values
+                .iter()
+                .zip(&xi)
+                .filter(|(v, _)| **v == 0.0)
+                .map(|(_, &s)| s)
+                .fold(f32::NEG_INFINITY, f32::max);
+            if m.count_transferable() < n && m.count_transferable() > 0 {
+                assert!(sel_min >= unsel_max - 1e-6, "sel_min {sel_min} unsel_max {unsel_max}");
+            }
+        });
+    }
+}

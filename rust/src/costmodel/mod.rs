@@ -1,0 +1,435 @@
+//! The learned cost model C() ~ Perf() (paper Eq. 2).
+//!
+//! * [`layout`] — flat-parameter geometry shared with the Python side.
+//! * [`rust_mlp`] — pure-Rust mirror of the MLP / loss / update math.
+//! * [`mask`] — lottery-ticket masks over the parameter vector.
+//! * [`CostModel`] — stateful model (params + Adam moments) over a
+//!   pluggable [`Backend`]: the XLA/PJRT engine executing the AOT Pallas
+//!   artifacts (production path) or the pure-Rust mirror (tests,
+//!   artifact-less fallback).
+
+pub mod layout;
+pub mod mask;
+pub mod rust_mlp;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use mask::Mask;
+
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Low-level compute backend with FIXED batch geometry.
+///
+/// Deliberately NOT `Send`/`Sync`: the `xla` crate's PJRT client is
+/// `Rc`-based, so an [`XlaBackend`] is pinned to the thread that created
+/// it.  Parallelism in the experiment harness happens at the
+/// experiment/process level (or with the `Send`-safe [`RustBackend`]).
+pub trait Backend {
+    fn pred_batch(&self) -> usize;
+    /// Small predict batch (0 = unsupported).  Lets the scoring hot path
+    /// avoid padding evolutionary populations (~64 rows) up to the
+    /// dataset-scoring shape (512).
+    fn pred_batch_small(&self) -> usize {
+        0
+    }
+    fn train_batch(&self) -> usize;
+    /// Score exactly `pred_batch` rows.
+    fn predict_fixed(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>>;
+    /// Score exactly `pred_batch_small` rows (only if supported).
+    fn predict_small_fixed(&self, _params: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::bail!("backend has no small predict batch")
+    }
+    /// One masked-Adam step on exactly `train_batch` rows.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_fixed(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        mask: &[f32],
+        hp: [f32; 4],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)>;
+    /// ξ saliency on exactly `train_batch` rows.
+    fn xi_fixed(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>>;
+    /// Ranking loss on exactly `train_batch` rows.
+    fn loss_fixed(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<f32>;
+    /// Human-readable backend name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// XLA/PJRT backend over the AOT artifacts (Pallas kernels inside).
+pub struct XlaBackend {
+    pub engine: Arc<Engine>,
+}
+
+impl Backend for XlaBackend {
+    fn pred_batch(&self) -> usize {
+        self.engine.meta.pred_batch
+    }
+
+    fn pred_batch_small(&self) -> usize {
+        self.engine.meta.pred_batch_small
+    }
+
+    fn train_batch(&self) -> usize {
+        self.engine.meta.train_batch
+    }
+
+    fn predict_fixed(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        self.engine.predict(params, x)
+    }
+
+    fn predict_small_fixed(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        self.engine.predict_small(params, x)
+    }
+
+    fn train_step_fixed(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        mask: &[f32],
+        hp: [f32; 4],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let out = self.engine.train_step(params, m, v, x, y, w, mask, hp)?;
+        Ok((out.params, out.m, out.v, out.loss))
+    }
+
+    fn xi_fixed(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        self.engine.xi(params, x, y, w)
+    }
+
+    fn loss_fixed(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<f32> {
+        self.engine.loss_eval(params, x, y, w)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Pure-Rust backend (same math, no PJRT dependency).
+pub struct RustBackend {
+    pub pred_batch: usize,
+    pub train_batch: usize,
+}
+
+impl Default for RustBackend {
+    fn default() -> Self {
+        // Mirror the AOT geometry so parity tests compare like-for-like.
+        RustBackend { pred_batch: 512, train_batch: 256 }
+    }
+}
+
+impl Backend for RustBackend {
+    fn pred_batch(&self) -> usize {
+        self.pred_batch
+    }
+
+    fn pred_batch_small(&self) -> usize {
+        // The Rust mirror computes exactly what it is given, so the small
+        // variant mirrors the AOT geometry (64) capped by pred_batch.
+        64.min(self.pred_batch)
+    }
+
+    fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+
+    fn predict_fixed(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        Ok(rust_mlp::forward(params, x, self.pred_batch))
+    }
+
+    fn predict_small_fixed(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        Ok(rust_mlp::forward(params, x, self.pred_batch_small()))
+    }
+
+    fn train_step_fixed(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        mask: &[f32],
+        hp: [f32; 4],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let (loss, grads) = rust_mlp::backward(params, x, self.train_batch, y, w);
+        let mut p = params.to_vec();
+        let mut mm = m.to_vec();
+        let mut vv = v.to_vec();
+        rust_mlp::masked_adam_update(&mut p, &mut mm, &mut vv, &grads, mask, hp[0], hp[1], hp[2]);
+        Ok((p, mm, vv, loss))
+    }
+
+    fn xi_fixed(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        Ok(rust_mlp::xi_scores(params, x, self.train_batch, y, w))
+    }
+
+    fn loss_fixed(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<f32> {
+        Ok(rust_mlp::rank_loss(
+            &rust_mlp::forward(params, x, self.train_batch),
+            y,
+            w,
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Stateful cost model: parameters + Adam moments + step counter over a
+/// backend.  Accepts arbitrary row counts; pads/chunks to the backend's
+/// fixed batch geometry internally (padding rows get weight 0 so they
+/// never affect the ranking loss).
+pub struct CostModel {
+    backend: Arc<dyn Backend>,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+}
+
+impl CostModel {
+    /// Fresh model with random init.
+    pub fn new(backend: Arc<dyn Backend>, rng: &mut Rng) -> CostModel {
+        let params = layout::init_params(rng);
+        CostModel::with_params(backend, params)
+    }
+
+    /// Model with given parameters (e.g. a pre-trained checkpoint).
+    pub fn with_params(backend: Arc<dyn Backend>, params: Vec<f32>) -> CostModel {
+        assert_eq!(params.len(), layout::N_PARAMS);
+        CostModel {
+            backend,
+            params,
+            m: vec![0.0; layout::N_PARAMS],
+            v: vec![0.0; layout::N_PARAMS],
+            step: 0,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Reset Adam state (used when adaptation starts on a new device).
+    pub fn reset_optimizer(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+    }
+
+    /// Score `rows` feature rows (row-major, `rows * N_FEATURES` f32).
+    ///
+    /// Chunks to the backend's fixed batch shapes, preferring the small
+    /// predict variant when the remaining rows fit it (the evolutionary
+    /// search's ~64-row populations then skip the 8× padding to 512).
+    pub fn predict(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let nf = layout::N_FEATURES;
+        assert_eq!(x.len(), rows * nf);
+        let bp = self.backend.pred_batch();
+        let bs = self.backend.pred_batch_small();
+        let mut scores = Vec::with_capacity(rows);
+        let mut start = 0;
+        while start < rows {
+            let remaining = rows - start;
+            let use_small = bs > 0 && remaining <= bs;
+            let batch = if use_small { bs } else { bp };
+            let n = remaining.min(batch);
+            let src = &x[start * nf..(start + n) * nf];
+            let run = |data: &[f32]| {
+                if use_small {
+                    self.backend.predict_small_fixed(&self.params, data)
+                } else {
+                    self.backend.predict_fixed(&self.params, data)
+                }
+            };
+            if n == batch {
+                scores.extend_from_slice(&run(src)?[..n]);
+            } else {
+                let mut padded = vec![0.0f32; batch * nf];
+                padded[..n * nf].copy_from_slice(src);
+                scores.extend_from_slice(&run(&padded)?[..n]);
+            }
+            start += n;
+        }
+        Ok(scores)
+    }
+
+    /// One gradient step on up to `train_batch` labeled rows (padded with
+    /// zero-weight rows if fewer). Returns the batch ranking loss.
+    pub fn train_step(&mut self, x: &[f32], y: &[f32], mask: &Mask, lr: f32, wd: f32) -> Result<f32> {
+        let (px, py, pw) = self.pad_train(x, y);
+        self.step += 1;
+        let hp = [lr, wd, self.step as f32, 0.0];
+        let (p, m, v, loss) = self.backend.train_step_fixed(
+            &self.params,
+            &self.m,
+            &self.v,
+            &px,
+            &py,
+            &pw,
+            &mask.values,
+            hp,
+        )?;
+        self.params = p;
+        self.m = m;
+        self.v = v;
+        Ok(loss)
+    }
+
+    /// One pass over a labeled set in shuffled mini-batches.
+    /// Returns the mean batch loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_epoch(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        mask: &Mask,
+        lr: f32,
+        wd: f32,
+        rng: &mut Rng,
+    ) -> Result<f32> {
+        let nf = layout::N_FEATURES;
+        let rows = y.len();
+        assert_eq!(x.len(), rows * nf);
+        let bt = self.backend.train_batch();
+        let mut order: Vec<usize> = (0..rows).collect();
+        rng.shuffle(&mut order);
+        let mut bx = vec![0.0f32; bt * nf];
+        let mut by = vec![0.0f32; bt];
+        let mut losses = Vec::new();
+        for chunk in order.chunks(bt) {
+            for (slot, &row) in chunk.iter().enumerate() {
+                bx[slot * nf..(slot + 1) * nf].copy_from_slice(&x[row * nf..(row + 1) * nf]);
+                by[slot] = y[row];
+            }
+            losses.push(self.train_step(&bx[..chunk.len() * nf], &by[..chunk.len()], mask, lr, wd)?);
+        }
+        Ok(if losses.is_empty() {
+            0.0
+        } else {
+            losses.iter().sum::<f32>() / losses.len() as f32
+        })
+    }
+
+    /// ξ saliency on up to `train_batch` labeled rows.
+    pub fn xi(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let (px, py, pw) = self.pad_train(x, y);
+        self.backend.xi_fixed(&self.params, &px, &py, &pw)
+    }
+
+    /// Held-out ranking loss on up to `train_batch` labeled rows.
+    pub fn loss(&self, x: &[f32], y: &[f32]) -> Result<f32> {
+        let (px, py, pw) = self.pad_train(x, y);
+        self.backend.loss_fixed(&self.params, &px, &py, &pw)
+    }
+
+    fn pad_train(&self, x: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let nf = layout::N_FEATURES;
+        let bt = self.backend.train_batch();
+        let rows = y.len().min(bt);
+        assert!(x.len() >= rows * nf, "x shorter than y rows");
+        let mut px = vec![0.0f32; bt * nf];
+        px[..rows * nf].copy_from_slice(&x[..rows * nf]);
+        let mut py = vec![0.0f32; bt];
+        py[..rows].copy_from_slice(&y[..rows]);
+        let mut pw = vec![0.0f32; bt];
+        pw[..rows].iter_mut().for_each(|v| *v = 1.0);
+        (px, py, pw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_backend() -> Arc<dyn Backend> {
+        Arc::new(RustBackend { pred_batch: 8, train_batch: 8 })
+    }
+
+    fn rows(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..n * layout::N_FEATURES).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn predict_handles_partial_and_multi_chunk() {
+        let mut rng = Rng::new(1);
+        let model = CostModel::new(tiny_backend(), &mut rng);
+        for n in [1, 7, 8, 9, 20] {
+            let (x, _) = rows(&mut rng, n);
+            let scores = model.predict(&x, n).unwrap();
+            assert_eq!(scores.len(), n);
+            assert!(scores.iter().all(|s| s.is_finite()));
+        }
+    }
+
+    #[test]
+    fn predict_chunking_matches_single_batch() {
+        let mut rng = Rng::new(2);
+        let model = CostModel::new(tiny_backend(), &mut rng);
+        let (x, _) = rows(&mut rng, 16);
+        let all = model.predict(&x, 16).unwrap();
+        let first = model.predict(&x[..8 * layout::N_FEATURES], 8).unwrap();
+        assert_eq!(&all[..8], &first[..]);
+    }
+
+    #[test]
+    fn train_epoch_reduces_holdout_loss() {
+        let mut rng = Rng::new(3);
+        let mut model = CostModel::new(tiny_backend(), &mut rng);
+        // Learnable target: score = first feature.
+        let n = 64;
+        let mut x = vec![0.0f32; n * layout::N_FEATURES];
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let v = rng.uniform() as f32;
+            x[i * layout::N_FEATURES] = v;
+            y[i] = v;
+        }
+        let mask = Mask::all_ones(layout::N_PARAMS);
+        let before = model.loss(&x[..8 * layout::N_FEATURES], &y[..8]).unwrap();
+        for _ in 0..10 {
+            model.train_epoch(&x, &y, &mask, 1e-2, 0.0, &mut rng).unwrap();
+        }
+        let after = model.loss(&x[..8 * layout::N_FEATURES], &y[..8]).unwrap();
+        assert!(after < before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn zero_mask_freezes_scores_up_to_decay() {
+        let mut rng = Rng::new(4);
+        let mut model = CostModel::new(tiny_backend(), &mut rng);
+        let (x, y) = rows(&mut rng, 8);
+        let before = model.predict(&x, 8).unwrap();
+        let mask = Mask::all_zeros(layout::N_PARAMS);
+        model.train_step(&x, &y, &mask, 1e-3, 0.0, /* wd=0 -> no decay */).unwrap();
+        let after = model.predict(&x, 8).unwrap();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn xi_shape_and_finite() {
+        let mut rng = Rng::new(5);
+        let model = CostModel::new(tiny_backend(), &mut rng);
+        let (x, y) = rows(&mut rng, 8);
+        let xi = model.xi(&x, &y).unwrap();
+        assert_eq!(xi.len(), layout::N_PARAMS);
+        assert!(xi.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+}

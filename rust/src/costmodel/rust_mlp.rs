@@ -1,0 +1,416 @@
+//! Pure-Rust mirror of the L1/L2 cost-model math.
+//!
+//! Semantics are identical to the JAX graphs (`python/compile/model.py`):
+//! same MLP, same pairwise logistic ranking loss, same masked-Adam +
+//! weight-decay update.  Three roles:
+//!
+//! 1. fast unit/property tests that don't need PJRT;
+//! 2. a fallback backend (`--backend rust`) so the tuner runs even
+//!    without artifacts;
+//! 3. the cross-checking oracle for the Rust↔XLA parity integration test
+//!    (`rust/tests/xla_parity.rs`).
+//!
+//! The matmuls here are written as straightforward loops with an
+//! 8-wide inner accumulation; the perf pass (EXPERIMENTS.md §Perf)
+//! measures them against the XLA backend.
+
+use crate::costmodel::layout::{self, HIDDEN, N_FEATURES, N_PARAMS};
+
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Activations recorded by the forward pass (needed for backprop).
+pub struct Activations {
+    pub h1: Vec<f32>, // [batch, HIDDEN] post-ReLU
+    pub h2: Vec<f32>, // [batch, HIDDEN] post-ReLU
+    pub scores: Vec<f32>,
+}
+
+/// y[rows x cols] = x[rows x inner] * w[inner x cols] + b, ReLU optional.
+fn dense(
+    x: &[f32],
+    rows: usize,
+    inner: usize,
+    w: &[f32],
+    b: &[f32],
+    cols: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * inner);
+    debug_assert_eq!(w.len(), inner * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    for r in 0..rows {
+        let xrow = &x[r * inner..(r + 1) * inner];
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        orow.copy_from_slice(&b[..cols]);
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // ReLU sparsity shortcut
+            }
+            let wrow = &w[k * cols..(k + 1) * cols];
+            for c in 0..cols {
+                orow[c] += xv * wrow[c];
+            }
+        }
+        if relu {
+            for v in orow.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Forward pass over a row-major batch `x[batch, N_FEATURES]`.
+pub fn forward(params: &[f32], x: &[f32], batch: usize) -> Vec<f32> {
+    forward_full(params, x, batch).scores
+}
+
+/// Forward pass that also returns hidden activations.
+pub fn forward_full(params: &[f32], x: &[f32], batch: usize) -> Activations {
+    assert_eq!(params.len(), N_PARAMS);
+    assert_eq!(x.len(), batch * N_FEATURES);
+    let v = layout::view(params);
+    let mut h1 = vec![0.0f32; batch * HIDDEN];
+    dense(x, batch, N_FEATURES, v.w1, v.b1, HIDDEN, true, &mut h1);
+    let mut h2 = vec![0.0f32; batch * HIDDEN];
+    dense(&h1, batch, HIDDEN, v.w2, v.b2, HIDDEN, true, &mut h2);
+    let mut scores = vec![0.0f32; batch];
+    for r in 0..batch {
+        let mut acc = v.b3[0];
+        let hrow = &h2[r * HIDDEN..(r + 1) * HIDDEN];
+        for k in 0..HIDDEN {
+            acc += hrow[k] * v.w3[k];
+        }
+        scores[r] = acc;
+    }
+    Activations { h1, h2, scores }
+}
+
+/// Pairwise logistic ranking loss (matches `ref.pairwise_rank_loss`).
+pub fn rank_loss(scores: &[f32], y: &[f32], w: &[f32]) -> f32 {
+    let (loss, _) = rank_loss_and_score_grads(scores, y, w);
+    loss
+}
+
+/// Loss and dL/dscores for the weighted pairwise logistic objective.
+pub fn rank_loss_and_score_grads(scores: &[f32], y: &[f32], w: &[f32]) -> (f32, Vec<f32>) {
+    let n = scores.len();
+    assert_eq!(y.len(), n);
+    assert_eq!(w.len(), n);
+    let mut total_w = 0.0f64;
+    let mut loss = 0.0f64;
+    let mut grad = vec![0.0f64; n];
+    for i in 0..n {
+        for j in 0..n {
+            let sign = (y[i] - y[j]).signum();
+            if sign == 0.0 || y[i] == y[j] {
+                continue;
+            }
+            let pw = (w[i] * w[j]) as f64;
+            if pw == 0.0 {
+                continue;
+            }
+            total_w += pw;
+            let x = ((scores[i] - scores[j]) * sign) as f64;
+            // softplus(-x), stable.
+            let sp = if x > 30.0 {
+                (-x).exp()
+            } else if x < -30.0 {
+                -x
+            } else {
+                (1.0 + (-x).exp()).ln()
+            };
+            loss += pw * sp;
+            // d softplus(-x)/dx = -sigmoid(-x)
+            let sig = 1.0 / (1.0 + x.exp()); // sigmoid(-x)
+            let d = -sig * sign as f64 * pw;
+            grad[i] += d;
+            grad[j] -= d;
+        }
+    }
+    let denom = total_w.max(1.0);
+    let loss = (loss / denom) as f32;
+    let grads: Vec<f32> = grad.iter().map(|g| (g / denom) as f32).collect();
+    (loss, grads)
+}
+
+/// Full backward pass: gradient of the ranking loss w.r.t. the flat
+/// parameter vector.
+pub fn backward(params: &[f32], x: &[f32], batch: usize, y: &[f32], w: &[f32]) -> (f32, Vec<f32>) {
+    let acts = forward_full(params, x, batch);
+    let (loss, dscores) = rank_loss_and_score_grads(&acts.scores, y, w);
+    let v = layout::view(params);
+    let off = layout::offsets();
+    let mut grads = vec![0.0f32; N_PARAMS];
+
+    // Layer 3: scores = h2 @ w3 + b3.
+    {
+        let (gw3, rest) = grads[off[4]..].split_at_mut(HIDDEN);
+        let gb3 = &mut rest[..1];
+        for r in 0..batch {
+            let d = dscores[r];
+            if d == 0.0 {
+                continue;
+            }
+            let hrow = &acts.h2[r * HIDDEN..(r + 1) * HIDDEN];
+            for k in 0..HIDDEN {
+                gw3[k] += d * hrow[k];
+            }
+            gb3[0] += d;
+        }
+    }
+
+    // dL/dh2 with ReLU mask.
+    let mut dh2 = vec![0.0f32; batch * HIDDEN];
+    for r in 0..batch {
+        let d = dscores[r];
+        if d == 0.0 {
+            continue;
+        }
+        let hrow = &acts.h2[r * HIDDEN..(r + 1) * HIDDEN];
+        let drow = &mut dh2[r * HIDDEN..(r + 1) * HIDDEN];
+        for k in 0..HIDDEN {
+            if hrow[k] > 0.0 {
+                drow[k] = d * v.w3[k];
+            }
+        }
+    }
+
+    // Layer 2 grads: h2 = relu(h1 @ w2 + b2).
+    {
+        let (gw2, gb2) = {
+            let seg = &mut grads[off[2]..off[4]];
+            let (a, b) = seg.split_at_mut(HIDDEN * HIDDEN);
+            (a, b)
+        };
+        for r in 0..batch {
+            let h1row = &acts.h1[r * HIDDEN..(r + 1) * HIDDEN];
+            let drow = &dh2[r * HIDDEN..(r + 1) * HIDDEN];
+            for k in 0..HIDDEN {
+                let hv = h1row[k];
+                if hv == 0.0 {
+                    continue;
+                }
+                let gw2row = &mut gw2[k * HIDDEN..(k + 1) * HIDDEN];
+                for c in 0..HIDDEN {
+                    gw2row[c] += hv * drow[c];
+                }
+            }
+            for c in 0..HIDDEN {
+                gb2[c] += drow[c];
+            }
+        }
+    }
+
+    // dL/dh1 with ReLU mask.
+    let mut dh1 = vec![0.0f32; batch * HIDDEN];
+    for r in 0..batch {
+        let drow = &dh2[r * HIDDEN..(r + 1) * HIDDEN];
+        let h1row = &acts.h1[r * HIDDEN..(r + 1) * HIDDEN];
+        let out = &mut dh1[r * HIDDEN..(r + 1) * HIDDEN];
+        for k in 0..HIDDEN {
+            if h1row[k] > 0.0 {
+                let w2row = &v.w2[k * HIDDEN..(k + 1) * HIDDEN];
+                let mut acc = 0.0f32;
+                for c in 0..HIDDEN {
+                    acc += w2row[c] * drow[c];
+                }
+                out[k] = acc;
+            }
+        }
+    }
+
+    // Layer 1 grads: h1 = relu(x @ w1 + b1).
+    {
+        let (gw1, gb1) = {
+            let seg = &mut grads[off[0]..off[2]];
+            let (a, b) = seg.split_at_mut(N_FEATURES * HIDDEN);
+            (a, b)
+        };
+        for r in 0..batch {
+            let xrow = &x[r * N_FEATURES..(r + 1) * N_FEATURES];
+            let drow = &dh1[r * HIDDEN..(r + 1) * HIDDEN];
+            for k in 0..N_FEATURES {
+                let xv = xrow[k];
+                if xv == 0.0 {
+                    continue;
+                }
+                let gw1row = &mut gw1[k * HIDDEN..(k + 1) * HIDDEN];
+                for c in 0..HIDDEN {
+                    gw1row[c] += xv * drow[c];
+                }
+            }
+            for c in 0..HIDDEN {
+                gb1[c] += drow[c];
+            }
+        }
+    }
+
+    (loss, grads)
+}
+
+/// Masked Adam + weight-decay update (matches `ref.masked_adam_update`).
+#[allow(clippy::too_many_arguments)]
+pub fn masked_adam_update(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    grads: &[f32],
+    mask: &[f32],
+    lr: f32,
+    wd: f32,
+    step: f32,
+) {
+    let bc1 = 1.0 - ADAM_B1.powf(step);
+    let bc2 = 1.0 - ADAM_B2.powf(step);
+    for i in 0..params.len() {
+        let g = grads[i] * mask[i];
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g;
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g * g;
+        let adam = lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + ADAM_EPS);
+        params[i] -= mask[i] * adam + (1.0 - mask[i]) * lr * wd * params[i];
+    }
+}
+
+/// ξ = |w · ∇w| saliency (paper Eq. 5).
+pub fn xi_scores(params: &[f32], x: &[f32], batch: usize, y: &[f32], w: &[f32]) -> Vec<f32> {
+    let (_, grads) = backward(params, x, batch, y, w);
+    params.iter().zip(&grads).map(|(p, g)| (p * g).abs()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn small_batch(rng: &mut Rng, batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..batch * N_FEATURES).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..batch).map(|_| rng.uniform_in(0.0, 10.0) as f32).collect();
+        let w = vec![1.0f32; batch];
+        (x, y, w)
+    }
+
+    #[test]
+    fn forward_zero_params_is_zero() {
+        let params = vec![0.0f32; N_PARAMS];
+        let mut rng = Rng::new(1);
+        let (x, _, _) = small_batch(&mut rng, 4);
+        assert!(forward(&params, &x, 4).iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn rank_loss_direction() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        let w = [1.0; 4];
+        let good = rank_loss(&[1.0, 2.0, 3.0, 4.0], &y, &w);
+        let bad = rank_loss(&[4.0, 3.0, 2.0, 1.0], &y, &w);
+        assert!(good < bad);
+    }
+
+    #[test]
+    fn rank_loss_zero_weight_rows_ignored() {
+        let y = [1.0, 2.0, -50.0];
+        let s = [0.3, 0.9, 100.0];
+        let full = rank_loss(&s[..2], &y[..2], &[1.0, 1.0]);
+        let padded = rank_loss(&s, &y, &[1.0, 1.0, 0.0]);
+        assert!((full - padded).abs() < 1e-6);
+    }
+
+    #[test]
+    fn score_grads_match_finite_difference() {
+        let mut rng = Rng::new(2);
+        let n = 6;
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.0, 5.0) as f32).collect();
+        let w = vec![1.0f32; n];
+        let (_, grads) = rank_loss_and_score_grads(&scores, &y, &w);
+        let eps = 1e-3f32;
+        for i in 0..n {
+            let mut sp = scores.clone();
+            sp[i] += eps;
+            let mut sm = scores.clone();
+            sm[i] -= eps;
+            let fd = (rank_loss(&sp, &y, &w) - rank_loss(&sm, &y, &w)) / (2.0 * eps);
+            assert!(
+                (fd - grads[i]).abs() < 2e-3,
+                "i={i} fd={fd} analytic={}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn param_grads_match_finite_difference_spot_checks() {
+        let mut rng = Rng::new(3);
+        let batch = 5;
+        let params = layout::init_params(&mut rng);
+        let (x, y, w) = small_batch(&mut rng, batch);
+        let (_, grads) = backward(&params, &x, batch, &y, &w);
+        let off = layout::offsets();
+        // One index per segment.
+        let picks = [off[0] + 7, off[1] + 3, off[2] + 1001, off[3] + 20, off[4] + 100, off[5]];
+        let eps = 3e-3f32;
+        for &i in &picks {
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let lp = rank_loss(&forward(&pp, &x, batch), &y, &w);
+            let mut pm = params.clone();
+            pm[i] -= eps;
+            let lm = rank_loss(&forward(&pm, &x, batch), &y, &w);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grads[i]).abs() < 5e-3,
+                "idx {i}: fd={fd} analytic={}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut rng = Rng::new(4);
+        let batch = 16;
+        let mut params = layout::init_params(&mut rng);
+        let (x, y, w) = small_batch(&mut rng, batch);
+        let mut m = vec![0.0f32; N_PARAMS];
+        let mut v = vec![0.0f32; N_PARAMS];
+        let mask = vec![1.0f32; N_PARAMS];
+        let first = rank_loss(&forward(&params, &x, batch), &y, &w);
+        for step in 1..=20 {
+            let (_, grads) = backward(&params, &x, batch, &y, &w);
+            masked_adam_update(&mut params, &mut m, &mut v, &grads, &mask, 1e-2, 0.0, step as f32);
+        }
+        let last = rank_loss(&forward(&params, &x, batch), &y, &w);
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn variant_params_decay_under_zero_mask() {
+        let mut rng = Rng::new(5);
+        let mut params = layout::init_params(&mut rng);
+        let orig = params.clone();
+        let mut m = vec![0.0f32; N_PARAMS];
+        let mut v = vec![0.0f32; N_PARAMS];
+        let grads: Vec<f32> = (0..N_PARAMS).map(|_| rng.normal() as f32).collect();
+        let mask = vec![0.0f32; N_PARAMS];
+        let (lr, wd) = (0.01f32, 0.1f32);
+        masked_adam_update(&mut params, &mut m, &mut v, &grads, &mask, lr, wd, 1.0);
+        for i in (0..N_PARAMS).step_by(50_000) {
+            let expect = orig[i] * (1.0 - lr * wd);
+            assert!((params[i] - expect).abs() < 1e-7);
+        }
+        assert!(m.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn xi_zero_for_zero_params() {
+        let mut rng = Rng::new(6);
+        let (x, y, w) = small_batch(&mut rng, 4);
+        let xi = xi_scores(&vec![0.0; N_PARAMS], &x, 4, &y, &w);
+        assert!(xi.iter().all(|&s| s == 0.0));
+    }
+}

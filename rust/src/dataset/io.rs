@@ -1,0 +1,246 @@
+//! Binary (de)serialization of datasets (`.moses-ds` files).
+//!
+//! Little-endian, versioned-magic format; features are NOT stored (they
+//! are a deterministic function of task + knobs and are recomputed on
+//! load), which keeps a 60k-record dataset ≈ 3 MB instead of ≈ 45 MB.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Dataset, Record};
+use crate::program::{Subgraph, SubgraphKind};
+
+const MAGIC: &[u8; 8] = b"MOSESDS1";
+
+fn kind_encode(kind: &SubgraphKind) -> (u8, Vec<u32>) {
+    match *kind {
+        SubgraphKind::Conv2d { n, h, w, cin, cout, kh, kw, stride, pad } => (
+            0,
+            vec![n as u32, h as u32, w as u32, cin as u32, cout as u32, kh as u32, kw as u32, stride as u32, pad as u32],
+        ),
+        SubgraphKind::DepthwiseConv2d { n, h, w, c, kh, kw, stride, pad } => (
+            1,
+            vec![n as u32, h as u32, w as u32, c as u32, kh as u32, kw as u32, stride as u32, pad as u32],
+        ),
+        SubgraphKind::Dense { m, n, k } => (2, vec![m as u32, n as u32, k as u32]),
+        SubgraphKind::BatchMatmul { b, m, n, k } => {
+            (3, vec![b as u32, m as u32, n as u32, k as u32])
+        }
+        SubgraphKind::Pool2d { n, h, w, c, k, stride } => (
+            4,
+            vec![n as u32, h as u32, w as u32, c as u32, k as u32, stride as u32],
+        ),
+        SubgraphKind::Elementwise { len, ops } => (5, vec![len as u32, ops as u32]),
+    }
+}
+
+fn kind_decode(tag: u8, p: &[u32]) -> Result<SubgraphKind> {
+    let u = |i: usize| p[i] as usize;
+    Ok(match tag {
+        0 => SubgraphKind::Conv2d {
+            n: u(0), h: u(1), w: u(2), cin: u(3), cout: u(4), kh: u(5), kw: u(6), stride: u(7), pad: u(8),
+        },
+        1 => SubgraphKind::DepthwiseConv2d {
+            n: u(0), h: u(1), w: u(2), c: u(3), kh: u(4), kw: u(5), stride: u(6), pad: u(7),
+        },
+        2 => SubgraphKind::Dense { m: u(0), n: u(1), k: u(2) },
+        3 => SubgraphKind::BatchMatmul { b: u(0), m: u(1), n: u(2), k: u(3) },
+        4 => SubgraphKind::Pool2d { n: u(0), h: u(1), w: u(2), c: u(3), k: u(4), stride: u(5) },
+        5 => SubgraphKind::Elementwise { len: u(0), ops: u(1) },
+        _ => bail!("unknown subgraph kind tag {tag}"),
+    })
+}
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    fn f64(&mut self, v: f64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    fn str(&mut self, s: &str) -> Result<()> {
+        self.u32(s.len() as u32)?;
+        self.w.write_all(s.as_bytes())?;
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > 1 << 20 {
+            bail!("string too long ({len})");
+        }
+        let mut b = vec![0u8; len];
+        self.r.read_exact(&mut b)?;
+        String::from_utf8(b).context("invalid utf-8 in dataset string")
+    }
+}
+
+/// Save a dataset.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    let mut w = Writer { w: std::io::BufWriter::new(file) };
+    w.w.write_all(MAGIC)?;
+    w.str(&ds.device)?;
+    w.u32(ds.tasks.len() as u32)?;
+    for t in &ds.tasks {
+        w.str(&t.name)?;
+        let (tag, params) = kind_encode(&t.kind);
+        w.u32(tag as u32)?;
+        w.u32(params.len() as u32)?;
+        for p in params {
+            w.u32(p)?;
+        }
+        w.u32(t.repeats as u32)?;
+    }
+    w.u64(ds.records.len() as u64)?;
+    for r in &ds.records {
+        w.u32(r.task_idx as u32)?;
+        for k in r.knobs {
+            w.u32(k)?;
+        }
+        w.f64(r.gflops)?;
+        w.f64(r.latency_s)?;
+    }
+    Ok(())
+}
+
+/// Load a dataset.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = Reader { r: std::io::BufReader::new(file) };
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not a moses dataset (bad magic)");
+    }
+    let device = r.str()?;
+    let n_tasks = r.u32()? as usize;
+    let mut ds = Dataset::new(&device);
+    for _ in 0..n_tasks {
+        let name = r.str()?;
+        let tag = r.u32()? as u8;
+        let n_params = r.u32()? as usize;
+        if n_params > 64 {
+            bail!("implausible param count {n_params}");
+        }
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(r.u32()?);
+        }
+        let repeats = r.u32()? as usize;
+        let mut sub = Subgraph::new(&name, kind_decode(tag, &params)?);
+        sub.repeats = repeats;
+        ds.tasks.push(sub);
+    }
+    let n_records = r.u64()? as usize;
+    ds.records.reserve(n_records);
+    for _ in 0..n_records {
+        let task_idx = r.u32()? as usize;
+        if task_idx >= ds.tasks.len() {
+            bail!("record references task {task_idx} >= {}", ds.tasks.len());
+        }
+        let mut knobs = [0u32; 9];
+        for k in knobs.iter_mut() {
+            *k = r.u32()?;
+        }
+        let gflops = r.f64()?;
+        let latency_s = r.f64()?;
+        ds.records.push(Record { task_idx, knobs, gflops, latency_s });
+    }
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::gen::{generate, GenConfig, TaskSource};
+    use crate::device::presets;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("moses_ds_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let cfg = GenConfig { records_per_task: 12, seed: 5 };
+        let ds = generate(&presets::jetson_xavier(), TaskSource::Random { count: 6 }, &cfg);
+        let path = tmp("roundtrip.moses-ds");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.device, ds.device);
+        assert_eq!(back.tasks.len(), ds.tasks.len());
+        for (a, b) in back.tasks.iter().zip(&ds.tasks) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(back.len(), ds.len());
+        for (a, b) in back.records.iter().zip(&ds.records) {
+            assert_eq!(a.task_idx, b.task_idx);
+            assert_eq!(a.knobs, b.knobs);
+            assert_eq!(a.gflops, b.gflops);
+            assert!(
+                a.latency_s == b.latency_s
+                    || (a.latency_s.is_infinite() && b.latency_s.is_infinite())
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.moses-ds");
+        std::fs::write(&path, b"not a dataset at all").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn training_arrays_survive_roundtrip() {
+        let cfg = GenConfig { records_per_task: 8, seed: 2 };
+        let ds = generate(&presets::tesla_k80(), TaskSource::Random { count: 3 }, &cfg);
+        let path = tmp("arrays.moses-ds");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(ds.training_arrays().0, back.training_arrays().0);
+        assert_eq!(ds.training_arrays().1, back.training_arrays().1);
+    }
+}

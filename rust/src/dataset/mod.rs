@@ -1,0 +1,178 @@
+//! Tenset-style program-performance datasets (paper §2.3, §4.1).
+//!
+//! A dataset is a set of `(task, schedule, measured throughput)` records
+//! collected offline on one device.  The paper pre-trains the source
+//! cost model on Tenset (K80 slice) and contributes a generated dataset
+//! for two embedded devices (TX2, Xavier); `moses dataset` reproduces
+//! that generation against the simulator (scaled — DESIGN.md §2).
+
+pub mod gen;
+pub mod io;
+
+use crate::program::{featurize, Schedule, Subgraph, TensorProgram, N_FEATURES};
+
+/// One measurement record.
+#[derive(Debug, Clone)]
+pub struct Record {
+    /// Task (subgraph) this record belongs to, by index into
+    /// [`Dataset::tasks`].
+    pub task_idx: usize,
+    /// Schedule knobs.
+    pub knobs: [u32; 9],
+    /// Measured throughput (GFLOP/s; 0 for failed configs).
+    pub gflops: f64,
+    /// Measured latency in seconds (INFINITY for failed configs).
+    pub latency_s: f64,
+}
+
+/// A program-performance dataset for one device.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    /// Device name the labels were measured on.
+    pub device: String,
+    /// Task table.
+    pub tasks: Vec<Subgraph>,
+    /// Measurement records.
+    pub records: Vec<Record>,
+}
+
+impl Dataset {
+    pub fn new(device: &str) -> Dataset {
+        Dataset { device: device.to_string(), tasks: Vec::new(), records: Vec::new() }
+    }
+
+    /// Add a task, returning its index (deduplicates by name).
+    pub fn add_task(&mut self, task: Subgraph) -> usize {
+        if let Some(i) = self.tasks.iter().position(|t| t.name == task.name) {
+            return i;
+        }
+        self.tasks.push(task);
+        self.tasks.len() - 1
+    }
+
+    pub fn push(&mut self, task_idx: usize, sched: &Schedule, gflops: f64, latency_s: f64) {
+        debug_assert!(task_idx < self.tasks.len());
+        self.records.push(Record { task_idx, knobs: sched.encode(), gflops, latency_s });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Rebuild the TensorProgram of a record (features are recomputed,
+    /// not stored — featurization is deterministic).
+    pub fn program(&self, r: &Record) -> TensorProgram {
+        TensorProgram::new(self.tasks[r.task_idx].clone(), Schedule::decode(&r.knobs))
+    }
+
+    /// Build training arrays over the whole dataset: features (row-major)
+    /// and labels normalized **per task** to `[0, 1]` by the task's best
+    /// throughput (Tenset/Ansor convention — the cost model learns
+    /// relative ranking within a task, transferable across tasks).
+    pub fn training_arrays(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut best_per_task = vec![0.0f64; self.tasks.len()];
+        for r in &self.records {
+            if r.gflops > best_per_task[r.task_idx] {
+                best_per_task[r.task_idx] = r.gflops;
+            }
+        }
+        let mut x = Vec::with_capacity(self.records.len() * N_FEATURES);
+        let mut y = Vec::with_capacity(self.records.len());
+        for r in &self.records {
+            let feats = featurize(&self.tasks[r.task_idx], &Schedule::decode(&r.knobs));
+            x.extend_from_slice(&feats);
+            let denom = best_per_task[r.task_idx];
+            y.push(if denom > 0.0 { (r.gflops / denom) as f32 } else { 0.0 });
+        }
+        (x, y)
+    }
+
+    /// Deterministic train/holdout split by record index hash.
+    pub fn split(&self, holdout_fraction: f64) -> (Dataset, Dataset) {
+        let mut train = Dataset { device: self.device.clone(), tasks: self.tasks.clone(), records: Vec::new() };
+        let mut hold = train.clone();
+        for (i, r) in self.records.iter().enumerate() {
+            if crate::util::rng::hash_unit(i as u64 ^ 0xDA7A) < holdout_fraction {
+                hold.records.push(r.clone());
+            } else {
+                train.records.push(r.clone());
+            }
+        }
+        (train, hold)
+    }
+
+    /// Per-task record counts.
+    pub fn counts_per_task(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.tasks.len()];
+        for r in &self.records {
+            counts[r.task_idx] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::program::{SpaceGenerator, SubgraphKind};
+    use crate::util::rng::Rng;
+
+    fn small_ds() -> Dataset {
+        let mut ds = Dataset::new("testdev");
+        let t = ds.add_task(Subgraph::new(
+            "t0",
+            SubgraphKind::Dense { m: 64, n: 64, k: 64 },
+        ));
+        let gen = SpaceGenerator::new(ds.tasks[t].geometry());
+        let mut rng = Rng::new(1);
+        for i in 0..20 {
+            let s = gen.sample(&mut rng);
+            ds.push(t, &s, 10.0 + i as f64, 1.0 / (10.0 + i as f64));
+        }
+        ds
+    }
+
+    #[test]
+    fn add_task_dedups_by_name() {
+        let mut ds = Dataset::new("d");
+        let a = ds.add_task(Subgraph::new("x", SubgraphKind::Dense { m: 1, n: 1, k: 1 }));
+        let b = ds.add_task(Subgraph::new("x", SubgraphKind::Dense { m: 2, n: 2, k: 2 }));
+        assert_eq!(a, b);
+        assert_eq!(ds.tasks.len(), 1);
+    }
+
+    #[test]
+    fn training_arrays_normalized_per_task() {
+        let ds = small_ds();
+        let (x, y) = ds.training_arrays();
+        assert_eq!(x.len(), ds.len() * N_FEATURES);
+        assert_eq!(y.len(), ds.len());
+        let max = y.iter().cloned().fold(0.0f32, f32::max);
+        assert!((max - 1.0).abs() < 1e-6);
+        assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn split_partitions_all_records() {
+        let ds = small_ds();
+        let (train, hold) = ds.split(0.3);
+        assert_eq!(train.len() + hold.len(), ds.len());
+        assert!(!train.is_empty());
+        // Deterministic.
+        let (t2, h2) = ds.split(0.3);
+        assert_eq!(train.len(), t2.len());
+        assert_eq!(hold.len(), h2.len());
+    }
+
+    #[test]
+    fn program_roundtrip() {
+        let ds = small_ds();
+        let p = ds.program(&ds.records[3]);
+        assert_eq!(p.schedule.encode(), ds.records[3].knobs);
+        assert_eq!(p.subgraph.name, "t0");
+    }
+}

@@ -1,0 +1,138 @@
+//! GPU architecture descriptions (the knobs of the latency simulator).
+
+/// Microarchitecture family — drives the device-specific response term
+/// and coalescing/vectorization sensitivities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchFamily {
+    Kepler,
+    Maxwell,
+    Pascal,
+    Volta,
+    Turing,
+}
+
+impl ArchFamily {
+    /// Stable id for hashing the device-specific quirk field.
+    pub fn id(&self) -> u64 {
+        match self {
+            ArchFamily::Kepler => 1,
+            ArchFamily::Maxwell => 2,
+            ArchFamily::Pascal => 3,
+            ArchFamily::Volta => 4,
+            ArchFamily::Turing => 5,
+        }
+    }
+
+    /// Sensitivity to uncoalesced access (older = worse).
+    pub fn coalescing_sensitivity(&self) -> f64 {
+        match self {
+            ArchFamily::Kepler => 1.8,
+            ArchFamily::Maxwell => 1.5,
+            ArchFamily::Pascal => 1.3,
+            ArchFamily::Volta => 1.15,
+            ArchFamily::Turing => 1.1,
+        }
+    }
+
+    /// How much efficient vectorized/128-bit access helps.
+    pub fn vector_bonus(&self) -> f64 {
+        match self {
+            ArchFamily::Kepler => 1.08,
+            ArchFamily::Maxwell => 1.12,
+            ArchFamily::Pascal => 1.18,
+            ArchFamily::Volta => 1.22,
+            ArchFamily::Turing => 1.25,
+        }
+    }
+}
+
+/// One device's architectural parameters.
+#[derive(Debug, Clone)]
+pub struct DeviceArch {
+    pub name: String,
+    pub family: ArchFamily,
+    pub sm_count: usize,
+    pub cores_per_sm: usize,
+    pub clock_ghz: f64,
+    pub mem_bw_gbs: f64,
+    pub l2_kb: usize,
+    pub shared_per_sm_kb: usize,
+    pub max_threads_per_sm: usize,
+    pub max_blocks_per_sm: usize,
+    /// Register file per SM in units of 1024 32-bit registers.
+    pub regs_per_sm_k: usize,
+    pub warp_size: usize,
+    /// Kernel launch overhead.
+    pub launch_overhead_us: f64,
+    /// Fixed virtual cost of ONE on-device measurement (compile, upload,
+    /// timing harness).  The dominant term of search time (paper §2.3);
+    /// embedded boards pay ~10×.
+    pub measure_overhead_s: f64,
+    /// Strength of the device-specific (non-transferable) response.
+    pub quirk_sigma: f64,
+    /// Measurement noise σ (log-normal).
+    pub noise_sigma: f64,
+    /// Is this an embedded / shared-memory-SoC device?
+    pub embedded: bool,
+}
+
+impl DeviceArch {
+    /// Peak f32 throughput in GFLOP/s (FMA = 2 flops/cycle/core).
+    pub fn peak_gflops(&self) -> f64 {
+        (self.sm_count * self.cores_per_sm) as f64 * self.clock_ghz * 2.0
+    }
+
+    /// Peak memory bandwidth in bytes/s.
+    pub fn mem_bw_bytes(&self) -> f64 {
+        self.mem_bw_gbs * 1e9
+    }
+
+    /// Roofline ridge point (flops/byte where compute == memory bound).
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_gflops() * 1e9 / self.mem_bw_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+
+    #[test]
+    fn peak_flops_sane() {
+        let k80 = presets::tesla_k80();
+        // One K80 die: 13 SMX × 192 cores × 0.82 GHz × 2 ≈ 4.1 TFLOPs.
+        assert!((k80.peak_gflops() - 4092.0).abs() < 200.0, "{}", k80.peak_gflops());
+        let tx2 = presets::jetson_tx2();
+        // TX2: 2 SM × 128 × 1.3 GHz × 2 ≈ 0.665 TFLOPs.
+        assert!((tx2.peak_gflops() - 665.0).abs() < 50.0, "{}", tx2.peak_gflops());
+    }
+
+    #[test]
+    fn ridge_point_orders_devices() {
+        // TX2 has weak bandwidth (58.4 GB/s LPDDR4) so its ridge point is
+        // HIGHER than the 2060's relative to its compute... actually both
+        // scale; just check positivity and plausible range.
+        for arch in presets::all() {
+            let r = arch.ridge_point();
+            assert!((1.0..200.0).contains(&r), "{}: ridge {r}", arch.name);
+        }
+    }
+
+    #[test]
+    fn embedded_devices_cost_more_to_measure() {
+        let tx2 = presets::jetson_tx2();
+        let r2060 = presets::rtx_2060();
+        assert!(tx2.measure_overhead_s > 5.0 * r2060.measure_overhead_s);
+        assert!(tx2.embedded && !r2060.embedded);
+    }
+
+    #[test]
+    fn families_have_distinct_sensitivities() {
+        assert!(
+            ArchFamily::Kepler.coalescing_sensitivity()
+                > ArchFamily::Turing.coalescing_sensitivity()
+        );
+        assert!(ArchFamily::Turing.vector_bonus() > ArchFamily::Kepler.vector_bonus());
+    }
+}

@@ -1,0 +1,26 @@
+//! Simulated measurement substrate: the `Perf()` oracle of paper Eq. 1.
+//!
+//! The paper measures tensor programs on real GPUs (K80, RTX 2060/2080,
+//! Jetson TX2, Xavier).  None of that hardware is available here, so this
+//! module provides an **analytical GPU latency simulator** with per-device
+//! architecture presets.  Design goals (DESIGN.md §2):
+//!
+//! 1. *Plausible physics*: roofline (compute vs memory bound) ×
+//!    occupancy × penalty terms (divergence, register pressure,
+//!    shared-memory oversubscription, padding waste, launch overhead).
+//! 2. *The paper's transfer structure* (Eq. 3): the latency response
+//!    decomposes into a device-shared structural term (learnable on the
+//!    source device, transferable) and a device-specific term keyed on
+//!    the architecture family (what adaptation must learn).
+//! 3. *Measurement economics*: embedded devices charge much higher
+//!    per-measurement overhead (virtual seconds), reproducing why search
+//!    efficiency gains are larger on TX2 than on RTX 2060 (paper §4.4).
+
+pub mod arch;
+pub mod clock;
+pub mod presets;
+pub mod sim;
+
+pub use arch::{ArchFamily, DeviceArch};
+pub use clock::VirtualClock;
+pub use sim::{DeviceSim, MeasureResult};

@@ -1,0 +1,195 @@
+//! Architecture presets for the devices in the paper's evaluation
+//! (§4.2: K80 source; RTX 2060 & Jetson TX2 targets; GTX 2080 testbed;
+//! §4.1: TX2 + Xavier embedded dataset) plus a couple of extras used in
+//! the ablations.  Numbers are public spec-sheet values.
+
+use super::arch::{ArchFamily, DeviceArch};
+
+/// NVIDIA Tesla K80 (one GK210 die) — the paper's source device.
+pub fn tesla_k80() -> DeviceArch {
+    DeviceArch {
+        name: "k80".into(),
+        family: ArchFamily::Kepler,
+        sm_count: 13,
+        cores_per_sm: 192,
+        clock_ghz: 0.82,
+        mem_bw_gbs: 240.0,
+        l2_kb: 1536,
+        shared_per_sm_kb: 48,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 16,
+        regs_per_sm_k: 128,
+        warp_size: 32,
+        launch_overhead_us: 8.0,
+        measure_overhead_s: 1.2,
+        quirk_sigma: 0.25,
+        noise_sigma: 0.03,
+        embedded: false,
+    }
+}
+
+/// NVIDIA GeForce RTX 2060 — desktop target (K80 → 2060 task).
+pub fn rtx_2060() -> DeviceArch {
+    DeviceArch {
+        name: "rtx2060".into(),
+        family: ArchFamily::Turing,
+        sm_count: 30,
+        cores_per_sm: 64,
+        clock_ghz: 1.68,
+        mem_bw_gbs: 336.0,
+        l2_kb: 3072,
+        shared_per_sm_kb: 64,
+        max_threads_per_sm: 1024,
+        max_blocks_per_sm: 16,
+        regs_per_sm_k: 64,
+        warp_size: 32,
+        launch_overhead_us: 4.0,
+        measure_overhead_s: 1.0,
+        quirk_sigma: 0.25,
+        noise_sigma: 0.03,
+        embedded: false,
+    }
+}
+
+/// NVIDIA GeForce RTX 2080 — the paper's desktop testbed GPU.
+pub fn rtx_2080() -> DeviceArch {
+    DeviceArch {
+        name: "rtx2080".into(),
+        family: ArchFamily::Turing,
+        sm_count: 46,
+        cores_per_sm: 64,
+        clock_ghz: 1.8,
+        mem_bw_gbs: 448.0,
+        l2_kb: 4096,
+        shared_per_sm_kb: 64,
+        max_threads_per_sm: 1024,
+        max_blocks_per_sm: 16,
+        regs_per_sm_k: 64,
+        warp_size: 32,
+        launch_overhead_us: 4.0,
+        measure_overhead_s: 1.0,
+        quirk_sigma: 0.25,
+        noise_sigma: 0.03,
+        embedded: false,
+    }
+}
+
+/// NVIDIA Jetson TX2 (Pascal, 256 CUDA cores) — embedded target
+/// (K80 → TX2 task; §4.2).
+pub fn jetson_tx2() -> DeviceArch {
+    DeviceArch {
+        name: "tx2".into(),
+        family: ArchFamily::Pascal,
+        sm_count: 2,
+        cores_per_sm: 128,
+        clock_ghz: 1.3,
+        mem_bw_gbs: 58.4,
+        l2_kb: 512,
+        shared_per_sm_kb: 64,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm_k: 64,
+        warp_size: 32,
+        launch_overhead_us: 15.0,
+        // Embedded measurement: cross-compile + flash + thermal settle;
+        // the paper reports VGG16 measurements taking ~10h on TX2.
+        measure_overhead_s: 12.0,
+        quirk_sigma: 0.3,
+        noise_sigma: 0.05,
+        embedded: true,
+    }
+}
+
+/// NVIDIA Jetson AGX Xavier (Volta, 512 cores) — the second embedded
+/// device of the §4.1 dataset.
+pub fn jetson_xavier() -> DeviceArch {
+    DeviceArch {
+        name: "xavier".into(),
+        family: ArchFamily::Volta,
+        sm_count: 8,
+        cores_per_sm: 64,
+        clock_ghz: 1.377,
+        mem_bw_gbs: 137.0,
+        l2_kb: 512,
+        shared_per_sm_kb: 96,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm_k: 64,
+        warp_size: 32,
+        launch_overhead_us: 12.0,
+        measure_overhead_s: 10.0,
+        quirk_sigma: 0.28,
+        noise_sigma: 0.05,
+        embedded: true,
+    }
+}
+
+/// GTX 1080 Ti — extra Pascal desktop for ablations.
+pub fn gtx_1080ti() -> DeviceArch {
+    DeviceArch {
+        name: "gtx1080ti".into(),
+        family: ArchFamily::Pascal,
+        sm_count: 28,
+        cores_per_sm: 128,
+        clock_ghz: 1.58,
+        mem_bw_gbs: 484.0,
+        l2_kb: 2816,
+        shared_per_sm_kb: 96,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm_k: 64,
+        warp_size: 32,
+        launch_overhead_us: 5.0,
+        measure_overhead_s: 1.0,
+        quirk_sigma: 0.25,
+        noise_sigma: 0.03,
+        embedded: false,
+    }
+}
+
+/// All presets.
+pub fn all() -> Vec<DeviceArch> {
+    vec![
+        tesla_k80(),
+        rtx_2060(),
+        rtx_2080(),
+        jetson_tx2(),
+        jetson_xavier(),
+        gtx_1080ti(),
+    ]
+}
+
+/// Look a preset up by name (CLI-facing).
+pub fn by_name(name: &str) -> Option<DeviceArch> {
+    all().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_finds_all() {
+        for arch in all() {
+            assert_eq!(by_name(&arch.name).unwrap().name, arch.name);
+        }
+        assert!(by_name("a100").is_none());
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<String> = all().iter().map(|a| a.name.clone()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn tx2_matches_paper_description() {
+        let tx2 = jetson_tx2();
+        // "Pascal GPU architecture with 256 NVIDIA CUDA cores" (§4.2).
+        assert_eq!(tx2.family, ArchFamily::Pascal);
+        assert_eq!(tx2.sm_count * tx2.cores_per_sm, 256);
+    }
+}

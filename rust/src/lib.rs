@@ -1,0 +1,38 @@
+//! # Moses — cross-device transferable cost-model adaptation for tensor
+//! # program optimization (reproduction)
+//!
+//! This crate reproduces the system described in *"Moses: Efficient
+//! Exploitation of Cross-device Transferable Features for Tensor Program
+//! Optimization"* (2022): an Ansor-style tensor-program auto-tuner whose
+//! learned cost model is transferred from a **source device** (where a
+//! large offline measurement corpus exists, à la Tenset) to a **target
+//! device** by *lottery-ticket* domain adaptation — only the
+//! domain-invariant ("transferable") parameters are fine-tuned online
+//! while the domain-variant rest decays to zero.
+//!
+//! ## Architecture (three layers, Python never on the tuning path)
+//!
+//! * **L1 (Pallas)** — the cost-model MLP forward and the masked-Adam
+//!   update are Pallas kernels (`python/compile/kernels/`).
+//! * **L2 (JAX)** — predict / train-step / ξ-saliency / loss graphs are
+//!   AOT-lowered once to HLO text (`make artifacts`).
+//! * **L3 (this crate)** — everything else: the tensor-program IR and
+//!   schedule-knob space ([`program`]), the simulated measurement
+//!   substrate ([`device`]), the DNN model zoo ([`models`]), dataset
+//!   generation ([`dataset`]), evolutionary search ([`search`]), the
+//!   Moses transfer strategies and adaptive controller ([`transfer`]),
+//!   the auto-tuning coordinator ([`coordinator`]), the XLA/PJRT runtime
+//!   that executes the AOT artifacts ([`runtime`]) and the paper's
+//!   metrics ([`metrics`]).
+
+pub mod coordinator;
+pub mod costmodel;
+pub mod dataset;
+pub mod device;
+pub mod metrics;
+pub mod models;
+pub mod program;
+pub mod runtime;
+pub mod search;
+pub mod transfer;
+pub mod util;

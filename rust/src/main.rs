@@ -1,0 +1,442 @@
+//! `moses` — CLI for the Moses reproduction.
+//!
+//! Subcommands:
+//!   tune      Tune a DNN on a (simulated) target device with a strategy.
+//!   pretrain  Pre-train the source-device cost model (Tenset-style).
+//!   dataset   Generate a program-performance dataset (paper §4.1).
+//!   eval      Evaluate a checkpoint's ranking quality on a device.
+//!   tables    Regenerate the paper's tables/figures (fig4|fig5|table1|fig6).
+//!   devices   List simulated device presets.
+//!
+//! Python never runs here: the cost model executes through AOT-compiled
+//! HLO artifacts (`make artifacts`) on the PJRT CPU client.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use moses::coordinator::{AutoTuner, BackendKind, TuneConfig};
+use moses::costmodel::layout;
+use moses::dataset::gen::{generate, GenConfig, TaskSource};
+use moses::dataset::io as ds_io;
+use moses::device::presets;
+use moses::metrics::experiments::{self, ExpConfig};
+use moses::models::zoo;
+use moses::program::{featurize, SpaceGenerator, TensorProgram, N_FEATURES};
+use moses::transfer::Strategy;
+use moses::util::cli::Flags;
+use moses::util::rng::Rng;
+use moses::util::stats;
+use moses::util::table::Table;
+
+fn backend_kind(name: &str) -> Result<BackendKind> {
+    match name {
+        "xla" => Ok(BackendKind::Xla),
+        "rust" => Ok(BackendKind::Rust),
+        other => bail!("unknown backend '{other}' (use xla|rust)"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "tune" => cmd_tune(rest),
+        "pretrain" => cmd_pretrain(rest),
+        "dataset" => cmd_dataset(rest),
+        "eval" => cmd_eval(rest),
+        "tables" => cmd_tables(rest),
+        "devices" => cmd_devices(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — run `moses help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "moses — cross-device cost-model adaptation for tensor program optimization\n\n\
+         Usage: moses <command> [flags]\n\n\
+         Commands:\n\
+         \x20 tune      Tune a DNN on a simulated target device\n\
+         \x20 pretrain  Pre-train the source-device (K80) cost model\n\
+         \x20 dataset   Generate a program-performance dataset (paper §4.1)\n\
+         \x20 eval      Evaluate a checkpoint's ranking quality\n\
+         \x20 tables    Regenerate paper tables/figures (fig4|fig5|table1|fig6|all)\n\
+         \x20 devices   List simulated device presets\n\n\
+         Run `moses <command> --help` for flags."
+    );
+}
+
+// ---------------------------------------------------------------- tune ----
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let flags = Flags::new()
+        .opt("model", "squeezenet", "DNN to tune (resnet18|mobilenet|squeezenet|bert|mobilevit)")
+        .opt("target", "tx2", "target device preset")
+        .opt("strategy", "moses", "moses|tenset-finetune|tenset-pretrain|ansor-random|random")
+        .opt("trials", "64", "candidate trials per task")
+        .opt("batch", "8", "measurements per round")
+        .opt("seed", "0", "RNG seed")
+        .opt("backend", "xla", "cost-model backend (xla|rust)")
+        .opt("pretrained", "", "checkpoint path (default: auto-pretrain+cache)")
+        .switch("verbose", "per-task output");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", flags.help("tune", "Tune a DNN on a simulated target device."));
+        return Ok(());
+    }
+    let p = flags.parse(args)?;
+
+    let target = presets::by_name(p.get("target"))
+        .with_context(|| format!("unknown device '{}' — see `moses devices`", p.get("target")))?;
+    let strategy = Strategy::from_name(p.get("strategy"))
+        .with_context(|| format!("unknown strategy '{}'", p.get("strategy")))?;
+    let model =
+        zoo::by_name(p.get("model")).with_context(|| format!("unknown model '{}'", p.get("model")))?;
+    let backend = backend_kind(p.get("backend"))?;
+
+    let mut exp = ExpConfig { backend, seed: p.get_u64("seed")?, ..ExpConfig::default() };
+    if backend == BackendKind::Rust {
+        exp.rust_pred_batch = 256;
+        exp.rust_train_batch = 128;
+    }
+    let pretrained: Option<Vec<f32>> = if strategy.uses_pretrained() {
+        let path = p.get("pretrained");
+        Some(if path.is_empty() {
+            println!("(pre-training source cost model on simulated K80 — cached)");
+            experiments::pretrained_source_checkpoint(&exp)?
+        } else {
+            layout::load_checkpoint(&PathBuf::from(path))?
+        })
+    } else {
+        None
+    };
+
+    let cfg = TuneConfig {
+        trials_per_task: p.get_usize("trials")?,
+        measure_batch: p.get_usize("batch")?,
+        strategy: strategy.clone(),
+        seed: p.get_u64("seed")?,
+        backend,
+        ..TuneConfig::default()
+    };
+    let cost_model = moses::transfer::init_model(
+        &strategy,
+        exp.backend_arc()?,
+        pretrained.as_deref(),
+        &mut Rng::new(cfg.seed),
+    );
+    let mut tuner = AutoTuner::with_model(&cfg, target.clone(), cost_model);
+
+    println!(
+        "tuning {} on {} with {} ({} trials/task, backend {})",
+        model.name,
+        target.name,
+        strategy.name(),
+        cfg.trials_per_task,
+        p.get("backend"),
+    );
+    let t0 = std::time::Instant::now();
+    let session = tuner.tune(&model.tasks())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    if p.get_bool("verbose") {
+        let mut t = Table::new(
+            "Per-task results",
+            &["task", "default ms", "tuned ms", "speedup", "measured", "pred-only"],
+        );
+        for r in &session.tasks {
+            t.row(vec![
+                r.task.name.clone(),
+                format!("{:.3}", r.default_latency_s * 1e3),
+                format!("{:.3}", r.best_latency_s * 1e3),
+                format!("{:.2}x", r.speedup()),
+                r.measured.to_string(),
+                r.predicted_only.to_string(),
+            ]);
+        }
+        t.print();
+    }
+
+    println!(
+        "\nend-to-end latency : {:.3} ms (default {:.3} ms, {:.2}x speedup)",
+        session.total_best_latency_ms(),
+        session.total_default_latency_ms(),
+        session.speedup()
+    );
+    println!(
+        "virtual search time: {:.1} s ({} measurements)",
+        session.search_time_s(),
+        session.total_measurements()
+    );
+    println!("harness wall time  : {wall:.1} s");
+    Ok(())
+}
+
+// ----------------------------------------------------------- pretrain ----
+
+fn cmd_pretrain(args: &[String]) -> Result<()> {
+    let flags = Flags::new()
+        .opt("out", "artifacts/k80_pretrained.bin", "output checkpoint path")
+        .opt("source", "k80", "source device preset")
+        .opt("tasks", "40", "random tasks in the corpus")
+        .opt("records", "96", "records per task")
+        .opt("epochs", "8", "training epochs")
+        .opt("seed", "0", "RNG seed")
+        .opt("backend", "xla", "cost-model backend (xla|rust)");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", flags.help("pretrain", "Pre-train the source-device cost model."));
+        return Ok(());
+    }
+    let p = flags.parse(args)?;
+    let device = presets::by_name(p.get("source"))
+        .with_context(|| format!("unknown device '{}'", p.get("source")))?;
+    let cfg = ExpConfig {
+        backend: backend_kind(p.get("backend"))?,
+        seed: p.get_u64("seed")?,
+        pretrain_tasks: p.get_usize("tasks")?,
+        pretrain_records_per_task: p.get_usize("records")?,
+        pretrain_epochs: p.get_usize("epochs")?,
+        ..ExpConfig::default()
+    };
+    println!(
+        "pre-training on {}: {} tasks x {} records, {} epochs",
+        device.name, cfg.pretrain_tasks, cfg.pretrain_records_per_task, cfg.pretrain_epochs
+    );
+    let t0 = std::time::Instant::now();
+    let params = experiments::pretrain_on(&device, &cfg)?;
+    let out = PathBuf::from(p.get("out"));
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    layout::save_checkpoint(&out, &params)?;
+    println!(
+        "wrote {} ({} params) in {:.1}s",
+        out.display(),
+        params.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------ dataset ----
+
+fn cmd_dataset(args: &[String]) -> Result<()> {
+    let flags = Flags::new()
+        .opt("devices", "tx2,xavier", "comma-separated device presets")
+        .opt("tasks", "50", "random tasks ('over 50 DNN models' stand-in)")
+        .opt("records", "200", "records per task")
+        .opt("zoo", "true", "also include the evaluation model zoo tasks")
+        .opt("seed", "0", "RNG seed")
+        .opt("out", "artifacts", "output directory");
+    if args.iter().any(|a| a == "--help") {
+        print!(
+            "{}",
+            flags.help("dataset", "Generate program-performance datasets (paper §4.1).")
+        );
+        return Ok(());
+    }
+    let p = flags.parse(args)?;
+    let out_dir = PathBuf::from(p.get("out"));
+    std::fs::create_dir_all(&out_dir)?;
+    for name in p.get_list("devices") {
+        let device =
+            presets::by_name(&name).with_context(|| format!("unknown device '{name}'"))?;
+        let cfg = GenConfig {
+            records_per_task: p.get_usize("records")?,
+            seed: p.get_u64("seed")?,
+        };
+        let mut ds =
+            generate(&device, TaskSource::Random { count: p.get_usize("tasks")? }, &cfg);
+        if p.get_bool("zoo") {
+            let zoo_ds = generate(&device, TaskSource::Zoo, &cfg);
+            for r in &zoo_ds.records {
+                let idx = ds.add_task(zoo_ds.tasks[r.task_idx].clone());
+                let sched = moses::program::Schedule::decode(&r.knobs);
+                ds.push(idx, &sched, r.gflops, r.latency_s);
+            }
+        }
+        let path = out_dir.join(format!("{name}.moses-ds"));
+        ds_io::save(&ds, &path)?;
+        println!("wrote {}: {} tasks, {} records", path.display(), ds.tasks.len(), ds.len());
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- eval ----
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let flags = Flags::new()
+        .req("checkpoint", "checkpoint to evaluate")
+        .opt("device", "rtx2060", "device whose labels to rank against")
+        .opt("tasks", "8", "random eval tasks")
+        .opt("records", "64", "records per task")
+        .opt("seed", "123", "RNG seed")
+        .opt("backend", "xla", "cost-model backend (xla|rust)");
+    if args.iter().any(|a| a == "--help") {
+        print!(
+            "{}",
+            flags.help("eval", "Evaluate a checkpoint's ranking quality on a device.")
+        );
+        return Ok(());
+    }
+    let p = flags.parse(args)?;
+    let device = presets::by_name(p.get("device"))
+        .with_context(|| format!("unknown device '{}'", p.get("device")))?;
+    let params = layout::load_checkpoint(&PathBuf::from(p.get("checkpoint")))?;
+    let exp = ExpConfig { backend: backend_kind(p.get("backend"))?, ..ExpConfig::default() };
+    let model = moses::costmodel::CostModel::with_params(exp.backend_arc()?, params);
+
+    let cfg = GenConfig { records_per_task: p.get_usize("records")?, seed: p.get_u64("seed")? };
+    let ds = generate(&device, TaskSource::Random { count: p.get_usize("tasks")? }, &cfg);
+    let mut t = Table::new(
+        &format!("Ranking quality on {}", device.name),
+        &["task", "spearman", "pair-acc", "top-8 recall"],
+    );
+    let mut spearman_all = Vec::new();
+    for (i, task) in ds.tasks.iter().enumerate() {
+        let recs: Vec<&moses::dataset::Record> =
+            ds.records.iter().filter(|r| r.task_idx == i).collect();
+        let mut x = Vec::with_capacity(recs.len() * N_FEATURES);
+        let mut truth = Vec::with_capacity(recs.len());
+        for r in &recs {
+            x.extend_from_slice(&featurize(task, &moses::program::Schedule::decode(&r.knobs)));
+            truth.push(r.gflops);
+        }
+        let preds: Vec<f64> = model.predict(&x, recs.len())?.iter().map(|&v| v as f64).collect();
+        let rho = stats::spearman(&preds, &truth);
+        spearman_all.push(rho);
+        t.row(vec![
+            task.name.clone(),
+            format!("{rho:.3}"),
+            format!("{:.3}", stats::pair_accuracy(&preds, &truth)),
+            format!("{:.3}", stats::top_k_recall(&preds, &truth, 8)),
+        ]);
+    }
+    t.print();
+    println!("mean spearman: {:.3}", stats::Summary::of(&spearman_all).mean);
+    Ok(())
+}
+
+// ------------------------------------------------------------- tables ----
+
+fn cmd_tables(args: &[String]) -> Result<()> {
+    let flags = Flags::new()
+        .opt("exp", "all", "fig4|fig5|table1|fig6|all")
+        .opt("trials-small", "48", "small-tier trials per task (paper: 200)")
+        .opt("trials-large", "192", "large-tier trials per task (paper: 20000/5000)")
+        .opt("seed", "0", "RNG seed")
+        .opt("backend", "xla", "cost-model backend (xla|rust)")
+        .opt("fig6-model", "mobilenet", "model for the ratio ablation")
+        .opt("fig6-seeds", "0,1,2", "seeds for the ratio ablation")
+        .opt("out", "", "also append markdown to this file");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", flags.help("tables", "Regenerate the paper's tables and figures."));
+        return Ok(());
+    }
+    let p = flags.parse(args)?;
+    let cfg = ExpConfig {
+        backend: backend_kind(p.get("backend"))?,
+        seed: p.get_u64("seed")?,
+        trials_small: p.get_usize("trials-small")?,
+        trials_large: p.get_usize("trials-large")?,
+        ..ExpConfig::default()
+    };
+    let exp = p.get("exp").to_string();
+    let mut rendered = String::new();
+    let t0 = std::time::Instant::now();
+
+    if exp == "fig4" || exp == "fig5" || exp == "all" {
+        let targets = [presets::rtx_2060(), presets::jetson_tx2()];
+        println!(
+            "running (target × model × strategy) grid at {} trials/task ...",
+            cfg.trials_small
+        );
+        let outs = experiments::run_grid(&cfg, cfg.trials_small, &targets)?;
+        let names: Vec<&str> = targets.iter().map(|t| t.name.as_str()).collect();
+        if exp == "fig4" || exp == "all" {
+            let t = experiments::fig4_table(&outs, &names);
+            t.print();
+            rendered.push_str(&t.to_markdown());
+        }
+        if exp == "fig5" || exp == "all" {
+            let t = experiments::fig5_table(&outs, &names);
+            t.print();
+            rendered.push_str(&t.to_markdown());
+        }
+    }
+    if exp == "table1" || exp == "all" {
+        println!(
+            "running Table 1 grid (small {} / large {} trials) ...",
+            cfg.trials_small, cfg.trials_large
+        );
+        let t = experiments::table1(&cfg)?;
+        t.print();
+        rendered.push_str(&t.to_markdown());
+    }
+    if exp == "fig6" || exp == "all" {
+        let seeds: Vec<u64> =
+            p.get_list("fig6-seeds").iter().map(|s| s.parse().unwrap_or(0)).collect();
+        println!("running Fig 6 ratio ablation ({} seeds) ...", seeds.len());
+        let t = experiments::fig6_table(&cfg, p.get("fig6-model"), &seeds)?;
+        t.print();
+        rendered.push_str(&t.to_markdown());
+    }
+    println!("(tables generated in {:.1}s)", t0.elapsed().as_secs_f64());
+
+    let out = p.get("out");
+    if !out.is_empty() {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(out)?;
+        writeln!(f, "{rendered}")?;
+        println!("appended markdown to {out}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ devices ----
+
+fn cmd_devices() -> Result<()> {
+    let mut t = Table::new(
+        "Simulated device presets",
+        &["name", "family", "SMs", "cores", "peak GFLOPs", "BW GB/s", "measure cost s", "embedded"],
+    );
+    for a in presets::all() {
+        t.row(vec![
+            a.name.clone(),
+            format!("{:?}", a.family),
+            a.sm_count.to_string(),
+            (a.sm_count * a.cores_per_sm).to_string(),
+            format!("{:.0}", a.peak_gflops()),
+            format!("{:.0}", a.mem_bw_gbs),
+            format!("{:.1}", a.measure_overhead_s),
+            if a.embedded { "yes".into() } else { "no".to_string() },
+        ]);
+    }
+    t.print();
+    // Show one example tensor program space like the paper's Fig. 1.
+    let sub = zoo::resnet18().tasks()[0].clone();
+    let g = sub.geometry();
+    let sched = moses::program::Schedule::default_for(&g);
+    let prog = TensorProgram::new(sub, sched);
+    println!(
+        "example task: {} — space size ≈ {:.0} raw configs/task, features {}d",
+        prog.subgraph.name,
+        SpaceGenerator::new(g).space_size(),
+        N_FEATURES
+    );
+    Ok(())
+}

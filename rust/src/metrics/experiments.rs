@@ -1,0 +1,511 @@
+//! The experiment harness: regenerates every table and figure of the
+//! paper's evaluation (§4) against the simulated testbed.
+//!
+//! | paper artifact | function |
+//! |----------------|----------|
+//! | Fig. 4 (inference-latency gains)  | [`run_fig4`] |
+//! | Fig. 5 (search-efficiency gains)  | [`run_fig5`] |
+//! | Table 1 (CMAT small/large trials) | [`run_table1`] |
+//! | Fig. 6 (transferable-ratio ablation) | [`run_fig6`] |
+//!
+//! Scaling: trial counts are reduced vs the paper (200/20000/5000 →
+//! configurable, defaults 48/192) so a full regeneration runs in minutes
+//! on CPU; the comparative *shape* is the reproduction target
+//! (DESIGN.md §4).  All runs are deterministic given `seed`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{AutoTuner, BackendKind, Session, TuneConfig};
+use crate::costmodel::{layout, Backend, CostModel, Mask, RustBackend, XlaBackend};
+use crate::dataset::gen::{self, GenConfig, TaskSource};
+use crate::device::{presets, DeviceArch};
+use crate::metrics;
+use crate::models::zoo;
+use crate::runtime::Engine;
+use crate::transfer::{MosesConfig, Strategy};
+use crate::util::rng::Rng;
+use crate::util::table::{pct_gain, Table};
+
+/// Harness-wide configuration.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    pub backend: BackendKind,
+    pub seed: u64,
+    /// Trials per task, small tier (paper: 200).
+    pub trials_small: usize,
+    /// Trials per task, large tier (paper: 20000 on 2060 / 5000 on TX2).
+    pub trials_large: usize,
+    /// Measure batch per round.
+    pub measure_batch: usize,
+    /// Pre-training corpus: random tasks × records per task.
+    pub pretrain_tasks: usize,
+    pub pretrain_records_per_task: usize,
+    pub pretrain_epochs: usize,
+    /// Where to cache the pre-trained source checkpoint.
+    pub checkpoint_dir: PathBuf,
+    /// Rust-backend batch geometry (tests shrink these; the XLA backend
+    /// geometry is fixed by the AOT artifacts).
+    pub rust_pred_batch: usize,
+    pub rust_train_batch: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            backend: BackendKind::Xla,
+            seed: 0,
+            trials_small: 48,
+            trials_large: 192,
+            measure_batch: 8,
+            pretrain_tasks: 40,
+            pretrain_records_per_task: 96,
+            pretrain_epochs: 8,
+            checkpoint_dir: Engine::default_dir(),
+            rust_pred_batch: 512,
+            rust_train_batch: 256,
+        }
+    }
+}
+
+thread_local! {
+    // One PJRT engine per thread for the whole experiment run: loading +
+    // compiling the artifacts takes seconds, and a grid runs ~100
+    // sessions.  (The xla crate is Rc-based, hence thread-local rather
+    // than global.)
+    static XLA_BACKEND_CACHE: std::cell::RefCell<Option<Arc<XlaBackend>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+impl ExpConfig {
+    pub fn backend_arc(&self) -> Result<Arc<dyn Backend>> {
+        Ok(match self.backend {
+            BackendKind::Rust => Arc::new(RustBackend {
+                pred_batch: self.rust_pred_batch,
+                train_batch: self.rust_train_batch,
+            }),
+            BackendKind::Xla => XLA_BACKEND_CACHE.with(|cell| -> Result<Arc<dyn Backend>> {
+                let mut slot = cell.borrow_mut();
+                if slot.is_none() {
+                    let dir = Engine::default_dir();
+                    *slot = Some(Arc::new(XlaBackend {
+                        engine: Arc::new(Engine::load(&dir).context("loading AOT artifacts")?),
+                    }));
+                }
+                Ok(slot.as_ref().unwrap().clone())
+            })?,
+        })
+    }
+}
+
+/// Get (or build and cache) the source-device (K80) pre-trained
+/// checkpoint: generate a Tenset-like corpus on the simulated K80 and
+/// train the cost model offline (paper Step 1, §3.6).
+pub fn pretrained_source_checkpoint(cfg: &ExpConfig) -> Result<Vec<f32>> {
+    let path = cfg.checkpoint_dir.join(format!(
+        "k80_pretrained_s{}_t{}_r{}_e{}.bin",
+        cfg.seed, cfg.pretrain_tasks, cfg.pretrain_records_per_task, cfg.pretrain_epochs
+    ));
+    if path.exists() {
+        if let Ok(p) = layout::load_checkpoint(&path) {
+            return Ok(p);
+        }
+    }
+    let params = pretrain_on(&presets::tesla_k80(), cfg)?;
+    std::fs::create_dir_all(&cfg.checkpoint_dir).ok();
+    layout::save_checkpoint(&path, &params).ok(); // cache best-effort
+    Ok(params)
+}
+
+/// Train a fresh cost model on a generated corpus for `device`.
+pub fn pretrain_on(device: &DeviceArch, cfg: &ExpConfig) -> Result<Vec<f32>> {
+    let ds = gen::generate(
+        device,
+        TaskSource::Random { count: cfg.pretrain_tasks },
+        &GenConfig { records_per_task: cfg.pretrain_records_per_task, seed: cfg.seed },
+    );
+    let (x, y) = ds.training_arrays();
+    let backend = cfg.backend_arc()?;
+    let mut rng = Rng::new(cfg.seed ^ 0x9E37);
+    let mut model = CostModel::new(backend, &mut rng);
+    let mask = Mask::all_ones(layout::N_PARAMS);
+    for _ in 0..cfg.pretrain_epochs {
+        model.train_epoch(&x, &y, &mask, 1e-3, 0.0, &mut rng)?;
+    }
+    Ok(model.params.clone())
+}
+
+/// Run one tuning session: `model_name` on `target` with `strategy`.
+pub fn run_session(
+    cfg: &ExpConfig,
+    pretrained: &[f32],
+    model_name: &str,
+    target: &DeviceArch,
+    strategy: Strategy,
+    trials: usize,
+) -> Result<Session> {
+    let model = zoo::by_name(model_name)
+        .with_context(|| format!("unknown model {model_name}"))?;
+    let tune_cfg = TuneConfig {
+        trials_per_task: trials,
+        measure_batch: cfg.measure_batch,
+        strategy: strategy.clone(),
+        seed: cfg.seed ^ crate::util::rng::hash_bytes(
+            format!("{model_name}/{}/{}/{trials}", target.name, strategy.name()).as_bytes(),
+        ),
+        backend: cfg.backend,
+        ..TuneConfig::default()
+    };
+    let backend = cfg.backend_arc()?;
+    let mut rng = Rng::new(tune_cfg.seed);
+    let cost_model = crate::transfer::init_model(
+        &strategy,
+        backend,
+        strategy.uses_pretrained().then_some(pretrained),
+        &mut rng,
+    );
+    let mut tuner = AutoTuner::with_model(&tune_cfg, target.clone(), cost_model);
+    tuner.tune(&model.tasks())
+}
+
+/// The four evaluation DNNs (paper §4.2) in Table-1 column order
+/// (S, R, M, B).
+pub const EVAL_MODELS: [&str; 4] = ["squeezenet", "resnet18", "mobilenet", "bert"];
+/// The four compared strategies (paper §4.4 baselines 2-4 + Moses).
+pub fn eval_strategies() -> Vec<Strategy> {
+    vec![
+        Strategy::AnsorRandom,
+        Strategy::TensetPretrain,
+        Strategy::TensetFinetune,
+        Strategy::Moses(MosesConfig::default()),
+    ]
+}
+
+/// One (pair, model, strategy) outcome used by fig4/fig5/table1.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub target: String,
+    pub model: String,
+    pub strategy: String,
+    pub latency_ms: f64,
+    pub search_time_s: f64,
+    pub measurements: usize,
+    pub raw_latency_ms: f64,
+}
+
+/// Run the full (target × model × strategy) grid once.
+pub fn run_grid(cfg: &ExpConfig, trials: usize, targets: &[DeviceArch]) -> Result<Vec<Outcome>> {
+    let pretrained = pretrained_source_checkpoint(cfg)?;
+    let mut out = Vec::new();
+    for target in targets {
+        for model in EVAL_MODELS {
+            for strategy in eval_strategies() {
+                let session =
+                    run_session(cfg, &pretrained, model, target, strategy.clone(), trials)?;
+                out.push(Outcome {
+                    target: target.name.clone(),
+                    model: model.to_string(),
+                    strategy: strategy.name().to_string(),
+                    latency_ms: session.total_best_latency_ms(),
+                    search_time_s: session.search_time_s(),
+                    measurements: session.total_measurements(),
+                    raw_latency_ms: session.total_default_latency_ms(),
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn find<'a>(outs: &'a [Outcome], target: &str, model: &str, strategy: &str) -> &'a Outcome {
+    outs.iter()
+        .find(|o| o.target == target && o.model == model && o.strategy == strategy)
+        .expect("grid outcome missing")
+}
+
+/// Fig. 4: end-to-end inference-latency gains of Moses over the
+/// baselines, per transfer pair and model.
+pub fn fig4_table(outs: &[Outcome], targets: &[&str]) -> Table {
+    let mut t = Table::new(
+        "Fig 4 — end-to-end inference latency (ms) and Moses gain",
+        &[
+            "pair", "model", "raw", "ansor-random", "tenset-pretrain", "tenset-finetune",
+            "moses", "moses vs finetune", "moses vs pretrain",
+        ],
+    );
+    for target in targets {
+        for model in EVAL_MODELS {
+            let ar = find(outs, target, model, "ansor-random");
+            let tp = find(outs, target, model, "tenset-pretrain");
+            let tf = find(outs, target, model, "tenset-finetune");
+            let mo = find(outs, target, model, "moses");
+            t.row(vec![
+                format!("k80->{target}"),
+                model.to_string(),
+                format!("{:.2}", mo.raw_latency_ms),
+                format!("{:.2}", ar.latency_ms),
+                format!("{:.2}", tp.latency_ms),
+                format!("{:.2}", tf.latency_ms),
+                format!("{:.2}", mo.latency_ms),
+                pct_gain(tf.latency_ms / mo.latency_ms),
+                pct_gain(tp.latency_ms / mo.latency_ms),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 5: auto-tuning search-efficiency gains of Moses over baselines.
+pub fn fig5_table(outs: &[Outcome], targets: &[&str]) -> Table {
+    let mut t = Table::new(
+        "Fig 5 — search time (virtual s) and Moses efficiency gain",
+        &[
+            "pair", "model", "ansor-random", "tenset-pretrain", "tenset-finetune", "moses",
+            "moses vs finetune", "moses vs ansor",
+        ],
+    );
+    for target in targets {
+        for model in EVAL_MODELS {
+            let ar = find(outs, target, model, "ansor-random");
+            let tp = find(outs, target, model, "tenset-pretrain");
+            let tf = find(outs, target, model, "tenset-finetune");
+            let mo = find(outs, target, model, "moses");
+            t.row(vec![
+                format!("k80->{target}"),
+                model.to_string(),
+                format!("{:.0}", ar.search_time_s),
+                format!("{:.0}", tp.search_time_s),
+                format!("{:.0}", tf.search_time_s),
+                format!("{:.0}", mo.search_time_s),
+                pct_gain(metrics::search_gain(tf.search_time_s, mo.search_time_s)),
+                pct_gain(metrics::search_gain(ar.search_time_s, mo.search_time_s)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table 1: CMAT of Moses vs Tenset-Finetune under small/large trials.
+/// Columns follow the paper: 2060-S/R/M/B and TX2-S/R/M.
+pub fn table1(cfg: &ExpConfig) -> Result<Table> {
+    let pairs_2060: Vec<&str> = vec!["squeezenet", "resnet18", "mobilenet", "bert"];
+    let pairs_tx2: Vec<&str> = vec!["squeezenet", "resnet18", "mobilenet"];
+    let pretrained = pretrained_source_checkpoint(cfg)?;
+
+    let mut header = vec!["CMAT (%)".to_string()];
+    for m in &pairs_2060 {
+        header.push(format!("2060-{}", m.chars().next().unwrap().to_ascii_uppercase()));
+    }
+    for m in &pairs_tx2 {
+        header.push(format!("TX2-{}", m.chars().next().unwrap().to_ascii_uppercase()));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 1 — CMAT vs Tenset-Finetune", &header_refs);
+
+    for (label, trials) in
+        [("Small Trials", cfg.trials_small), ("Large Trials", cfg.trials_large)]
+    {
+        let mut row = vec![format!("{label} ({trials})")];
+        for (target, models) in
+            [(presets::rtx_2060(), &pairs_2060), (presets::jetson_tx2(), &pairs_tx2)]
+        {
+            for model in models {
+                let tf = run_session(
+                    cfg, &pretrained, model, &target, Strategy::TensetFinetune, trials,
+                )?;
+                let mo = run_session(
+                    cfg,
+                    &pretrained,
+                    model,
+                    &target,
+                    Strategy::Moses(MosesConfig::default()),
+                    trials,
+                )?;
+                let score = metrics::cmat(
+                    metrics::search_gain(tf.search_time_s(), mo.search_time_s()),
+                    metrics::latency_reduction(
+                        tf.total_best_latency_ms(),
+                        mo.total_best_latency_ms(),
+                    ),
+                );
+                row.push(format!("{score:.1}"));
+            }
+        }
+        t.row(row);
+    }
+    Ok(t)
+}
+
+/// Fig. 6: transferable-ratio ablation {0.01, 0.3, 0.5, 0.7} (mean ±
+/// std of the Moses latency gain vs Tenset-Finetune across seeds).
+pub fn fig6_table(cfg: &ExpConfig, model: &str, seeds: &[u64]) -> Result<Table> {
+    let target = presets::rtx_2060();
+    let mut t = Table::new(
+        &format!("Fig 6 — transferable-ratio ablation ({model}, k80->2060)"),
+        &["ratio", "latency gain vs finetune (mean)", "std", "CMAT (mean)"],
+    );
+    for ratio in [0.01, 0.3, 0.5, 0.7] {
+        let mut gains = Vec::new();
+        let mut cmats = Vec::new();
+        for &seed in seeds {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            let pretrained = pretrained_source_checkpoint(&c)?;
+            let tf = run_session(
+                &c, &pretrained, model, &target, Strategy::TensetFinetune, c.trials_small,
+            )?;
+            let mo = run_session(
+                &c,
+                &pretrained,
+                model,
+                &target,
+                Strategy::Moses(MosesConfig { ratio: Some(ratio), ..MosesConfig::default() }),
+                c.trials_small,
+            )?;
+            let red = metrics::latency_reduction(
+                tf.total_best_latency_ms(),
+                mo.total_best_latency_ms(),
+            );
+            gains.push(red);
+            cmats.push(metrics::cmat(
+                metrics::search_gain(tf.search_time_s(), mo.search_time_s()),
+                red,
+            ));
+        }
+        let gs = crate::util::stats::Summary::of(&gains);
+        let cs = crate::util::stats::Summary::of(&cmats);
+        t.row(vec![
+            format!("{ratio}"),
+            pct_gain(gs.mean),
+            format!("{:.1}%", gs.std * 100.0),
+            format!("{:.1}", cs.mean),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Component ablation (design-choice study, DESIGN.md §4): which part of
+/// Moses buys what?  Variants:
+///  * full Moses (mask + decay + AC);
+///  * no-AC (mask + decay, measure every round like finetune);
+///  * no-mask (AC only on top of vanilla fine-tuning);
+///  * no-decay (mask but wd = 0 — variant params frozen instead).
+/// All compared against Tenset-Finetune on one (model, pair).
+pub fn ablation_table(cfg: &ExpConfig, model: &str) -> Result<Table> {
+    let target = presets::jetson_tx2();
+    let pretrained = pretrained_source_checkpoint(cfg)?;
+    let base = MosesConfig::default();
+    let variants: Vec<(&str, Strategy)> = vec![
+        ("tenset-finetune (ref)", Strategy::TensetFinetune),
+        ("moses (full)", Strategy::Moses(base)),
+        (
+            "moses no-AC",
+            Strategy::Moses(MosesConfig {
+                ac_cv_threshold: 0.0, // CV never below 0 -> never terminates
+                train_fraction: 1.0,
+                ..base
+            }),
+        ),
+        (
+            "moses no-mask",
+            Strategy::Moses(MosesConfig { ratio: Some(1.0), weight_decay: 0.0, ..base }),
+        ),
+        ("moses no-decay", Strategy::Moses(MosesConfig { weight_decay: 0.0, ..base })),
+    ];
+    let reference = run_session(
+        cfg, &pretrained, model, &target, Strategy::TensetFinetune, cfg.trials_small,
+    )?;
+    let mut t = Table::new(
+        &format!("Ablation — Moses components ({model}, k80->tx2)"),
+        &["variant", "latency ms", "search s", "measurements", "CMAT vs finetune"],
+    );
+    for (label, strategy) in variants {
+        let s = run_session(cfg, &pretrained, model, &target, strategy, cfg.trials_small)?;
+        let cmat = metrics::cmat(
+            metrics::search_gain(reference.search_time_s(), s.search_time_s()),
+            metrics::latency_reduction(
+                reference.total_best_latency_ms(),
+                s.total_best_latency_ms(),
+            ),
+        );
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", s.total_best_latency_ms()),
+            format!("{:.0}", s.search_time_s()),
+            s.total_measurements().to_string(),
+            format!("{cmat:.1}"),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            backend: BackendKind::Rust,
+            trials_small: 8,
+            trials_large: 16,
+            measure_batch: 4,
+            pretrain_tasks: 3,
+            pretrain_records_per_task: 16,
+            pretrain_epochs: 1,
+            checkpoint_dir: std::env::temp_dir().join("moses_exp_test"),
+            seed: 1,
+            rust_pred_batch: 64,
+            rust_train_batch: 64,
+        }
+    }
+
+    #[test]
+    fn pretrain_checkpoint_caches() {
+        let cfg = tiny_cfg();
+        let _ = std::fs::remove_dir_all(&cfg.checkpoint_dir);
+        let a = pretrained_source_checkpoint(&cfg).unwrap();
+        assert_eq!(a.len(), layout::N_PARAMS);
+        // Second call loads the cache (same result).
+        let b = pretrained_source_checkpoint(&cfg).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn run_session_executes_every_strategy() {
+        let cfg = tiny_cfg();
+        let pre = pretrained_source_checkpoint(&cfg).unwrap();
+        let target = presets::rtx_2060();
+        for strategy in eval_strategies() {
+            let s = run_session(&cfg, &pre, "squeezenet", &target, strategy.clone(), 8)
+                .unwrap();
+            assert!(s.total_best_latency_ms() > 0.0, "{}", strategy.name());
+            assert!(s.search_time_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn cmat_row_computes() {
+        // End-to-end smoke of the table-1 math on one tiny cell.
+        let cfg = tiny_cfg();
+        let pre = pretrained_source_checkpoint(&cfg).unwrap();
+        let target = presets::jetson_tx2();
+        let tf =
+            run_session(&cfg, &pre, "mobilenet", &target, Strategy::TensetFinetune, 8).unwrap();
+        let mo = run_session(
+            &cfg,
+            &pre,
+            "mobilenet",
+            &target,
+            Strategy::Moses(MosesConfig::default()),
+            8,
+        )
+        .unwrap();
+        let c = metrics::cmat(
+            metrics::search_gain(tf.search_time_s(), mo.search_time_s()),
+            metrics::latency_reduction(tf.total_best_latency_ms(), mo.total_best_latency_ms()),
+        );
+        assert!(c.is_finite());
+    }
+}

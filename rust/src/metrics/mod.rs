@@ -1,0 +1,52 @@
+//! Evaluation metrics (paper §4.3): end-to-end latency/throughput,
+//! search-efficiency gain, and the CMAT composite score.
+
+pub mod experiments;
+
+/// CMAT — Cost Model & Auto-tuning efficiency gain score (paper §4.3):
+///
+/// ```text
+/// CMAT = (GainOnSearchEfficiency × ReductionOnTunedModelLatency − 1) × 100%
+/// ```
+///
+/// where both factors are ratios vs a baseline (>1 means better than the
+/// baseline).  A method that is 1.4× faster to search and reaches 1.05×
+/// lower latency scores (1.4·1.05 − 1)·100 = 47.
+pub fn cmat(search_efficiency_gain: f64, latency_reduction: f64) -> f64 {
+    (search_efficiency_gain * latency_reduction - 1.0) * 100.0
+}
+
+/// Search-efficiency gain of `ours` vs `baseline` (both virtual
+/// seconds; >1 == we search faster).
+pub fn search_gain(baseline_time_s: f64, our_time_s: f64) -> f64 {
+    baseline_time_s / our_time_s.max(1e-12)
+}
+
+/// Latency reduction of `ours` vs `baseline` (>1 == our tuned model is
+/// faster).
+pub fn latency_reduction(baseline_latency: f64, our_latency: f64) -> f64 {
+    baseline_latency / our_latency.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmat_matches_paper_example_shape() {
+        // Paper §4.4: Tenset 15% efficiency gain but CMAT −14.75% ⇒
+        // latency reduction must have been < 1.
+        let c = cmat(1.15, 0.7413);
+        assert!((c - (-14.75)).abs() < 0.3, "{c}");
+        // Break-even.
+        assert_eq!(cmat(1.0, 1.0), 0.0);
+        // Better on both axes.
+        assert!(cmat(1.4, 1.1) > 40.0);
+    }
+
+    #[test]
+    fn gains_are_ratios() {
+        assert!((search_gain(10.0, 5.0) - 2.0).abs() < 1e-12);
+        assert!((latency_reduction(4e-3, 2e-3) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,104 @@
+//! DNN model zoo: the workloads of the paper's evaluation (§4.2 —
+//! ResNet-18, MobileNet, BERT-base, SqueezeNet) expressed as lists of
+//! tuning tasks (subgraphs), the way TVM's graph-level optimizer hands
+//! them to the tensor-level tuner.
+
+pub mod zoo;
+
+use crate::program::Subgraph;
+
+/// A DNN model = an ordered list of tuning tasks.
+#[derive(Debug, Clone)]
+pub struct DnnModel {
+    pub name: String,
+    subgraphs: Vec<Subgraph>,
+}
+
+impl DnnModel {
+    pub fn new(name: &str, subgraphs: Vec<Subgraph>) -> DnnModel {
+        DnnModel { name: name.to_string(), subgraphs }
+    }
+
+    /// The tuning tasks (unique subgraphs; weight-shared repeats are
+    /// recorded on each task and weighted into end-to-end latency).
+    pub fn tasks(&self) -> Vec<Subgraph> {
+        self.subgraphs.clone()
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.subgraphs.len()
+    }
+
+    /// Total FLOPs of one inference.
+    pub fn total_flops(&self) -> f64 {
+        self.subgraphs.iter().map(|s| s.flops() * s.repeats as f64).sum()
+    }
+
+    /// End-to-end latency given a per-task latency lookup (seconds).
+    pub fn end_to_end_latency(&self, per_task: &dyn Fn(&Subgraph) -> f64) -> f64 {
+        self.subgraphs.iter().map(|s| per_task(s) * s.repeats as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::zoo;
+
+    #[test]
+    fn zoo_models_nonempty_and_named() {
+        for m in zoo::all() {
+            assert!(m.num_tasks() > 0, "{}", m.name);
+            assert!(m.total_flops() > 0.0);
+            // Task names unique within a model.
+            let mut names: Vec<String> =
+                m.tasks().iter().map(|t| t.name.clone()).collect();
+            let before = names.len();
+            names.sort();
+            names.dedup();
+            assert_eq!(before, names.len(), "{} duplicate task names", m.name);
+        }
+    }
+
+    #[test]
+    fn squeezenet_task_count_matches_paper() {
+        // Paper §3.2: "SqueezeNet consists of 23 tasks".
+        assert_eq!(zoo::squeezenet().num_tasks(), 23);
+    }
+
+    #[test]
+    fn resnet18_subgraph_count_plausible() {
+        // Paper §2.2 notes ResNet-50 → 29 subgraphs; ResNet-18 is
+        // smaller: expect 10..25 unique tasks.
+        let n = zoo::resnet18().num_tasks();
+        assert!((10..=25).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn flops_ordering_sane() {
+        // BERT-base ≫ ResNet-18 ≫ SqueezeNet ≳ MobileNet in FLOPs.
+        let bert = zoo::bert_base().total_flops();
+        let resnet = zoo::resnet18().total_flops();
+        let squeeze = zoo::squeezenet().total_flops();
+        let mobile = zoo::mobilenet().total_flops();
+        assert!(bert > resnet, "bert {bert} resnet {resnet}");
+        assert!(resnet > squeeze, "resnet {resnet} squeeze {squeeze}");
+        assert!(resnet > mobile, "resnet {resnet} mobile {mobile}");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        for key in ["resnet18", "mobilenet", "squeezenet", "bert"] {
+            assert!(zoo::by_name(key).is_some(), "{key}");
+        }
+        assert!(zoo::by_name("vgg99").is_none());
+    }
+
+    #[test]
+    fn end_to_end_latency_weights_repeats() {
+        let m = zoo::bert_base();
+        let flat = m.end_to_end_latency(&|_s| 1e-3);
+        let total_invocations: usize = m.tasks().iter().map(|t| t.repeats).sum();
+        assert!((flat - total_invocations as f64 * 1e-3).abs() < 1e-9);
+        assert!(total_invocations > m.num_tasks()); // layers repeat
+    }
+}

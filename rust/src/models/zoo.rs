@@ -1,0 +1,227 @@
+//! Concrete model definitions with real layer shapes (inference, N=1).
+//!
+//! Shapes follow the standard torchvision / HuggingFace configurations.
+//! Weight-shared or shape-identical layers are a single task with
+//! `repeats` set, matching how TVM deduplicates tuning tasks.
+
+use super::DnnModel;
+use crate::program::{Subgraph, SubgraphKind};
+
+fn conv(name: &str, h: usize, w: usize, cin: usize, cout: usize, k: usize, stride: usize, pad: usize) -> Subgraph {
+    Subgraph::new(
+        name,
+        SubgraphKind::Conv2d { n: 1, h, w, cin, cout, kh: k, kw: k, stride, pad },
+    )
+}
+
+fn dwconv(name: &str, h: usize, w: usize, c: usize, k: usize, stride: usize, pad: usize) -> Subgraph {
+    Subgraph::new(
+        name,
+        SubgraphKind::DepthwiseConv2d { n: 1, h, w, c, kh: k, kw: k, stride, pad },
+    )
+}
+
+fn dense(name: &str, m: usize, n: usize, k: usize) -> Subgraph {
+    Subgraph::new(name, SubgraphKind::Dense { m, n, k })
+}
+
+fn bmm(name: &str, b: usize, m: usize, n: usize, k: usize) -> Subgraph {
+    Subgraph::new(name, SubgraphKind::BatchMatmul { b, m, n, k })
+}
+
+fn pool(name: &str, h: usize, w: usize, c: usize, k: usize, stride: usize) -> Subgraph {
+    Subgraph::new(name, SubgraphKind::Pool2d { n: 1, h, w, c, k, stride })
+}
+
+/// ResNet-18 (ImageNet, 224²): stem + 4 stages × 2 basic blocks + fc.
+pub fn resnet18() -> DnnModel {
+    DnnModel::new(
+        "resnet18",
+        vec![
+            conv("resnet18.conv1", 224, 224, 3, 64, 7, 2, 3),
+            pool("resnet18.maxpool", 112, 112, 64, 3, 2),
+            // Stage 1: 56², 64ch. 2 blocks × 2 convs, all same shape.
+            conv("resnet18.s1.conv3x3", 56, 56, 64, 64, 3, 1, 1).with_repeats(4),
+            // Stage 2 entry: stride-2 + 1x1 downsample shortcut.
+            conv("resnet18.s2.conv3x3_s2", 56, 56, 64, 128, 3, 2, 1),
+            conv("resnet18.s2.down1x1", 56, 56, 64, 128, 1, 2, 0),
+            conv("resnet18.s2.conv3x3", 28, 28, 128, 128, 3, 1, 1).with_repeats(3),
+            // Stage 3.
+            conv("resnet18.s3.conv3x3_s2", 28, 28, 128, 256, 3, 2, 1),
+            conv("resnet18.s3.down1x1", 28, 28, 128, 256, 1, 2, 0),
+            conv("resnet18.s3.conv3x3", 14, 14, 256, 256, 3, 1, 1).with_repeats(3),
+            // Stage 4.
+            conv("resnet18.s4.conv3x3_s2", 14, 14, 256, 512, 3, 2, 1),
+            conv("resnet18.s4.down1x1", 14, 14, 256, 512, 1, 2, 0),
+            conv("resnet18.s4.conv3x3", 7, 7, 512, 512, 3, 1, 1).with_repeats(3),
+            pool("resnet18.avgpool", 7, 7, 512, 7, 7),
+            dense("resnet18.fc", 1, 1000, 512),
+            Subgraph::new(
+                "resnet18.residual_add",
+                SubgraphKind::Elementwise { len: 56 * 56 * 64, ops: 2 },
+            )
+            .with_repeats(8),
+        ],
+    )
+}
+
+/// MobileNetV1 (224², width 1.0): stem conv + 13 depthwise-separable
+/// pairs + classifier.
+pub fn mobilenet() -> DnnModel {
+    // (h, cin, cout, stride of the depthwise)
+    let cfg: [(usize, usize, usize, usize); 13] = [
+        (112, 32, 64, 1),
+        (112, 64, 128, 2),
+        (56, 128, 128, 1),
+        (56, 128, 256, 2),
+        (28, 256, 256, 1),
+        (28, 256, 512, 2),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 1024, 2),
+        (7, 1024, 1024, 1),
+    ];
+    let mut subs = vec![conv("mobilenet.conv1", 224, 224, 3, 32, 3, 2, 1)];
+    let mut dedup: Vec<(String, Subgraph)> = Vec::new();
+    for (i, &(h, cin, cout, stride)) in cfg.iter().enumerate() {
+        let dw = dwconv(&format!("mobilenet.dw{}", i + 1), h, h, cin, 3, stride, 1);
+        let oh = if stride == 2 { h / 2 } else { h };
+        let pw = conv(&format!("mobilenet.pw{}", i + 1), oh, oh, cin, cout, 1, 1, 0);
+        for sg in [dw, pw] {
+            // Deduplicate identical shapes into repeats (TVM-style).
+            let key = format!("{:?}", sg.kind);
+            if let Some((_, existing)) = dedup.iter_mut().find(|(k, _)| *k == key) {
+                existing.repeats += 1;
+            } else {
+                dedup.push((key, sg));
+            }
+        }
+    }
+    subs.extend(dedup.into_iter().map(|(_, s)| s));
+    subs.push(pool("mobilenet.avgpool", 7, 7, 1024, 7, 7));
+    subs.push(dense("mobilenet.fc", 1, 1000, 1024));
+    DnnModel::new("mobilenet", subs)
+}
+
+/// SqueezeNet 1.1 (224²) — exactly 23 tuning tasks (paper §3.2: "the
+/// subgraphs"), with shape-identical expand stages deduplicated into
+/// repeats the way TVM merges identical tasks.
+pub fn squeezenet() -> DnnModel {
+    // Fire pair (two consecutive fires share expand shapes): squeeze
+    // convs differ by input channels; expand convs are identical.
+    fn fire_pair(
+        subs: &mut Vec<Subgraph>,
+        idx: usize,
+        h: usize,
+        cin_a: usize,
+        cin_b: usize,
+        sq: usize,
+        ex: usize,
+    ) {
+        subs.push(conv(&format!("squeezenet.fire{idx}.squeeze1x1"), h, h, cin_a, sq, 1, 1, 0));
+        subs.push(conv(&format!("squeezenet.fire{}.squeeze1x1", idx + 1), h, h, cin_b, sq, 1, 1, 0));
+        subs.push(
+            conv(&format!("squeezenet.fire{idx}_{}.expand1x1", idx + 1), h, h, sq, ex, 1, 1, 0)
+                .with_repeats(2),
+        );
+        subs.push(
+            conv(&format!("squeezenet.fire{idx}_{}.expand3x3", idx + 1), h, h, sq, ex, 3, 1, 1)
+                .with_repeats(2),
+        );
+    }
+    let mut subs = vec![
+        conv("squeezenet.conv1", 224, 224, 3, 64, 3, 2, 0),
+        pool("squeezenet.maxpool1", 111, 111, 64, 3, 2),
+    ];
+    fire_pair(&mut subs, 2, 55, 64, 128, 16, 64);
+    subs.push(pool("squeezenet.maxpool3", 55, 55, 128, 3, 2));
+    fire_pair(&mut subs, 4, 27, 128, 256, 32, 128);
+    subs.push(pool("squeezenet.maxpool5", 27, 27, 256, 3, 2));
+    fire_pair(&mut subs, 6, 13, 256, 384, 48, 192);
+    fire_pair(&mut subs, 8, 13, 384, 512, 64, 256);
+    subs.push(conv("squeezenet.conv10", 13, 13, 512, 1000, 1, 1, 0));
+    subs.push(pool("squeezenet.avgpool", 13, 13, 1000, 13, 13));
+    subs.push(Subgraph::new(
+        "squeezenet.concat_relu",
+        SubgraphKind::Elementwise { len: 55 * 55 * 128, ops: 1 },
+    )
+    .with_repeats(8));
+    debug_assert_eq!(subs.len(), 23);
+    DnnModel::new("squeezenet", subs)
+}
+
+/// BERT-base (seq 128, hidden 768, 12 layers, 12 heads, FFN 3072).
+pub fn bert_base() -> DnnModel {
+    let seq = 128;
+    let hid = 768;
+    let heads = 12;
+    let dh = hid / heads; // 64
+    let ffn = 3072;
+    DnnModel::new(
+        "bert",
+        vec![
+            // Per layer (×12): QKV projections, attention matmuls,
+            // output projection, FFN up/down, layernorm+residual fusion.
+            dense("bert.qkv_proj", seq, 3 * hid, hid).with_repeats(12),
+            bmm("bert.attn_scores", heads, seq, seq, dh).with_repeats(12),
+            bmm("bert.attn_context", heads, seq, dh, seq).with_repeats(12),
+            dense("bert.attn_out", seq, hid, hid).with_repeats(12),
+            dense("bert.ffn_up", seq, ffn, hid).with_repeats(12),
+            dense("bert.ffn_down", seq, hid, ffn).with_repeats(12),
+            Subgraph::new(
+                "bert.softmax",
+                SubgraphKind::Elementwise { len: heads * seq * seq, ops: 5 },
+            )
+            .with_repeats(12),
+            Subgraph::new(
+                "bert.layernorm_residual",
+                SubgraphKind::Elementwise { len: seq * hid, ops: 8 },
+            )
+            .with_repeats(24),
+            dense("bert.pooler", 1, hid, hid),
+        ],
+    )
+}
+
+/// mobileViT-XS-like hybrid (the §4.1 dataset mentions mobile
+/// transformers) — used for dataset generation coverage.
+pub fn mobilevit() -> DnnModel {
+    let mut subs = vec![
+        conv("mobilevit.conv1", 256, 256, 3, 16, 3, 2, 1),
+        dwconv("mobilevit.mv2_dw1", 128, 128, 16, 3, 1, 1),
+        conv("mobilevit.mv2_pw1", 128, 128, 16, 32, 1, 1, 0),
+        dwconv("mobilevit.mv2_dw2", 128, 128, 32, 3, 2, 1),
+        conv("mobilevit.mv2_pw2", 64, 64, 32, 48, 1, 1, 0),
+    ];
+    // Transformer blocks on 32×32 and 16×16 token grids.
+    for (i, (tokens, dim)) in [(1024usize, 96usize), (256, 120), (64, 144)].iter().enumerate() {
+        subs.push(dense(&format!("mobilevit.t{i}.qkv"), *tokens, 3 * dim, *dim).with_repeats(2));
+        subs.push(bmm(&format!("mobilevit.t{i}.scores"), 4, *tokens, *tokens, dim / 4).with_repeats(2));
+        subs.push(bmm(&format!("mobilevit.t{i}.ctx"), 4, *tokens, dim / 4, *tokens).with_repeats(2));
+        subs.push(dense(&format!("mobilevit.t{i}.ffn_up"), *tokens, 2 * dim, *dim).with_repeats(2));
+        subs.push(dense(&format!("mobilevit.t{i}.ffn_down"), *tokens, *dim, 2 * dim).with_repeats(2));
+    }
+    subs.push(conv("mobilevit.head", 8, 8, 144, 384, 1, 1, 0));
+    subs.push(dense("mobilevit.fc", 1, 1000, 384));
+    DnnModel::new("mobilevit", subs)
+}
+
+/// All evaluation models.
+pub fn all() -> Vec<DnnModel> {
+    vec![resnet18(), mobilenet(), squeezenet(), bert_base(), mobilevit()]
+}
+
+/// Lookup by CLI name (accepts a few aliases).
+pub fn by_name(name: &str) -> Option<DnnModel> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet18" | "resnet" | "r" => Some(resnet18()),
+        "mobilenet" | "m" => Some(mobilenet()),
+        "squeezenet" | "s" => Some(squeezenet()),
+        "bert" | "bert-base" | "bertbase" | "b" => Some(bert_base()),
+        "mobilevit" => Some(mobilevit()),
+        _ => None,
+    }
+}

@@ -1,0 +1,364 @@
+//! The 164-dimensional program feature vector (paper §2.2: "we adopt the
+//! 164-d features in Ansor to depict the program").
+//!
+//! The paper's key structural assumption (§3.3, Eq. 3) is that this
+//! feature space is **hardware-independent**: every dimension is a pure
+//! function of the subgraph geometry and the schedule knobs — nothing
+//! about SM counts, cache sizes or clock speeds enters.  The *labels*
+//! (measured throughput) are hardware-dependent; the cost model's job is
+//! to map the invariant features to a device-specific response, and
+//! Moses' job is to preserve the parameters encoding the invariant part.
+//!
+//! Layout (indices inclusive, 164 total — checked by tests):
+//!
+//! | group | dims | contents |
+//! |-------|------|----------|
+//! | A 0-11    | 12 | problem geometry: log extents, flops, bytes, AI |
+//! | B 12-49   | 38 | raw tiling knobs: logs + one-hots |
+//! | C 50-61   | 12 | vectorize/unroll/layout/shared one-hots |
+//! | D 62-77   | 16 | derived execution shape: grid, tpb, regs, waste |
+//! | E 78-119  | 42 | per-buffer access stats (3 buffers × 14) |
+//! | F 120-131 | 12 | loop-nest extents and position weights |
+//! | G 132-147 | 16 | per-level touch statistics (4 levels × 4) |
+//! | H 148-163 | 16 | tails, alignment flags, interactions, bias |
+//!
+//! All continuous values are squashed with `log2(1+v)/32` into ≈[0,1];
+//! flags are 0/1.  Determinism is load-bearing: the same program must
+//! featurize identically on every call (dataset records store features).
+
+use super::schedule::{
+    Layout, Schedule, INNER_CHOICES, RT_CHOICES, TX_CHOICES, TY_CHOICES, UNROLL_CHOICES,
+    VEC_CHOICES,
+};
+use super::subgraph::Subgraph;
+
+/// Feature dimensionality (matches `python/compile/kernels/ref.py`).
+pub const N_FEATURES: usize = 164;
+
+/// `log2(1+v)` squashed to ≈[0,1] for v up to ~2^32.
+fn lg(v: f64) -> f32 {
+    ((1.0 + v.max(0.0)).log2() / 32.0) as f32
+}
+
+fn flag(b: bool) -> f32 {
+    if b {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+fn one_hot<const N: usize>(out: &mut Vec<f32>, choices: &[usize; N], v: usize) {
+    for &c in choices {
+        out.push(flag(c == v));
+    }
+}
+
+/// Compute the 164-d feature vector for (subgraph, schedule).
+pub fn featurize(sub: &Subgraph, s: &Schedule) -> [f32; N_FEATURES] {
+    let g = sub.geometry();
+    let flops = sub.kind.flops();
+    let (ba, bb, bo) = sub.kind.buffer_bytes();
+    let total_bytes = ba + bb + bo;
+    let mut f: Vec<f32> = Vec::with_capacity(N_FEATURES);
+
+    // ---- A: problem geometry (12) ------------------------------------
+    f.push(lg(g.x as f64));
+    f.push(lg(g.y as f64));
+    f.push(lg(g.r as f64));
+    f.push(lg(flops));
+    f.push(lg(total_bytes));
+    f.push(lg(sub.kind.arithmetic_intensity()));
+    f.push(flag(g.mac));
+    f.push(lg((g.x * g.y) as f64));
+    f.push(lg(ba));
+    f.push(lg(bb));
+    f.push(lg(bo));
+    f.push(lg(sub.repeats as f64));
+
+    // ---- B: raw tiling knobs (38 = 5 logs + 9+5+7+5+7 one-hots) ------
+    f.push(lg(s.tx as f64));
+    f.push(lg(s.ix as f64));
+    f.push(lg(s.ty as f64));
+    f.push(lg(s.iy as f64));
+    f.push(lg(s.rt as f64));
+    one_hot(&mut f, &TX_CHOICES, s.tx);
+    one_hot(&mut f, &INNER_CHOICES, s.ix);
+    one_hot(&mut f, &TY_CHOICES, s.ty);
+    one_hot(&mut f, &INNER_CHOICES, s.iy);
+    one_hot(&mut f, &RT_CHOICES, s.rt);
+
+    // ---- C: vector/unroll/layout/shared (12 = 4+4+3+1) ---------------
+    one_hot(&mut f, &VEC_CHOICES, s.vectorize);
+    one_hot(&mut f, &UNROLL_CHOICES, s.unroll);
+    for l in Layout::ALL {
+        f.push(flag(s.layout == l));
+    }
+    f.push(flag(s.use_shared));
+
+    // ---- D: derived execution shape (16) ------------------------------
+    let (gx, gy) = s.grid(&g);
+    let tpb = s.threads_per_block();
+    let blocks = s.num_blocks(&g);
+    f.push(lg(tpb as f64));
+    f.push(lg(tpb as f64 / 32.0)); // warps per block
+    f.push(lg(blocks as f64));
+    f.push(lg(gx as f64));
+    f.push(lg(gy as f64));
+    f.push((s.padding_factor(&g) - 1.0).min(1.0) as f32); // waste fraction
+    f.push(lg(s.work_per_thread() as f64));
+    f.push(lg(s.regs_per_thread() as f64));
+    f.push(lg(s.shared_bytes() as f64));
+    f.push((s.vectorize as f64 / s.iy.max(1) as f64).min(1.0) as f32);
+    f.push(lg(blocks as f64 * tpb as f64)); // total parallelism
+    f.push(((blocks * tpb) as f64 / (g.x * g.y).max(1) as f64).min(1.0) as f32);
+    f.push(lg(g.r.div_ceil(s.rt) as f64)); // outer reduction steps
+    f.push(lg((s.ix * s.iy * s.rt) as f64)); // innermost serial length
+    f.push(flag(g.x % s.block_tile_x() != 0));
+    f.push(flag(g.y % s.block_tile_y() != 0));
+
+    // ---- E: per-buffer access stats (3 × 14 = 42) ----------------------
+    // Buffer tiles touched per block per reduction step.
+    let tile_x = s.block_tile_x() as f64;
+    let tile_y = s.block_tile_y() as f64;
+    let rt = s.rt as f64;
+    // (bytes, tile_bytes_per_block, innermost_extent, is_written, reduced)
+    let buffers: [(f64, f64, f64, bool, bool); 3] = [
+        (ba, 4.0 * tile_x * rt, g.r as f64, false, true),  // input
+        (bb, 4.0 * tile_y * rt, g.r as f64, false, true),  // weight/operand
+        (bo, 4.0 * tile_x * tile_y, g.y as f64, true, false), // output
+    ];
+    for (bytes, tile_bytes, inner_extent, written, reduced) in buffers {
+        let stride_quality: f32 = match s.layout {
+            Layout::RowMajor => {
+                if written {
+                    1.0
+                } else {
+                    0.6
+                }
+            }
+            Layout::ChannelsLast => 0.85,
+            Layout::Packed => {
+                if s.vectorize >= 4 {
+                    1.0
+                } else {
+                    0.7
+                }
+            }
+        };
+        let touched_per_thread = tile_bytes / tpb.max(1) as f64;
+        let reuse = if bytes > 0.0 {
+            (blocks as f64 * tile_bytes * (g.r as f64 / rt)) / bytes
+        } else {
+            0.0
+        };
+        f.push(lg(bytes));
+        f.push(lg(tile_bytes));
+        f.push(lg(touched_per_thread));
+        f.push(lg(reuse));
+        f.push(stride_quality);
+        f.push(flag(s.vectorize > 1 && inner_extent % s.vectorize as f64 == 0.0));
+        f.push(flag(tile_bytes <= 32.0 * 1024.0)); // fits L1/shared tile
+        f.push(flag(tile_bytes <= 256.0 * 1024.0)); // fits L2 slice
+        f.push(lg(tile_bytes / 128.0)); // cache lines per block
+        f.push(flag(written));
+        f.push(flag(reduced));
+        f.push(lg(bytes / flops.max(1.0) * 1e6)); // bytes per Mflop
+        f.push(flag(s.use_shared && !written));
+        f.push((tile_bytes / (48.0 * 1024.0)).min(2.0) as f32 / 2.0); // shared pressure
+    }
+
+    // ---- F: loop-nest extents & positions (12) -------------------------
+    let nest: [f64; 6] = [
+        gy as f64,
+        gx as f64,
+        s.ty as f64,
+        s.tx as f64,
+        (s.ix * s.iy) as f64,
+        rt,
+    ];
+    for e in nest {
+        f.push(lg(e));
+    }
+    let total: f64 = nest.iter().map(|e| e.max(1.0).log2()).sum::<f64>().max(1e-9);
+    for e in nest {
+        f.push((e.max(1.0).log2() / total) as f32);
+    }
+
+    // ---- G: per-level touch statistics (4 × 4 = 16) --------------------
+    // Levels: block, thread, inner(serial), reduction-step.
+    let level_elems: [f64; 4] = [
+        tile_x * tile_y,
+        (s.ix * s.iy) as f64,
+        s.vectorize as f64,
+        rt,
+    ];
+    let level_bytes: [f64; 4] = [
+        4.0 * (tile_x + tile_y) * rt,
+        4.0 * (s.ix + s.iy) as f64 * rt,
+        4.0 * s.vectorize as f64,
+        4.0 * (tile_x + tile_y),
+    ];
+    for lvl in 0..4 {
+        let flops_here = if g.mac { 2.0 * level_elems[lvl] * rt } else { level_elems[lvl] };
+        f.push(lg(level_elems[lvl]));
+        f.push(lg(level_bytes[lvl]));
+        f.push(lg(flops_here));
+        f.push(lg(flops_here / level_bytes[lvl].max(1.0)));
+    }
+
+    // ---- H: tails, alignment, interactions, bias (16) -------------------
+    let (px, py) = {
+        let bx = s.block_tile_x();
+        let by = s.block_tile_y();
+        (
+            (bx - (g.x % bx).min(bx)) % bx,
+            (by - (g.y % by).min(by)) % by,
+        )
+    };
+    f.push((px as f64 / s.block_tile_x() as f64) as f32); // x tail fraction
+    f.push((py as f64 / s.block_tile_y() as f64) as f32); // y tail fraction
+    f.push(flag(g.r % s.rt != 0));
+    f.push(flag(tpb % 32 == 0)); // warp-aligned
+    f.push((tpb as f64 / 1024.0) as f32);
+    f.push(flag(s.ix == 1));
+    f.push(flag(s.iy == 1));
+    f.push(flag(s.rt == 1));
+    f.push(flag(s.layout == Layout::Packed && s.vectorize >= 4));
+    f.push(lg((s.vectorize * s.unroll.max(1)) as f64));
+    f.push(lg(s.shared_bytes() as f64 / tpb.max(1) as f64));
+    f.push(flag(s.unroll >= 64 && s.ix * s.iy >= 8)); // unroll pressure
+    f.push(flag(blocks < 16)); // under-parallelized
+    f.push(flag(blocks > 65_535)); // grid overflow risk
+    f.push(flag(s.use_shared && s.rt >= 8)); // staging amortized
+    f.push(1.0); // bias
+
+    debug_assert_eq!(f.len(), N_FEATURES, "feature layout drifted");
+    let mut out = [0.0f32; N_FEATURES];
+    out.copy_from_slice(&f);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::program::generator::SpaceGenerator;
+    use crate::program::subgraph::SubgraphKind;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn sub() -> Subgraph {
+        Subgraph::new(
+            "t.conv",
+            SubgraphKind::Conv2d {
+                n: 1,
+                h: 56,
+                w: 56,
+                cin: 64,
+                cout: 128,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+        )
+    }
+
+    #[test]
+    fn exactly_164_dims() {
+        let s = sub();
+        let sched = Schedule::default_for(&s.geometry());
+        let f = featurize(&s, &sched);
+        assert_eq!(f.len(), N_FEATURES);
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = sub();
+        let sched = Schedule::default_for(&s.geometry());
+        assert_eq!(featurize(&s, &sched), featurize(&s, &sched));
+    }
+
+    #[test]
+    fn all_finite_and_bounded() {
+        let s = sub();
+        let gen = SpaceGenerator::new(s.geometry());
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let sched = gen.sample(&mut rng);
+            for (i, v) in featurize(&s, &sched).iter().enumerate() {
+                assert!(v.is_finite(), "dim {i} not finite");
+                assert!((-0.1..=2.0).contains(v), "dim {i} out of range: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn different_schedules_differ() {
+        let s = sub();
+        let g = s.geometry();
+        let a = Schedule::default_for(&g);
+        let b = Schedule { tx: 128, vectorize: 4, ix: 8, ..a };
+        assert!(b.is_valid(&g));
+        assert_ne!(featurize(&s, &a), featurize(&s, &b));
+    }
+
+    #[test]
+    fn different_subgraphs_differ() {
+        let a = sub();
+        let b = Subgraph::new("t.dense", SubgraphKind::Dense { m: 128, n: 768, k: 768 });
+        let sched = Schedule::default_for(&a.geometry());
+        assert_ne!(featurize(&a, &sched)[..12], featurize(&b, &sched)[..12]);
+    }
+
+    #[test]
+    fn hardware_independence_by_construction() {
+        // The same (subgraph, schedule) featurizes identically regardless
+        // of any device context — there is no device parameter at all.
+        // This test documents the API-level guarantee.
+        let s = sub();
+        let sched = Schedule::default_for(&s.geometry());
+        let f1 = featurize(&s, &sched);
+        let f2 = featurize(&s, &sched);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn prop_fuzz_geometries_and_schedules() {
+        prop::check(|rng| {
+            let kind = match rng.below(4) {
+                0 => SubgraphKind::Conv2d {
+                    n: rng.below(4) + 1,
+                    h: rng.below(200) + 8,
+                    w: rng.below(200) + 8,
+                    cin: rng.below(512) + 1,
+                    cout: rng.below(512) + 1,
+                    kh: [1, 3, 5, 7][rng.below(4)],
+                    kw: [1, 3, 5, 7][rng.below(4)],
+                    stride: rng.below(2) + 1,
+                    pad: rng.below(3),
+                },
+                1 => SubgraphKind::Dense {
+                    m: rng.below(2048) + 1,
+                    n: rng.below(4096) + 1,
+                    k: rng.below(4096) + 1,
+                },
+                2 => SubgraphKind::BatchMatmul {
+                    b: rng.below(16) + 1,
+                    m: rng.below(512) + 1,
+                    n: rng.below(512) + 1,
+                    k: rng.below(512) + 1,
+                },
+                _ => SubgraphKind::Elementwise { len: rng.below(1_000_000) + 1, ops: rng.below(8) + 1 },
+            };
+            let sub = Subgraph::new("fuzz", kind);
+            let gen = SpaceGenerator::new(sub.geometry());
+            let sched = gen.sample(rng);
+            let f = featurize(&sub, &sched);
+            assert_eq!(f.len(), N_FEATURES);
+            for (i, v) in f.iter().enumerate() {
+                assert!(v.is_finite() && (-0.1..=2.0).contains(v), "dim {i}: {v}");
+            }
+        });
+    }
+}

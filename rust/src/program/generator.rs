@@ -1,0 +1,221 @@
+//! Schedule-space generation: random sampling, mutation and crossover —
+//! the raw material for the evolutionary search (paper §2.2: spaces are
+//! "millions for CPUs and billions for GPUs").
+
+use super::schedule::{
+    Layout, Schedule, INNER_CHOICES, RT_CHOICES, TX_CHOICES, TY_CHOICES, UNROLL_CHOICES,
+    VEC_CHOICES,
+};
+use super::subgraph::Geometry;
+use crate::util::rng::Rng;
+
+/// Generates valid schedules for one subgraph geometry.
+#[derive(Debug, Clone)]
+pub struct SpaceGenerator {
+    pub geometry: Geometry,
+}
+
+impl SpaceGenerator {
+    pub fn new(geometry: Geometry) -> SpaceGenerator {
+        SpaceGenerator { geometry }
+    }
+
+    /// Upper bound on the knob-combination count (before validity
+    /// filtering) — matches the order of magnitude the paper quotes.
+    pub fn space_size(&self) -> f64 {
+        (TX_CHOICES.len()
+            * INNER_CHOICES.len()
+            * TY_CHOICES.len()
+            * INNER_CHOICES.len()
+            * RT_CHOICES.len()
+            * VEC_CHOICES.len()
+            * UNROLL_CHOICES.len()
+            * 2 // use_shared
+            * Layout::ALL.len()) as f64
+    }
+
+    fn raw_sample(&self, rng: &mut Rng) -> Schedule {
+        Schedule {
+            tx: *rng.choice(&TX_CHOICES),
+            ix: *rng.choice(&INNER_CHOICES),
+            ty: *rng.choice(&TY_CHOICES),
+            iy: *rng.choice(&INNER_CHOICES),
+            rt: *rng.choice(&RT_CHOICES),
+            vectorize: *rng.choice(&VEC_CHOICES),
+            unroll: *rng.choice(&UNROLL_CHOICES),
+            use_shared: rng.chance(0.5),
+            layout: Layout::from_index(rng.below(3)),
+        }
+    }
+
+    /// Rejection-sample a valid schedule.  The validity rate of the raw
+    /// space is high enough (>20%) that this terminates fast; falls back
+    /// to the default schedule after 256 attempts (cannot happen for any
+    /// geometry the zoo produces — defensive only).
+    pub fn sample(&self, rng: &mut Rng) -> Schedule {
+        for _ in 0..256 {
+            let s = self.raw_sample(rng);
+            if s.is_valid(&self.geometry) {
+                return s;
+            }
+        }
+        Schedule::default_for(&self.geometry)
+    }
+
+    /// Sample `n` distinct valid schedules (deduplicated by knob value).
+    pub fn sample_distinct(&self, rng: &mut Rng, n: usize) -> Vec<Schedule> {
+        let mut out: Vec<Schedule> = Vec::with_capacity(n);
+        let mut attempts = 0;
+        while out.len() < n && attempts < 64 * n.max(8) {
+            let s = self.sample(rng);
+            if !out.contains(&s) {
+                out.push(s);
+            }
+            attempts += 1;
+        }
+        out
+    }
+
+    /// Mutate exactly one knob into a different valid value — the
+    /// evolutionary search's mutation operator.
+    pub fn mutate(&self, s: &Schedule, rng: &mut Rng) -> Schedule {
+        for _ in 0..64 {
+            let mut t = *s;
+            match rng.below(9) {
+                0 => t.tx = *rng.choice(&TX_CHOICES),
+                1 => t.ix = *rng.choice(&INNER_CHOICES),
+                2 => t.ty = *rng.choice(&TY_CHOICES),
+                3 => t.iy = *rng.choice(&INNER_CHOICES),
+                4 => t.rt = *rng.choice(&RT_CHOICES),
+                5 => t.vectorize = *rng.choice(&VEC_CHOICES),
+                6 => t.unroll = *rng.choice(&UNROLL_CHOICES),
+                7 => t.use_shared = !t.use_shared,
+                _ => t.layout = Layout::from_index(rng.below(3)),
+            }
+            if t != *s && t.is_valid(&self.geometry) {
+                return t;
+            }
+        }
+        *s
+    }
+
+    /// Uniform knob-wise crossover of two parents (retried until valid).
+    pub fn crossover(&self, a: &Schedule, b: &Schedule, rng: &mut Rng) -> Schedule {
+        for _ in 0..64 {
+            let pick = |rng: &mut Rng, x: usize, y: usize| if rng.chance(0.5) { x } else { y };
+            let t = Schedule {
+                tx: pick(rng, a.tx, b.tx),
+                ix: pick(rng, a.ix, b.ix),
+                ty: pick(rng, a.ty, b.ty),
+                iy: pick(rng, a.iy, b.iy),
+                rt: pick(rng, a.rt, b.rt),
+                vectorize: pick(rng, a.vectorize, b.vectorize),
+                unroll: pick(rng, a.unroll, b.unroll),
+                use_shared: if rng.chance(0.5) { a.use_shared } else { b.use_shared },
+                layout: if rng.chance(0.5) { a.layout } else { b.layout },
+            };
+            if t.is_valid(&self.geometry) {
+                return t;
+            }
+        }
+        if rng.chance(0.5) {
+            *a
+        } else {
+            *b
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn geom() -> Geometry {
+        Geometry { x: 12544, y: 256, r: 1152, mac: true }
+    }
+
+    #[test]
+    fn samples_are_valid() {
+        let gen = SpaceGenerator::new(geom());
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let s = gen.sample(&mut rng);
+            assert!(s.is_valid(&gen.geometry), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn sample_distinct_dedups() {
+        let gen = SpaceGenerator::new(geom());
+        let mut rng = Rng::new(2);
+        let pop = gen.sample_distinct(&mut rng, 64);
+        assert_eq!(pop.len(), 64);
+        for i in 0..pop.len() {
+            for j in (i + 1)..pop.len() {
+                assert_ne!(pop[i], pop[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_changes_one_thing_and_stays_valid() {
+        let gen = SpaceGenerator::new(geom());
+        let mut rng = Rng::new(3);
+        let s = gen.sample(&mut rng);
+        let mut changed = 0;
+        for _ in 0..50 {
+            let t = gen.mutate(&s, &mut rng);
+            assert!(t.is_valid(&gen.geometry));
+            if t != s {
+                changed += 1;
+                // Count differing knobs.
+                let diff = s
+                    .encode()
+                    .iter()
+                    .zip(t.encode().iter())
+                    .filter(|(a, b)| a != b)
+                    .count();
+                assert_eq!(diff, 1, "mutation touched {diff} knobs: {s:?} -> {t:?}");
+            }
+        }
+        assert!(changed > 40);
+    }
+
+    #[test]
+    fn space_size_is_large() {
+        let gen = SpaceGenerator::new(geom());
+        assert!(gen.space_size() > 100_000.0);
+    }
+
+    #[test]
+    fn prop_crossover_valid_and_from_parents() {
+        prop::check(|rng| {
+            let gen = SpaceGenerator::new(geom());
+            let a = gen.sample(rng);
+            let b = gen.sample(rng);
+            let c = gen.crossover(&a, &b, rng);
+            assert!(c.is_valid(&gen.geometry));
+            // Every knob comes from one of the parents.
+            let (ea, eb, ec) = (a.encode(), b.encode(), c.encode());
+            for k in 0..9 {
+                assert!(ec[k] == ea[k] || ec[k] == eb[k], "knob {k} invented");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_samples_valid_for_odd_geometries() {
+        prop::check(|rng| {
+            let g = Geometry {
+                x: rng.below(100_000) + 1,
+                y: rng.below(4096) + 1,
+                r: rng.below(8192) + 1,
+                mac: rng.chance(0.8),
+            };
+            let gen = SpaceGenerator::new(g);
+            let s = gen.sample(rng);
+            assert!(s.is_valid(&g), "geom {g:?} sched {s:?}");
+        });
+    }
+}

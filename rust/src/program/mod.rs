@@ -1,0 +1,52 @@
+//! The tensor-program substrate: what the auto-tuner tunes.
+//!
+//! TVM/Ansor partitions a DNN into *subgraphs* (fused operator groups —
+//! paper §2.2: "a subgraph is a unit with the finest granularity during
+//! compilation") and searches, per subgraph, a combinatorial space of
+//! *schedules* (tilings, unrolling, vectorization, thread binding, ...).
+//!
+//! * [`subgraph`] — operator kinds with real DNN shapes and their
+//!   canonical compute geometry (spatial × spatial × reduction).
+//! * [`schedule`] — the knob vector defining one tensor program.
+//! * [`generator`] — schedule-space sampling and mutation.
+//! * [`features`]  — the 164-d hardware-independent feature vector
+//!   (Ansor's representation, paper §2.2) consumed by the cost model.
+
+pub mod features;
+pub mod generator;
+pub mod schedule;
+pub mod subgraph;
+
+pub use features::{featurize, N_FEATURES};
+pub use generator::SpaceGenerator;
+pub use schedule::Schedule;
+pub use subgraph::{Geometry, Subgraph, SubgraphKind};
+
+/// A concrete tensor program = a subgraph plus one schedule point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorProgram {
+    pub subgraph: Subgraph,
+    pub schedule: Schedule,
+}
+
+impl TensorProgram {
+    pub fn new(subgraph: Subgraph, schedule: Schedule) -> TensorProgram {
+        TensorProgram { subgraph, schedule }
+    }
+
+    /// The 164-d feature vector for the cost model.
+    pub fn features(&self) -> [f32; N_FEATURES] {
+        featurize(&self.subgraph, &self.schedule)
+    }
+
+    /// Stable 64-bit identity of this program (used to key deterministic
+    /// simulator noise and to deduplicate search populations).
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(128);
+        bytes.extend_from_slice(self.subgraph.name.as_bytes());
+        for v in self.schedule.encode() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        crate::util::rng::hash_bytes(&bytes)
+    }
+}

@@ -1,0 +1,288 @@
+//! Schedule knobs: one point in the per-subgraph search space.
+//!
+//! Models the Ansor/AutoTVM GPU schedule template (paper Fig. 1 &
+//! §2.2): multi-level tiling of the two spatial axes onto (grid ×
+//! threads × serial-inner), a reduction split, vectorization, an
+//! auto-unroll cap, shared-memory staging, and a data-layout choice.
+//! Grids use ceil-division (real GPU codegen pads), so any knob
+//! combination is *representable*; [`Schedule::is_valid`] additionally
+//! enforces hardware-meaningful constraints (thread counts, vector
+//! width ≤ inner tile) that define the searchable space.
+
+use super::subgraph::Geometry;
+
+/// Thread-count choices per axis (powers of two, as in TVM templates).
+pub const TX_CHOICES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+pub const TY_CHOICES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+/// Serial inner-tile choices per axis.
+pub const INNER_CHOICES: [usize; 5] = [1, 2, 4, 8, 16];
+/// Reduction inner-split choices.
+pub const RT_CHOICES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+/// Vectorization widths (f32 lanes).
+pub const VEC_CHOICES: [usize; 4] = [1, 2, 4, 8];
+/// `auto_unroll_max_step` choices (Fig. 1 shows 512).
+pub const UNROLL_CHOICES: [usize; 4] = [0, 16, 64, 512];
+
+/// Data-layout variants (e.g. NCHW / NHWC / NCHWc-packed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    RowMajor = 0,
+    ChannelsLast = 1,
+    Packed = 2, // NCHWc-style vector-packed innermost dim
+}
+
+impl Layout {
+    pub const ALL: [Layout; 3] = [Layout::RowMajor, Layout::ChannelsLast, Layout::Packed];
+
+    pub fn from_index(i: usize) -> Layout {
+        Layout::ALL[i % 3]
+    }
+}
+
+/// One schedule point (the knob vector ψ of paper Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    /// Threads bound along X per block.
+    pub tx: usize,
+    /// Serial inner tile along X (per-thread work items).
+    pub ix: usize,
+    /// Threads bound along Y per block.
+    pub ty: usize,
+    /// Serial inner tile along Y.
+    pub iy: usize,
+    /// Reduction inner split (accumulate `rt` elements per loop step).
+    pub rt: usize,
+    /// Vector width on the innermost dimension.
+    pub vectorize: usize,
+    /// Auto-unroll max step (0 = off).
+    pub unroll: usize,
+    /// Stage operand tiles through shared memory?
+    pub use_shared: bool,
+    /// Buffer layout choice.
+    pub layout: Layout,
+}
+
+impl Schedule {
+    /// The heuristic default schedule — stands in for the untuned
+    /// vendor-library configuration ("Raw" baseline, paper §4.4).
+    pub fn default_for(g: &Geometry) -> Schedule {
+        Schedule {
+            tx: 32,
+            ix: 2,
+            ty: if g.y >= 8 { 8 } else { 1 },
+            iy: if g.y >= 32 { 4 } else { 1 },
+            rt: if g.r >= 8 { 8 } else { 1 },
+            vectorize: 1,
+            unroll: 0,
+            use_shared: false,
+            layout: Layout::RowMajor,
+        }
+    }
+
+    // ----------------------------------------------------- derived ----
+
+    /// Threads per block (CUDA blockDim product).
+    pub fn threads_per_block(&self) -> usize {
+        self.tx * self.ty
+    }
+
+    /// Elements of X covered by one block.
+    pub fn block_tile_x(&self) -> usize {
+        self.tx * self.ix
+    }
+
+    /// Elements of Y covered by one block.
+    pub fn block_tile_y(&self) -> usize {
+        self.ty * self.iy
+    }
+
+    /// Grid dims (ceil division — codegen pads the boundary).
+    pub fn grid(&self, g: &Geometry) -> (usize, usize) {
+        (g.x.div_ceil(self.block_tile_x()), g.y.div_ceil(self.block_tile_y()))
+    }
+
+    /// Total blocks.
+    pub fn num_blocks(&self, g: &Geometry) -> usize {
+        let (gx, gy) = self.grid(g);
+        gx * gy
+    }
+
+    /// Fraction of launched work that is padding waste (≥ 1.0 == none).
+    pub fn padding_factor(&self, g: &Geometry) -> f64 {
+        let (gx, gy) = self.grid(g);
+        let launched = (gx * self.block_tile_x()) as f64 * (gy * self.block_tile_y()) as f64;
+        launched / (g.x as f64 * g.y as f64)
+    }
+
+    /// Estimated shared-memory bytes per block (operand staging tiles
+    /// for one reduction step of `rt`).
+    pub fn shared_bytes(&self) -> usize {
+        if !self.use_shared {
+            return 0;
+        }
+        4 * self.rt * (self.block_tile_x() + self.block_tile_y())
+    }
+
+    /// Crude register-per-thread estimate: accumulators (ix·iy) plus
+    /// operand/vector registers; unrolling multiplies live values.
+    pub fn regs_per_thread(&self) -> usize {
+        let acc = self.ix * self.iy;
+        let operands = self.ix + self.iy + self.vectorize;
+        let unroll_mult = match self.unroll {
+            0 => 1.0,
+            16 => 1.25,
+            64 => 1.5,
+            _ => 2.0,
+        };
+        (((acc + operands) as f64) * unroll_mult).ceil() as usize + 12
+    }
+
+    /// Work items per thread (serial loop length excluding reduction).
+    pub fn work_per_thread(&self) -> usize {
+        self.ix * self.iy
+    }
+
+    // ---------------------------------------------------- validity ----
+
+    /// Hardware-meaningful constraints defining the search space.
+    pub fn is_valid(&self, g: &Geometry) -> bool {
+        let tpb = self.threads_per_block();
+        if !(1..=1024).contains(&tpb) {
+            return false;
+        }
+        // Vector width cannot exceed the serial inner tile it vectorizes.
+        if self.vectorize > self.ix.max(self.iy) {
+            return false;
+        }
+        // Packed layout requires vectorization.
+        if self.layout == Layout::Packed && self.vectorize == 1 {
+            return false;
+        }
+        // Don't split the reduction further than it is long.
+        if self.rt > g.r.next_power_of_two() {
+            return false;
+        }
+        // A block shouldn't cover more than the whole problem in either
+        // axis beyond one tile of padding.
+        if self.block_tile_x() > 2 * g.x.next_power_of_two()
+            || self.block_tile_y() > 2 * g.y.next_power_of_two()
+        {
+            return false;
+        }
+        // Shared staging above 96 KiB is unschedulable anywhere.
+        if self.shared_bytes() > 96 * 1024 {
+            return false;
+        }
+        true
+    }
+
+    // ------------------------------------------------ serialization ----
+
+    /// Fixed-width knob encoding (for fingerprints & dataset records).
+    pub fn encode(&self) -> [u32; 9] {
+        [
+            self.tx as u32,
+            self.ix as u32,
+            self.ty as u32,
+            self.iy as u32,
+            self.rt as u32,
+            self.vectorize as u32,
+            self.unroll as u32,
+            self.use_shared as u32,
+            self.layout as u32,
+        ]
+    }
+
+    /// Inverse of [`Schedule::encode`].
+    pub fn decode(v: &[u32; 9]) -> Schedule {
+        Schedule {
+            tx: v[0] as usize,
+            ix: v[1] as usize,
+            ty: v[2] as usize,
+            iy: v[3] as usize,
+            rt: v[4] as usize,
+            vectorize: v[5] as usize,
+            unroll: v[6] as usize,
+            use_shared: v[7] != 0,
+            layout: Layout::from_index(v[8] as usize),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry { x: 3136, y: 128, r: 576, mac: true }
+    }
+
+    #[test]
+    fn default_schedule_is_valid() {
+        let g = geom();
+        assert!(Schedule::default_for(&g).is_valid(&g));
+    }
+
+    #[test]
+    fn grid_ceil_division_and_padding() {
+        let g = Geometry { x: 100, y: 10, r: 4, mac: true };
+        let s = Schedule { tx: 32, ix: 1, ty: 4, iy: 1, ..Schedule::default_for(&g) };
+        let (gx, gy) = s.grid(&g);
+        assert_eq!(gx, 4); // ceil(100/32)
+        assert_eq!(gy, 3); // ceil(10/4)
+        assert!(s.padding_factor(&g) > 1.0);
+        // Exact fit → factor 1.
+        let s2 = Schedule { tx: 25, ix: 4, ty: 10, iy: 1, ..s };
+        assert!((s2.padding_factor(&g) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validity_rejects_bad_configs() {
+        let g = geom();
+        let base = Schedule::default_for(&g);
+        // Too many threads.
+        assert!(!Schedule { tx: 256, ty: 64, ..base }.is_valid(&g));
+        // Vector wider than inner tiles.
+        assert!(!Schedule { vectorize: 8, ix: 2, iy: 2, ..base }.is_valid(&g));
+        // Packed layout without vectorization.
+        assert!(!Schedule { layout: Layout::Packed, vectorize: 1, ..base }.is_valid(&g));
+        // Reduction split longer than reduction axis.
+        let small_r = Geometry { r: 2, ..g };
+        assert!(!Schedule { rt: 64, ..base }.is_valid(&small_r));
+    }
+
+    #[test]
+    fn shared_bytes_zero_when_disabled() {
+        let g = geom();
+        let s = Schedule::default_for(&g);
+        assert_eq!(s.shared_bytes(), 0);
+        let s2 = Schedule { use_shared: true, ..s };
+        assert!(s2.shared_bytes() > 0);
+    }
+
+    #[test]
+    fn regs_grow_with_tiles_and_unroll() {
+        let g = geom();
+        let small = Schedule::default_for(&g);
+        let big = Schedule { ix: 16, iy: 16, unroll: 512, ..small };
+        assert!(big.regs_per_thread() > small.regs_per_thread());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let g = geom();
+        let s = Schedule {
+            tx: 64,
+            ix: 4,
+            ty: 8,
+            iy: 2,
+            rt: 16,
+            vectorize: 4,
+            unroll: 512,
+            use_shared: true,
+            layout: Layout::Packed,
+        };
+        assert!(s.is_valid(&g));
+        assert_eq!(Schedule::decode(&s.encode()), s);
+    }
+}

@@ -1,0 +1,288 @@
+//! Subgraph (task) definitions: the fused operator groups the graph-level
+//! optimizer hands to the tensor-level tuner, with real DNN shapes.
+//!
+//! Every kind is reduced to a canonical **compute geometry** — two
+//! spatial iteration axes and one reduction axis — which is what the
+//! schedule knobs act on:
+//!
+//! | kind          | X (spatial)     | Y (spatial) | R (reduction) |
+//! |---------------|-----------------|-------------|---------------|
+//! | Conv2d        | N·OH·OW         | Cout        | Cin·KH·KW     |
+//! | Depthwise     | N·OH·OW         | C           | KH·KW         |
+//! | Dense         | M               | N           | K             |
+//! | BatchMatmul   | B·M             | N           | K             |
+//! | Pool2d        | N·OH·OW         | C           | K·K           |
+//! | Elementwise   | len             | 1           | 1             |
+
+/// Operator kind with full shape parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubgraphKind {
+    /// Standard 2-D convolution (NCHW logical shapes).
+    Conv2d {
+        n: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Depthwise-separable convolution's depthwise half.
+    DepthwiseConv2d {
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Fully-connected / projection: `[m,k] @ [k,n]`.
+    Dense { m: usize, n: usize, k: usize },
+    /// Batched matmul (attention scores / context): `b × [m,k] @ [k,n]`.
+    BatchMatmul { b: usize, m: usize, n: usize, k: usize },
+    /// 2-D pooling window `k×k`.
+    Pool2d { n: usize, h: usize, w: usize, c: usize, k: usize, stride: usize },
+    /// Fused elementwise chain (bias+activation+residual, LayerNorm...).
+    Elementwise { len: usize, ops: usize },
+}
+
+/// Canonical geometry the scheduler tunes over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    /// First spatial extent (output pixels / rows).
+    pub x: usize,
+    /// Second spatial extent (output channels / cols).
+    pub y: usize,
+    /// Reduction extent.
+    pub r: usize,
+    /// Is the reduction a multiply-accumulate (MAC) reduction?
+    /// (pooling reduces without MACs).
+    pub mac: bool,
+}
+
+/// A named tuning task: one subgraph of a DNN.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Subgraph {
+    /// Unique name within a model, e.g. `resnet18.conv2_1`.
+    pub name: String,
+    pub kind: SubgraphKind,
+    /// How many times the model invokes this subgraph per inference
+    /// (weight-shared repeats, e.g. identical residual blocks).
+    pub repeats: usize,
+}
+
+impl SubgraphKind {
+    /// Output spatial dims for conv-like kinds.
+    fn out_hw(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        (oh.max(1), ow.max(1))
+    }
+
+    /// Canonical compute geometry.
+    pub fn geometry(&self) -> Geometry {
+        match *self {
+            SubgraphKind::Conv2d { n, h, w, cin, cout, kh, kw, stride, pad } => {
+                let (oh, ow) = Self::out_hw(h, w, kh.max(kw), stride, pad);
+                Geometry { x: n * oh * ow, y: cout, r: cin * kh * kw, mac: true }
+            }
+            SubgraphKind::DepthwiseConv2d { n, h, w, c, kh, kw, stride, pad } => {
+                let (oh, ow) = Self::out_hw(h, w, kh.max(kw), stride, pad);
+                Geometry { x: n * oh * ow, y: c, r: kh * kw, mac: true }
+            }
+            SubgraphKind::Dense { m, n, k } => Geometry { x: m, y: n, r: k, mac: true },
+            SubgraphKind::BatchMatmul { b, m, n, k } => {
+                Geometry { x: b * m, y: n, r: k, mac: true }
+            }
+            SubgraphKind::Pool2d { n, h, w, c, k, stride } => {
+                let (oh, ow) = Self::out_hw(h, w, k, stride, 0);
+                Geometry { x: n * oh * ow, y: c, r: k * k, mac: false }
+            }
+            SubgraphKind::Elementwise { len, .. } => Geometry { x: len, y: 1, r: 1, mac: false },
+        }
+    }
+
+    /// Total floating-point operations for one invocation.
+    pub fn flops(&self) -> f64 {
+        let g = self.geometry();
+        match *self {
+            SubgraphKind::Elementwise { len, ops } => (len * ops) as f64,
+            SubgraphKind::Pool2d { .. } => (g.x * g.y * g.r) as f64, // compares/adds
+            _ => 2.0 * (g.x as f64) * (g.y as f64) * (g.r as f64),   // MACs
+        }
+    }
+
+    /// Bytes of each logical buffer (input, weight/second-operand,
+    /// output), assuming f32 and no reuse (cold traffic upper bound).
+    pub fn buffer_bytes(&self) -> (f64, f64, f64) {
+        const F: f64 = 4.0;
+        match *self {
+            SubgraphKind::Conv2d { n, h, w, cin, cout, kh, kw, .. } => {
+                let g = self.geometry();
+                (
+                    (n * cin * h * w) as f64 * F,
+                    (cout * cin * kh * kw) as f64 * F,
+                    (g.x * g.y) as f64 * F,
+                )
+            }
+            SubgraphKind::DepthwiseConv2d { n, h, w, c, kh, kw, .. } => {
+                let g = self.geometry();
+                ((n * c * h * w) as f64 * F, (c * kh * kw) as f64 * F, (g.x * g.y) as f64 * F)
+            }
+            SubgraphKind::Dense { m, n, k } => {
+                ((m * k) as f64 * F, (k * n) as f64 * F, (m * n) as f64 * F)
+            }
+            SubgraphKind::BatchMatmul { b, m, n, k } => (
+                (b * m * k) as f64 * F,
+                (b * k * n) as f64 * F,
+                (b * m * n) as f64 * F,
+            ),
+            SubgraphKind::Pool2d { n, h, w, c, .. } => {
+                let g = self.geometry();
+                ((n * c * h * w) as f64 * F, 0.0, (g.x * g.y) as f64 * F)
+            }
+            SubgraphKind::Elementwise { len, .. } => {
+                (len as f64 * F, 0.0, len as f64 * F)
+            }
+        }
+    }
+
+    /// Total cold memory traffic in bytes.
+    pub fn total_bytes(&self) -> f64 {
+        let (a, b, c) = self.buffer_bytes();
+        a + b + c
+    }
+
+    /// Arithmetic intensity (flops per cold byte).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() / self.total_bytes().max(1.0)
+    }
+
+    /// Short kind tag for logs/dataset records.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SubgraphKind::Conv2d { .. } => "conv2d",
+            SubgraphKind::DepthwiseConv2d { .. } => "dwconv",
+            SubgraphKind::Dense { .. } => "dense",
+            SubgraphKind::BatchMatmul { .. } => "bmm",
+            SubgraphKind::Pool2d { .. } => "pool",
+            SubgraphKind::Elementwise { .. } => "eltwise",
+        }
+    }
+}
+
+impl Subgraph {
+    pub fn new(name: &str, kind: SubgraphKind) -> Subgraph {
+        Subgraph { name: name.to_string(), kind, repeats: 1 }
+    }
+
+    pub fn with_repeats(mut self, repeats: usize) -> Subgraph {
+        self.repeats = repeats;
+        self
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.kind.geometry()
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.kind.flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv() -> SubgraphKind {
+        // Paper Fig. 1: Conv2d(3, 64, kernel 3, stride 1, pad 0) at 224².
+        SubgraphKind::Conv2d {
+            n: 1,
+            h: 224,
+            w: 224,
+            cin: 3,
+            cout: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 0,
+        }
+    }
+
+    #[test]
+    fn conv_geometry_and_flops() {
+        let g = conv().geometry();
+        assert_eq!(g.x, 222 * 222);
+        assert_eq!(g.y, 64);
+        assert_eq!(g.r, 27);
+        assert!(g.mac);
+        // 2 * X * Y * R MACs
+        assert_eq!(conv().flops(), 2.0 * (222.0 * 222.0) * 64.0 * 27.0);
+    }
+
+    #[test]
+    fn strided_conv_shrinks_output() {
+        let s2 = SubgraphKind::Conv2d {
+            n: 1,
+            h: 56,
+            w: 56,
+            cin: 64,
+            cout: 128,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad: 1,
+        };
+        let g = s2.geometry();
+        assert_eq!(g.x, 28 * 28);
+    }
+
+    #[test]
+    fn dense_geometry() {
+        let d = SubgraphKind::Dense { m: 128, n: 768, k: 3072 };
+        let g = d.geometry();
+        assert_eq!((g.x, g.y, g.r), (128, 768, 3072));
+        assert_eq!(d.flops(), 2.0 * 128.0 * 768.0 * 3072.0);
+    }
+
+    #[test]
+    fn pool_is_not_mac() {
+        let p = SubgraphKind::Pool2d { n: 1, h: 112, w: 112, c: 64, k: 3, stride: 2 };
+        assert!(!p.geometry().mac);
+        assert!(p.flops() > 0.0);
+    }
+
+    #[test]
+    fn arithmetic_intensity_orders_sensibly() {
+        // Big dense matmul should have far higher intensity than eltwise.
+        let d = SubgraphKind::Dense { m: 512, n: 512, k: 512 };
+        let e = SubgraphKind::Elementwise { len: 512 * 512, ops: 2 };
+        assert!(d.arithmetic_intensity() > 50.0 * e.arithmetic_intensity());
+    }
+
+    #[test]
+    fn buffer_bytes_positive_and_consistent() {
+        for kind in [
+            conv(),
+            SubgraphKind::DepthwiseConv2d {
+                n: 1, h: 56, w: 56, c: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+            SubgraphKind::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
+        ] {
+            let (a, b, c) = kind.buffer_bytes();
+            assert!(a > 0.0 && c > 0.0, "{kind:?}");
+            assert_eq!(kind.total_bytes(), a + b + c);
+        }
+    }
+
+    #[test]
+    fn repeats_default_one() {
+        let s = Subgraph::new("t", conv());
+        assert_eq!(s.repeats, 1);
+        assert_eq!(s.with_repeats(3).repeats, 3);
+    }
+}

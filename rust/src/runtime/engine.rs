@@ -1,0 +1,262 @@
+//! The XLA/PJRT execution engine for the cost model's AOT artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::costmodel::layout;
+use crate::util::json::Json;
+
+/// Metadata written by `python/compile/aot.py` alongside the HLO text.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub n_params: usize,
+    pub n_features: usize,
+    pub hidden: usize,
+    pub pred_batch: usize,
+    /// Small-batch predict variant (0 when the artifact set predates it).
+    pub pred_batch_small: usize,
+    pub train_batch: usize,
+}
+
+impl ArtifactMeta {
+    /// Parse `meta.json` and sanity-check it against the compiled-in
+    /// layout constants (the Rust layout mirrors `kernels/ref.py`).
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let get = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta.json missing numeric field '{k}'"))
+        };
+        let meta = ArtifactMeta {
+            n_params: get("n_params")?,
+            n_features: get("n_features")?,
+            hidden: get("hidden")?,
+            pred_batch: get("pred_batch")?,
+            pred_batch_small: v
+                .get("pred_batch_small")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            train_batch: get("train_batch")?,
+        };
+        if meta.n_params != layout::N_PARAMS
+            || meta.n_features != layout::N_FEATURES
+            || meta.hidden != layout::HIDDEN
+        {
+            bail!(
+                "artifact geometry {:?} does not match compiled-in layout \
+                 (N_PARAMS={}, N_FEATURES={}, HIDDEN={}) — re-run `make artifacts`",
+                meta,
+                layout::N_PARAMS,
+                layout::N_FEATURES,
+                layout::HIDDEN
+            );
+        }
+        Ok(meta)
+    }
+}
+
+/// Output of one training step.
+#[derive(Debug)]
+pub struct TrainOutput {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub loss: f32,
+}
+
+/// PJRT CPU engine holding the four compiled executables.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    predict: xla::PjRtLoadedExecutable,
+    /// Small-batch predict variant (evolutionary-population scoring);
+    /// absent in pre-upgrade artifact sets.
+    predict_small: Option<xla::PjRtLoadedExecutable>,
+    train_step: xla::PjRtLoadedExecutable,
+    xi: xla::PjRtLoadedExecutable,
+    loss_eval: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    pub artifact_dir: PathBuf,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))
+}
+
+fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))
+}
+
+impl Engine {
+    /// Load and compile all artifacts from `dir` (default `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let predict_small = if meta.pred_batch_small > 0
+            && dir.join("predict_small.hlo.txt").exists()
+        {
+            Some(load_exe(&client, dir, "predict_small")?)
+        } else {
+            None
+        };
+        Ok(Engine {
+            predict: load_exe(&client, dir, "predict")?,
+            predict_small,
+            train_step: load_exe(&client, dir, "train_step")?,
+            xi: load_exe(&client, dir, "xi")?,
+            loss_eval: load_exe(&client, dir, "loss_eval")?,
+            client,
+            meta,
+            artifact_dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Find the artifact dir: `$MOSES_ARTIFACTS` or `artifacts/` relative
+    /// to the working dir or the crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("MOSES_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("meta.json").exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Upload a host slice as a device buffer.
+    ///
+    /// NOTE: all execution goes through `execute_b` with buffers this
+    /// wrapper owns.  The vendored `xla` crate's literal-taking
+    /// `execute()` leaks every input (`BufferFromHostLiteral(...).release()`
+    /// with no matching free in xla_rs.cc), which OOMs a tuning session
+    /// after a few thousand cost-model calls; `execute_b` leaves input
+    /// ownership with our `PjRtBuffer`s, whose Drop frees them.
+    fn buf(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("buffer_from_host_buffer {dims:?}: {e:?}"))
+    }
+
+    fn exec_tuple(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> Result<xla::Literal> {
+        let out = exe.execute_b(args).map_err(|e| anyhow::anyhow!("execute_b: {e:?}"))?;
+        out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))
+    }
+
+    fn exec1(exe: &xla::PjRtLoadedExecutable, args: &[xla::PjRtBuffer]) -> Result<xla::Literal> {
+        // All entry points are lowered with return_tuple=True.
+        Self::exec_tuple(exe, args)?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1: {e:?}"))
+    }
+
+    /// Score a full prediction batch. `x` is row-major
+    /// `[pred_batch, n_features]`; returns `pred_batch` scores.
+    pub fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.meta.pred_batch;
+        anyhow::ensure!(params.len() == self.meta.n_params, "params len");
+        anyhow::ensure!(x.len() == b * self.meta.n_features, "x len");
+        let args = [self.buf(params, &[params.len()])?, self.buf(x, &[b, self.meta.n_features])?];
+        to_vec_f32(&Self::exec1(&self.predict, &args)?)
+    }
+
+    /// Small-batch predict (`pred_batch_small` rows); errors if the
+    /// artifact set lacks the variant.
+    pub fn predict_small(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.meta.pred_batch_small;
+        let exe = self
+            .predict_small
+            .as_ref()
+            .context("artifacts lack predict_small — re-run `make artifacts`")?;
+        anyhow::ensure!(params.len() == self.meta.n_params, "params len");
+        anyhow::ensure!(x.len() == b * self.meta.n_features, "x len");
+        let args = [self.buf(params, &[params.len()])?, self.buf(x, &[b, self.meta.n_features])?];
+        to_vec_f32(&Self::exec1(exe, &args)?)
+    }
+
+    /// One masked-Adam training step (see `python/compile/model.py`).
+    /// `hp = [lr, wd, adam_step, reserved]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        x: &[f32],
+        y: &[f32],
+        w: &[f32],
+        mask: &[f32],
+        hp: [f32; 4],
+    ) -> Result<TrainOutput> {
+        let b = self.meta.train_batch;
+        let p = self.meta.n_params;
+        anyhow::ensure!(params.len() == p && m.len() == p && v.len() == p && mask.len() == p);
+        anyhow::ensure!(x.len() == b * self.meta.n_features && y.len() == b && w.len() == b);
+        let args = [
+            self.buf(params, &[p])?,
+            self.buf(m, &[p])?,
+            self.buf(v, &[p])?,
+            self.buf(x, &[b, self.meta.n_features])?,
+            self.buf(y, &[b])?,
+            self.buf(w, &[b])?,
+            self.buf(mask, &[p])?,
+            self.buf(&hp, &[4])?,
+        ];
+        let out = Self::exec_tuple(&self.train_step, &args)?;
+        let (p_new, m_new, v_new, loss) =
+            out.to_tuple4().map_err(|e| anyhow::anyhow!("to_tuple4: {e:?}"))?;
+        Ok(TrainOutput {
+            params: to_vec_f32(&p_new)?,
+            m: to_vec_f32(&m_new)?,
+            v: to_vec_f32(&v_new)?,
+            loss: to_vec_f32(&loss)?[0],
+        })
+    }
+
+    /// Per-parameter saliency ξ = |w · ∇w| (paper Eq. 5).
+    pub fn xi(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let b = self.meta.train_batch;
+        anyhow::ensure!(params.len() == self.meta.n_params);
+        anyhow::ensure!(x.len() == b * self.meta.n_features && y.len() == b && w.len() == b);
+        let args = [
+            self.buf(params, &[params.len()])?,
+            self.buf(x, &[b, self.meta.n_features])?,
+            self.buf(y, &[b])?,
+            self.buf(w, &[b])?,
+        ];
+        to_vec_f32(&Self::exec1(&self.xi, &args)?)
+    }
+
+    /// Held-out ranking loss on one batch.
+    pub fn loss_eval(&self, params: &[f32], x: &[f32], y: &[f32], w: &[f32]) -> Result<f32> {
+        let b = self.meta.train_batch;
+        let args = [
+            self.buf(params, &[params.len()])?,
+            self.buf(x, &[b, self.meta.n_features])?,
+            self.buf(y, &[b])?,
+            self.buf(w, &[b])?,
+        ];
+        Ok(to_vec_f32(&Self::exec1(&self.loss_eval, &args)?)?[0])
+    }
+}

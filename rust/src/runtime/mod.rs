@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched.  Python is never on
+//! the tuning path: `make artifacts` runs once at build time, and from
+//! then on the Rust binary is self-contained.
+//!
+//! Interchange format is HLO **text** — jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see DESIGN.md §3).
+
+mod engine;
+pub use engine::{ArtifactMeta, Engine, TrainOutput};

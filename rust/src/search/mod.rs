@@ -1,0 +1,28 @@
+//! Search policies: how candidate schedules are proposed each tuning
+//! round (paper §2.2: "a batch of candidate programs are sampled by an
+//! evolutionary search engine" guided by the cost model).
+
+pub mod evolutionary;
+pub mod random;
+
+pub use evolutionary::EvolutionarySearch;
+pub use random::RandomSearch;
+
+use crate::costmodel::CostModel;
+use crate::program::Schedule;
+use crate::util::rng::Rng;
+
+/// A search policy proposes the next batch of candidates for one task.
+pub trait SearchPolicy {
+    /// Propose up to `k` candidates, guided by `model` scores, avoiding
+    /// fingerprints in `seen`.  `charge_query` is invoked once per
+    /// cost-model batch query so the virtual clock sees search costs.
+    fn propose(
+        &mut self,
+        k: usize,
+        model: &CostModel,
+        seen: &dyn Fn(&Schedule) -> bool,
+        rng: &mut Rng,
+        charge_query: &mut dyn FnMut(),
+    ) -> Vec<Schedule>;
+}

@@ -1,0 +1,82 @@
+//! Uniform-random search: the no-cost-model baseline proposal engine
+//! (also used to seed the evolutionary population).
+
+use super::SearchPolicy;
+use crate::costmodel::CostModel;
+use crate::program::{Schedule, SpaceGenerator};
+use crate::util::rng::Rng;
+
+/// Proposes uniformly random unseen schedules.
+pub struct RandomSearch {
+    pub generator: SpaceGenerator,
+}
+
+impl RandomSearch {
+    pub fn new(generator: SpaceGenerator) -> RandomSearch {
+        RandomSearch { generator }
+    }
+}
+
+impl SearchPolicy for RandomSearch {
+    fn propose(
+        &mut self,
+        k: usize,
+        _model: &CostModel,
+        seen: &dyn Fn(&Schedule) -> bool,
+        rng: &mut Rng,
+        _charge_query: &mut dyn FnMut(),
+    ) -> Vec<Schedule> {
+        let mut out: Vec<Schedule> = Vec::with_capacity(k);
+        let mut attempts = 0;
+        while out.len() < k && attempts < 128 * k.max(4) {
+            let s = self.generator.sample(rng);
+            if !seen(&s) && !out.contains(&s) {
+                out.push(s);
+            }
+            attempts += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{CostModel, RustBackend};
+    use crate::program::subgraph::Geometry;
+    use std::sync::Arc;
+
+    fn model() -> CostModel {
+        CostModel::new(Arc::new(RustBackend { pred_batch: 8, train_batch: 8 }), &mut Rng::new(0))
+    }
+
+    #[test]
+    fn proposes_k_unseen() {
+        let g = Geometry { x: 4096, y: 128, r: 256, mac: true };
+        let mut rs = RandomSearch::new(SpaceGenerator::new(g));
+        let mut rng = Rng::new(1);
+        let mut charges = 0;
+        let out = rs.propose(16, &model(), &|_| false, &mut rng, &mut || charges += 1);
+        assert_eq!(out.len(), 16);
+        assert_eq!(charges, 0); // random search never queries the model
+    }
+
+    #[test]
+    fn respects_seen_filter() {
+        let g = Geometry { x: 4096, y: 128, r: 256, mac: true };
+        let gen = SpaceGenerator::new(g);
+        let mut rng = Rng::new(2);
+        let banned: Vec<Schedule> = gen.sample_distinct(&mut rng, 32);
+        let mut rs = RandomSearch::new(gen);
+        let out = rs.propose(
+            8,
+            &model(),
+            &|s| banned.contains(s),
+            &mut rng,
+            &mut || {},
+        );
+        for s in &out {
+            assert!(!banned.contains(s));
+        }
+    }
+}

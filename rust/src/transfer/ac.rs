@@ -1,0 +1,134 @@
+//! Adaptive controller (paper §3.5): early-terminates the hardware
+//! data-collection phase of a task when the cost model's predictions
+//! have stabilized.
+//!
+//! Per task, trials are split into measured (training) rounds and
+//! prediction-only rounds with initial ratio `p`.  After each measured
+//! batch the controller records the model's mean prediction over that
+//! batch; once the coefficient of variation CV = σ/µ over the recorded
+//! batch means drops below a threshold (and at least `min_batches` are
+//! in), measurement stops early and the remaining trials run on model
+//! predictions alone — saving the expensive on-device phase.
+
+use crate::util::stats;
+
+/// CV-based early-termination controller for one task.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    pub cv_threshold: f64,
+    pub min_batches: usize,
+    /// Mean model prediction per measured batch, in arrival order.
+    batch_means: Vec<f64>,
+    /// Latched once terminated (never resumes within a task).
+    terminated: bool,
+}
+
+impl AdaptiveController {
+    pub fn new(cv_threshold: f64, min_batches: usize) -> AdaptiveController {
+        AdaptiveController {
+            cv_threshold,
+            min_batches: min_batches.max(2),
+            batch_means: Vec::new(),
+            terminated: false,
+        }
+    }
+
+    /// Record the model's predictions over one measured batch.
+    pub fn observe_batch(&mut self, predictions: &[f32]) {
+        if predictions.is_empty() {
+            return;
+        }
+        let mean =
+            predictions.iter().map(|&p| p as f64).sum::<f64>() / predictions.len() as f64;
+        self.batch_means.push(mean);
+        if self.batch_means.len() >= self.min_batches {
+            // CV over the most recent window (stale early batches from a
+            // still-untrained model shouldn't block termination forever).
+            let window = &self.batch_means[self.batch_means.len().saturating_sub(self.min_batches)..];
+            let cv = stats::coefficient_of_variation(window);
+            if cv < self.cv_threshold {
+                self.terminated = true;
+            }
+        }
+    }
+
+    /// Should the tuner keep doing on-device measurements for this task?
+    pub fn keep_measuring(&self) -> bool {
+        !self.terminated
+    }
+
+    /// Number of batches observed so far.
+    pub fn batches_seen(&self) -> usize {
+        self.batch_means.len()
+    }
+
+    /// Current CV over the observation window (∞ until enough batches).
+    pub fn current_cv(&self) -> f64 {
+        if self.batch_means.len() < self.min_batches {
+            f64::INFINITY
+        } else {
+            let window =
+                &self.batch_means[self.batch_means.len().saturating_sub(self.min_batches)..];
+            stats::coefficient_of_variation(window)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_min_batches_before_terminating() {
+        let mut ac = AdaptiveController::new(0.5, 3);
+        ac.observe_batch(&[1.0, 1.0]);
+        ac.observe_batch(&[1.0, 1.0]);
+        assert!(ac.keep_measuring(), "terminated after only 2 batches");
+        ac.observe_batch(&[1.0, 1.0]);
+        assert!(!ac.keep_measuring(), "stable predictions should terminate");
+    }
+
+    #[test]
+    fn unstable_predictions_keep_measuring() {
+        let mut ac = AdaptiveController::new(0.05, 3);
+        for i in 0..10 {
+            // Wildly varying batch means.
+            let v = if i % 2 == 0 { 0.1 } else { 10.0 };
+            ac.observe_batch(&[v as f32; 4]);
+        }
+        assert!(ac.keep_measuring());
+        assert!(ac.current_cv() > 0.05);
+    }
+
+    #[test]
+    fn stabilization_after_noise_terminates() {
+        let mut ac = AdaptiveController::new(0.05, 3);
+        ac.observe_batch(&[0.1; 4]);
+        ac.observe_batch(&[5.0; 4]);
+        ac.observe_batch(&[0.4; 4]);
+        assert!(ac.keep_measuring());
+        // Model converges: last 3 batches stable.
+        ac.observe_batch(&[2.0; 4]);
+        ac.observe_batch(&[2.02; 4]);
+        ac.observe_batch(&[1.98; 4]);
+        assert!(!ac.keep_measuring(), "cv={}", ac.current_cv());
+    }
+
+    #[test]
+    fn termination_latches() {
+        let mut ac = AdaptiveController::new(0.5, 2);
+        ac.observe_batch(&[1.0; 4]);
+        ac.observe_batch(&[1.0; 4]);
+        assert!(!ac.keep_measuring());
+        // Even a wild batch afterwards doesn't resume measurement.
+        ac.observe_batch(&[99.0; 4]);
+        assert!(!ac.keep_measuring());
+    }
+
+    #[test]
+    fn empty_batch_ignored() {
+        let mut ac = AdaptiveController::new(0.5, 2);
+        ac.observe_batch(&[]);
+        assert_eq!(ac.batches_seen(), 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Cross-device cost-model adaptation strategies (the paper's §3) and
+//! the baselines it is evaluated against (§4.4):
+//!
+//! * `AnsorRandom`     — random-init model trained from scratch online;
+//! * `TensetPretrain`  — pre-trained source model, frozen on target;
+//! * `TensetFinetune`  — pre-trained source model, vanilla fine-tuning
+//!   (all parameters);
+//! * `Moses`           — pre-trained source model + lottery-ticket masked
+//!   fine-tuning (ξ-ranked transferable parameters; variant parameters
+//!   decay to zero) + the adaptive controller.
+
+pub mod ac;
+pub mod moses;
+
+pub use ac::AdaptiveController;
+pub use moses::MosesAdapter;
+
+use crate::costmodel::{layout, CostModel, Mask};
+use crate::util::rng::Rng;
+
+/// How the cost model is initialized and updated during tuning.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Strategy {
+    /// No cost model guidance at all: pure random search with
+    /// measurements ("Raw" uses the default schedule instead; this is an
+    /// extra diagnostics baseline).
+    RandomSearch,
+    /// Random init + vanilla online training (Ansor default).
+    AnsorRandom,
+    /// Pre-trained on source; never updated on target.
+    TensetPretrain,
+    /// Pre-trained on source; vanilla full fine-tuning on target.
+    TensetFinetune,
+    /// Pre-trained on source; Moses lottery-ticket adaptation.
+    Moses(MosesConfig),
+}
+
+/// Moses hyper-parameters (paper §4: ϑ = 0.5, ratio ablated in Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MosesConfig {
+    /// If set, keep exactly this fraction of parameters transferable
+    /// (ranking mechanism, Fig. 6 ablation); otherwise threshold ϑ.
+    pub ratio: Option<f64>,
+    /// Distilling boundary threshold ϑ on normalized ξ.
+    pub theta: f32,
+    /// Weight decay applied to domain-variant parameters (Eq. 7).
+    pub weight_decay: f32,
+    /// Refresh the mask every this many adaptation rounds ("iteratively
+    /// update the boundary", §3.4).
+    pub mask_refresh_every: usize,
+    /// AC: coefficient-of-variation threshold for early termination of
+    /// hardware data collection (§3.5).
+    pub ac_cv_threshold: f64,
+    /// AC: minimum measured batches before early termination can fire.
+    pub ac_min_batches: usize,
+    /// Initial fraction of trials allotted to measured (training) rounds
+    /// (the p-split of §3.5).
+    pub train_fraction: f64,
+}
+
+impl Default for MosesConfig {
+    fn default() -> Self {
+        MosesConfig {
+            ratio: Some(0.5),
+            theta: 0.5,
+            weight_decay: 0.02,
+            mask_refresh_every: 2,
+            ac_cv_threshold: 0.08,
+            ac_min_batches: 3,
+            train_fraction: 0.7,
+        }
+    }
+}
+
+impl Strategy {
+    /// Parse a CLI name.
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        match name.to_ascii_lowercase().as_str() {
+            "random" | "random-search" => Some(Strategy::RandomSearch),
+            "ansor-random" | "ansor" => Some(Strategy::AnsorRandom),
+            "tenset-pretrain" | "pretrain" => Some(Strategy::TensetPretrain),
+            "tenset-finetune" | "finetune" => Some(Strategy::TensetFinetune),
+            "moses" => Some(Strategy::Moses(MosesConfig::default())),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::RandomSearch => "random-search",
+            Strategy::AnsorRandom => "ansor-random",
+            Strategy::TensetPretrain => "tenset-pretrain",
+            Strategy::TensetFinetune => "tenset-finetune",
+            Strategy::Moses(_) => "moses",
+        }
+    }
+
+    /// Does this strategy start from the pre-trained source checkpoint?
+    pub fn uses_pretrained(&self) -> bool {
+        matches!(
+            self,
+            Strategy::TensetPretrain | Strategy::TensetFinetune | Strategy::Moses(_)
+        )
+    }
+
+    /// Does this strategy update the model online?
+    pub fn trains_online(&self) -> bool {
+        matches!(
+            self,
+            Strategy::AnsorRandom | Strategy::TensetFinetune | Strategy::Moses(_)
+        )
+    }
+
+    /// The parameter mask used for online updates.
+    pub fn initial_mask(&self) -> Mask {
+        Mask::all_ones(layout::N_PARAMS)
+    }
+}
+
+/// Initialize a cost model for a strategy.
+pub fn init_model(
+    strategy: &Strategy,
+    backend: std::sync::Arc<dyn crate::costmodel::Backend>,
+    pretrained: Option<&[f32]>,
+    rng: &mut Rng,
+) -> CostModel {
+    if strategy.uses_pretrained() {
+        let params = pretrained
+            .expect("strategy requires a pre-trained checkpoint")
+            .to_vec();
+        CostModel::with_params(backend, params)
+    } else {
+        CostModel::new(backend, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::RustBackend;
+    use std::sync::Arc;
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for n in ["random", "ansor-random", "tenset-pretrain", "tenset-finetune", "moses"] {
+            let s = Strategy::from_name(n).unwrap();
+            assert!(Strategy::from_name(s.name()).is_some());
+        }
+        assert!(Strategy::from_name("autotvm").is_none());
+    }
+
+    #[test]
+    fn pretrained_flags_consistent() {
+        assert!(!Strategy::AnsorRandom.uses_pretrained());
+        assert!(Strategy::AnsorRandom.trains_online());
+        assert!(Strategy::TensetPretrain.uses_pretrained());
+        assert!(!Strategy::TensetPretrain.trains_online());
+        let moses = Strategy::Moses(MosesConfig::default());
+        assert!(moses.uses_pretrained() && moses.trains_online());
+    }
+
+    #[test]
+    fn init_model_uses_checkpoint() {
+        let backend = Arc::new(RustBackend { pred_batch: 8, train_batch: 8 });
+        let ckpt = vec![0.5f32; layout::N_PARAMS];
+        let m = init_model(
+            &Strategy::TensetFinetune,
+            backend.clone(),
+            Some(&ckpt),
+            &mut Rng::new(1),
+        );
+        assert_eq!(m.params[0], 0.5);
+        let m2 = init_model(&Strategy::AnsorRandom, backend, None, &mut Rng::new(1));
+        assert_ne!(m2.params[0], 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pretrained_strategy_without_checkpoint_panics() {
+        let backend = Arc::new(RustBackend { pred_batch: 8, train_batch: 8 });
+        init_model(&Strategy::TensetFinetune, backend, None, &mut Rng::new(1));
+    }
+}

@@ -1,0 +1,138 @@
+//! The Moses adapter: lottery-ticket masked fine-tuning (paper §3.4).
+//!
+//! Holds the current transferable/variant boundary (a [`Mask`]) and
+//! refreshes it from fresh ξ = |w·∇w| saliencies as tuning phases
+//! advance, blending with the previous boundary for stability
+//! ("iteratively update the boundary ... during each online training
+//! epoch").
+
+use super::MosesConfig;
+use crate::costmodel::{layout, CostModel, Mask};
+use anyhow::Result;
+
+/// Stateful Moses adaptation controller for one tuning session.
+pub struct MosesAdapter {
+    pub config: MosesConfig,
+    mask: Mask,
+    rounds_since_refresh: usize,
+    refreshes: usize,
+}
+
+impl MosesAdapter {
+    pub fn new(config: MosesConfig) -> MosesAdapter {
+        MosesAdapter {
+            config,
+            // Until the first ξ is computed everything is trainable —
+            // the first refresh happens on the first observed batch.
+            mask: Mask::all_ones(layout::N_PARAMS),
+            rounds_since_refresh: usize::MAX / 2, // force refresh at start
+            refreshes: 0,
+        }
+    }
+
+    /// Current transferable-parameter mask.
+    pub fn mask(&self) -> &Mask {
+        &self.mask
+    }
+
+    pub fn refreshes(&self) -> usize {
+        self.refreshes
+    }
+
+    /// Weight decay to apply to domain-variant parameters (Eq. 7).
+    pub fn weight_decay(&self) -> f32 {
+        self.config.weight_decay
+    }
+
+    /// Called once per adaptation round with the newest labeled batch;
+    /// recomputes the boundary when due.  Returns true if the mask was
+    /// refreshed (costs one ξ computation on the virtual clock).
+    pub fn maybe_refresh(
+        &mut self,
+        model: &CostModel,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<bool> {
+        self.rounds_since_refresh += 1;
+        if self.rounds_since_refresh <= self.config.mask_refresh_every {
+            return Ok(false);
+        }
+        let xi = model.xi(x, y)?;
+        let fresh = match self.config.ratio {
+            Some(r) => Mask::from_xi_ratio(&xi, r),
+            None => Mask::from_xi_threshold(&xi, self.config.theta),
+        };
+        self.mask = if self.refreshes == 0 {
+            fresh
+        } else {
+            // Stabilize: previously-transferable parameters are retained
+            // with moderate probability so the boundary drifts rather
+            // than jumps.
+            Mask::ema_refresh(&self.mask, &fresh, 0.3)
+        };
+        self.rounds_since_refresh = 0;
+        self.refreshes += 1;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::RustBackend;
+    use crate::program::N_FEATURES;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn model() -> CostModel {
+        CostModel::new(
+            Arc::new(RustBackend { pred_batch: 16, train_batch: 16 }),
+            &mut Rng::new(7),
+        )
+    }
+
+    fn batch(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..n * N_FEATURES).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn first_round_refreshes_and_hits_ratio() {
+        let cfg = MosesConfig { ratio: Some(0.5), ..MosesConfig::default() };
+        let mut ad = MosesAdapter::new(cfg);
+        let m = model();
+        let mut rng = Rng::new(1);
+        let (x, y) = batch(&mut rng, 16);
+        assert!(ad.maybe_refresh(&m, &x, &y).unwrap());
+        let ratio = ad.mask().ratio();
+        assert!((ratio - 0.5).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn respects_refresh_cadence() {
+        let cfg = MosesConfig { mask_refresh_every: 3, ..MosesConfig::default() };
+        let mut ad = MosesAdapter::new(cfg);
+        let m = model();
+        let mut rng = Rng::new(2);
+        let (x, y) = batch(&mut rng, 16);
+        assert!(ad.maybe_refresh(&m, &x, &y).unwrap()); // initial
+        assert!(!ad.maybe_refresh(&m, &x, &y).unwrap());
+        assert!(!ad.maybe_refresh(&m, &x, &y).unwrap());
+        assert!(!ad.maybe_refresh(&m, &x, &y).unwrap());
+        assert!(ad.maybe_refresh(&m, &x, &y).unwrap()); // 4th after initial
+        assert_eq!(ad.refreshes(), 2);
+    }
+
+    #[test]
+    fn threshold_mode_produces_some_boundary() {
+        let cfg = MosesConfig { ratio: None, theta: 0.5, ..MosesConfig::default() };
+        let mut ad = MosesAdapter::new(cfg);
+        let m = model();
+        let mut rng = Rng::new(3);
+        let (x, y) = batch(&mut rng, 16);
+        ad.maybe_refresh(&m, &x, &y).unwrap();
+        let r = ad.mask().ratio();
+        assert!(r > 0.0 && r < 1.0, "degenerate boundary {r}");
+    }
+}

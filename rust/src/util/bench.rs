@@ -1,0 +1,152 @@
+//! Criterion-style micro/throughput bench harness (criterion is not in
+//! the offline crate cache).  Used by the `rust/benches/*` binaries:
+//! warmup, timed iterations, robust stats, and a stable one-line report
+//! format so bench output diffs cleanly across the perf pass.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark's collected timings.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds.
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p05_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 5.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 95.0)
+    }
+
+    /// Human-readable single line, e.g.
+    /// `bench feature_extract        median 12.3 µs  [11.9 µs .. 13.0 µs]  n=64`.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<32} median {:>10}  [{} .. {}]  n={}",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p05_ns()),
+            fmt_ns(self.p95_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.1} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with warmup + adaptive iteration count.
+pub struct Bencher {
+    /// Target total measurement time per bench.
+    pub measure_time: Duration,
+    /// Warmup time before sampling.
+    pub warmup_time: Duration,
+    /// Cap on sample count (to bound memory / long iterations).
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Fast-mode default keeps `cargo bench` minutes-scale across the
+        // whole suite; override per-bench for the perf pass.
+        Bencher {
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(200),
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bencher {
+    /// Run `f` repeatedly; `f` should perform ONE logical iteration and
+    /// return a value which is passed through `std::hint::black_box` to
+    /// defeat dead-code elimination.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup_time {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure_time && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        if samples.is_empty() {
+            // Single extremely slow iteration: measure once.
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult { name: name.to_string(), samples_ns: samples };
+        println!("{}", res.report());
+        res
+    }
+
+    /// Time one single invocation (for end-to-end experiment drivers that
+    /// are too slow to repeat).
+    pub fn run_once<T, F: FnOnce() -> T>(&self, name: &str, f: F) -> (BenchResult, T) {
+        let t0 = Instant::now();
+        let out = f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        let res = BenchResult { name: name.to_string(), samples_ns: vec![ns] };
+        println!("{}", res.report());
+        (res, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            max_samples: 50,
+        };
+        let r = b.run("spin", || (0..100).sum::<u64>());
+        assert!(!r.samples_ns.is_empty());
+        assert!(r.median_ns() > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn run_once_returns_value() {
+        let b = Bencher::default();
+        let (r, v) = b.run_once("once", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.samples_ns.len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(12_000_000_000.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,235 @@
+//! Declarative command-line flag parsing (clap is not in the offline
+//! crate cache).  Supports `--flag value`, `--flag=value`, boolean
+//! switches, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None = required unless boolean.
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// A set of flags for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Flags {
+    specs: Vec<FlagSpec>,
+}
+
+/// Parsed flag values.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    /// Positional (non-flag) arguments in order.
+    pub positional: Vec<String>,
+}
+
+/// CLI parse error.
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Flags {
+    pub fn new() -> Flags {
+        Flags { specs: Vec::new() }
+    }
+
+    /// Add a value flag with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: Some(default), boolean: false });
+        self
+    }
+
+    /// Add a required value flag.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: None, boolean: false });
+        self
+    }
+
+    /// Add a boolean switch (default false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: Some("false"), boolean: true });
+        self
+    }
+
+    /// Render help text for this flag set.
+    pub fn help(&self, cmd: &str, about: &str) -> String {
+        let mut out = format!("{about}\n\nUsage: moses {cmd} [flags]\n\nFlags:\n");
+        for s in &self.specs {
+            let default = match (&s.default, s.boolean) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            out.push_str(&format!("  --{:<24} {}{}\n", s.name, s.help, default));
+        }
+        out
+    }
+
+    /// Parse an argument list against the specs.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name}")))?;
+                let value = if spec.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                };
+                values.insert(name, value);
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        for s in &self.specs {
+            if !values.contains_key(s.name) {
+                match s.default {
+                    Some(d) => {
+                        values.insert(s.name.to_string(), d.to_string());
+                    }
+                    None => return Err(CliError(format!("missing required flag --{}", s.name))),
+                }
+            }
+        }
+        Ok(Parsed { values, positional })
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag {name} not declared in spec"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects an integer, got '{}'", self.get(name))))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects an integer, got '{}'", self.get(name))))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects a number, got '{}'", self.get(name))))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn flags() -> Flags {
+        Flags::new()
+            .opt("trials", "128", "tuning trials")
+            .req("model", "model name")
+            .switch("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_defaults_and_values() {
+        let p = flags().parse(&strs(&["--model", "resnet18"])).unwrap();
+        assert_eq!(p.get("model"), "resnet18");
+        assert_eq!(p.get_usize("trials").unwrap(), 128);
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_and_switch() {
+        let p = flags()
+            .parse(&strs(&["--model=bert", "--trials=5", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get("model"), "bert");
+        assert_eq!(p.get_usize("trials").unwrap(), 5);
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(flags().parse(&strs(&["--trials", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(flags().parse(&strs(&["--model", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = flags().parse(&strs(&["pos1", "--model", "x", "pos2"])).unwrap();
+        assert_eq!(p.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn list_flag() {
+        let f = Flags::new().opt("devices", "tx2,xavier", "device list");
+        let p = f.parse(&[]).unwrap();
+        assert_eq!(p.get_list("devices"), vec!["tx2", "xavier"]);
+    }
+
+    #[test]
+    fn bad_number_reports_flag() {
+        let p = flags().parse(&strs(&["--model", "x", "--trials", "abc"])).unwrap();
+        let err = p.get_usize("trials").unwrap_err();
+        assert!(err.0.contains("trials"));
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = flags().help("tune", "Tune a model");
+        assert!(h.contains("--trials") && h.contains("required") && h.contains("switch"));
+    }
+}

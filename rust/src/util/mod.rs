@@ -1,0 +1,15 @@
+//! Shared utilities: deterministic RNG, statistics, and the offline
+//! stand-ins for crates that are not available in this image's crate
+//! cache (clap → [`cli`], serde_json → [`json`], criterion → [`bench`],
+//! proptest → [`prop`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::Summary;

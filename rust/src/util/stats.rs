@@ -1,0 +1,227 @@
+//! Small statistics helpers used across the tuner: running summaries,
+//! coefficient of variation (the AC module's certainty signal, paper
+//! §3.5), and rank correlation (cost-model quality diagnostics).
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns a zeroed summary for an empty slice.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+        }
+        Summary { n: xs.len(), mean, std: var.sqrt(), min, max }
+    }
+
+    /// Coefficient of variation σ/µ — the paper's AC certainty statistic.
+    /// Returns +inf when the mean is ~0 (maximally uncertain).
+    pub fn cv(&self) -> f64 {
+        if self.mean.abs() < 1e-12 {
+            f64::INFINITY
+        } else {
+            self.std / self.mean.abs()
+        }
+    }
+}
+
+/// Coefficient of variation of a sample (σ/µ).
+pub fn coefficient_of_variation(xs: &[f64]) -> f64 {
+    Summary::of(xs).cv()
+}
+
+/// Percentile via linear interpolation (p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let f = rank - lo as f64;
+        v[lo] * (1.0 - f) + v[hi] * f
+    }
+}
+
+/// Ranks with average tie-handling (1-based).
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut r = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..xs.len() {
+        let a = xs[i] - mx;
+        let b = ys[i] - my;
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+/// Spearman rank correlation — the standard cost-model quality metric
+/// (what matters for tuning is ranking candidates, not absolute error).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Fraction of ordered pairs ranked concordantly by `pred` w.r.t. `truth`
+/// (pair accuracy; 1.0 = perfect ranking, 0.5 = random).
+pub fn pair_accuracy(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..pred.len() {
+        for j in (i + 1)..pred.len() {
+            if truth[i] == truth[j] {
+                continue;
+            }
+            total += 1;
+            if (pred[i] - pred[j]) * (truth[i] - truth[j]) > 0.0 {
+                correct += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.5
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// Top-k recall: of the true top-k items, what fraction appears in the
+/// predicted top-k?  This is the metric that actually gates tuning
+/// quality (the tuner measures only the predicted top-k).
+pub fn top_k_recall(pred: &[f64], truth: &[f64], k: usize) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let k = k.min(pred.len());
+    if k == 0 {
+        return 0.0;
+    }
+    let top_by = |xs: &[f64]| {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        idx.truncate(k);
+        idx
+    };
+    let pt = top_by(pred);
+    let tt = top_by(truth);
+    let hits = tt.iter().filter(|i| pt.contains(i)).count();
+    hits as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.cv().is_infinite());
+    }
+
+    #[test]
+    fn cv_constant_is_zero() {
+        assert_eq!(coefficient_of_variation(&[3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverted() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [10.0, 20.0, 30.0, 40.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+        let inv = [40.0, 30.0, 20.0, 10.0];
+        assert!((spearman(&xs, &inv) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let xs = [1.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pair_accuracy_bounds() {
+        let truth = [1.0, 2.0, 3.0];
+        assert_eq!(pair_accuracy(&[1.0, 2.0, 3.0], &truth), 1.0);
+        assert_eq!(pair_accuracy(&[3.0, 2.0, 1.0], &truth), 0.0);
+    }
+
+    #[test]
+    fn top_k_recall_basic() {
+        let truth = [0.1, 0.9, 0.5, 0.7];
+        let pred = [0.0, 1.0, 0.2, 0.8]; // top-2 = {1,3} both ways
+        assert_eq!(top_k_recall(&pred, &truth, 2), 1.0);
+        let bad = [1.0, 0.0, 0.1, 0.2]; // top-2 = {0,3}; truth {1,3}
+        assert_eq!(top_k_recall(&bad, &truth, 2), 0.5);
+    }
+}

@@ -1,0 +1,276 @@
+//! End-to-end pipeline integration tests on the pure-Rust backend
+//! (fast, artifact-free): pretraining → transfer → tuning → metrics,
+//! plus the cross-device mechanism tests that pin the paper's core
+//! claims at the system level.
+
+use std::sync::Arc;
+
+use moses::coordinator::{AutoTuner, BackendKind, TuneConfig};
+use moses::costmodel::{layout, CostModel, Mask, RustBackend};
+use moses::dataset::gen::{generate, GenConfig, TaskSource};
+use moses::device::presets;
+use moses::metrics;
+use moses::models::zoo;
+use moses::program::{Subgraph, SubgraphKind};
+use moses::transfer::{MosesConfig, Strategy};
+use moses::util::rng::Rng;
+
+fn backend() -> Arc<RustBackend> {
+    Arc::new(RustBackend { pred_batch: 64, train_batch: 64 })
+}
+
+fn small_tasks() -> Vec<Subgraph> {
+    vec![
+        Subgraph::new(
+            "pl.conv",
+            SubgraphKind::Conv2d {
+                n: 1, h: 28, w: 28, cin: 96, cout: 96, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+        ),
+        Subgraph::new("pl.dense", SubgraphKind::Dense { m: 128, n: 512, k: 768 }),
+        Subgraph::new(
+            "pl.dw",
+            SubgraphKind::DepthwiseConv2d {
+                n: 1, h: 28, w: 28, c: 192, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+        ),
+    ]
+}
+
+/// Pre-train a small model on a K80 corpus over the same tasks.
+fn pretrain(seed: u64, epochs: usize) -> Vec<f32> {
+    let ds = generate(
+        &presets::tesla_k80(),
+        TaskSource::Tasks(small_tasks()),
+        &GenConfig { records_per_task: 48, seed },
+    );
+    let (x, y) = ds.training_arrays();
+    let mut rng = Rng::new(seed);
+    let mut model = CostModel::new(backend(), &mut rng);
+    let mask = Mask::all_ones(layout::N_PARAMS);
+    for _ in 0..epochs {
+        model.train_epoch(&x, &y, &mask, 1e-3, 0.0, &mut rng).unwrap();
+    }
+    model.params.clone()
+}
+
+fn cfg(strategy: Strategy, trials: usize) -> TuneConfig {
+    TuneConfig {
+        trials_per_task: trials,
+        measure_batch: 4,
+        strategy,
+        population: 32,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed: 7,
+        ..TuneConfig::default()
+    }
+}
+
+#[test]
+fn full_pipeline_pretrain_transfer_tune() {
+    let pre = pretrain(1, 4);
+    let target = presets::jetson_tx2();
+
+    let run = |strategy: Strategy| {
+        let model = CostModel::with_params(backend(), pre.clone());
+        let mut tuner = AutoTuner::with_model(&cfg(strategy, 24), target.clone(), model);
+        tuner.tune(&small_tasks()).unwrap()
+    };
+
+    let finetune = run(Strategy::TensetFinetune);
+    let moses_s = run(Strategy::Moses(MosesConfig::default()));
+    let pretrain_only = run(Strategy::TensetPretrain);
+
+    // All improve on the default schedule.
+    assert!(finetune.speedup() > 1.0);
+    assert!(moses_s.speedup() > 1.0);
+
+    // The paper's qualitative shape:
+    // 1. Moses searches faster than vanilla fine-tuning (AC + masked
+    //    updates ⇒ fewer measurements).
+    assert!(
+        moses_s.search_time_s() < finetune.search_time_s(),
+        "moses {} vs finetune {}",
+        moses_s.search_time_s(),
+        finetune.search_time_s()
+    );
+    // 2. Pretrain-only is the fastest searcher (no online learning).
+    assert!(pretrain_only.search_time_s() < moses_s.search_time_s());
+    // 3. Moses' tuned latency is competitive with fine-tuning (within
+    //    20% on this tiny budget) and better than pretrain-only.
+    assert!(
+        moses_s.total_best_latency_ms() < 1.2 * finetune.total_best_latency_ms(),
+        "moses latency {} vs finetune {}",
+        moses_s.total_best_latency_ms(),
+        finetune.total_best_latency_ms()
+    );
+    // 4. CMAT vs finetune is positive (the paper's headline claim).
+    let cmat = metrics::cmat(
+        metrics::search_gain(finetune.search_time_s(), moses_s.search_time_s()),
+        metrics::latency_reduction(
+            finetune.total_best_latency_ms(),
+            moses_s.total_best_latency_ms(),
+        ),
+    );
+    assert!(cmat > 0.0, "CMAT {cmat}");
+}
+
+#[test]
+fn transfer_beats_cold_start_on_quality_per_measurement() {
+    // With the same small measurement budget, starting from the source
+    // checkpoint should not be worse than a random-init model (the whole
+    // premise of cross-device transfer).
+    let pre = pretrain(3, 4);
+    let target = presets::rtx_2060();
+
+    let model_pre = CostModel::with_params(backend(), pre);
+    let mut tuner_pre =
+        AutoTuner::with_model(&cfg(Strategy::TensetFinetune, 16), target.clone(), model_pre);
+    let s_pre = tuner_pre.tune(&small_tasks()).unwrap();
+
+    let mut tuner_cold =
+        AutoTuner::from_config(&cfg(Strategy::AnsorRandom, 16), target).unwrap();
+    let s_cold = tuner_cold.tune(&small_tasks()).unwrap();
+
+    assert!(
+        s_pre.total_best_latency_ms() < 1.25 * s_cold.total_best_latency_ms(),
+        "transfer {} vs cold {}",
+        s_pre.total_best_latency_ms(),
+        s_cold.total_best_latency_ms()
+    );
+}
+
+#[test]
+fn moses_masked_training_changes_fewer_parameters() {
+    // Mechanism check at system level: after a Moses session, the
+    // fraction of parameters that moved from the checkpoint should be
+    // well below a vanilla fine-tune session's.
+    let pre = pretrain(5, 2);
+    let target = presets::jetson_tx2();
+
+    let moved_frac = |params: &[f32]| {
+        params
+            .iter()
+            .zip(&pre)
+            .filter(|(a, b)| (**a - **b).abs() > 1e-7)
+            .count() as f64
+            / params.len() as f64
+    };
+
+    let model_mo = CostModel::with_params(backend(), pre.clone());
+    let mo_cfg = cfg(
+        Strategy::Moses(MosesConfig { ratio: Some(0.3), ..MosesConfig::default() }),
+        16,
+    );
+    let mut tuner_mo = AutoTuner::with_model(&mo_cfg, target.clone(), model_mo);
+    tuner_mo.tune(&small_tasks()[..1]).unwrap();
+    let moses_moved = moved_frac(&tuner_mo.model().params);
+
+    let model_ft = CostModel::with_params(backend(), pre.clone());
+    let mut tuner_ft =
+        AutoTuner::with_model(&cfg(Strategy::TensetFinetune, 16), target, model_ft);
+    tuner_ft.tune(&small_tasks()[..1]).unwrap();
+    let ft_moved = moved_frac(&tuner_ft.model().params);
+
+    // Variant params under Moses move only by weight decay (tiny but
+    // non-zero), so compare Adam-scale movements instead.
+    let big_moved = |params: &[f32]| {
+        params
+            .iter()
+            .zip(&pre)
+            .filter(|(a, b)| (**a - **b).abs() > 1e-4)
+            .count() as f64
+            / params.len() as f64
+    };
+    let moses_big = big_moved(&tuner_mo.model().params);
+    let ft_big = big_moved(&tuner_ft.model().params);
+    assert!(
+        moses_big < ft_big,
+        "moses moved {moses_big} (any: {moses_moved}) vs finetune {ft_big} (any: {ft_moved})"
+    );
+}
+
+#[test]
+fn tuning_a_full_zoo_model_terminates() {
+    // Whole SqueezeNet (23 tasks) through the rust backend at tiny
+    // budget: exercises every subgraph kind end to end.
+    let mut tuner = AutoTuner::from_config(
+        &cfg(Strategy::RandomSearch, 8),
+        presets::rtx_2080(),
+    )
+    .unwrap();
+    let session = tuner.tune(&zoo::squeezenet().tasks()).unwrap();
+    assert_eq!(session.tasks.len(), 23);
+    assert!(session.total_best_latency_ms() > 0.0);
+    assert!(session.speedup() >= 1.0);
+}
+
+#[test]
+fn virtual_clock_reflects_device_economics() {
+    // The same tuning work must cost far more virtual time on TX2 than
+    // on RTX 2060 (embedded measurement overhead — why the paper's
+    // efficiency gains are larger there).
+    let run_on = |arch: moses::device::DeviceArch| {
+        let mut tuner =
+            AutoTuner::from_config(&cfg(Strategy::RandomSearch, 8), arch).unwrap();
+        tuner.tune(&small_tasks()[..1]).unwrap().search_time_s()
+    };
+    let t_2060 = run_on(presets::rtx_2060());
+    let t_tx2 = run_on(presets::jetson_tx2());
+    assert!(t_tx2 > 5.0 * t_2060, "tx2 {t_tx2} vs 2060 {t_2060}");
+}
+
+#[test]
+fn prop_session_invariants_hold_for_random_configs() {
+    // Randomized coordinator invariants (proptest-style, seeded runner):
+    // whatever the strategy/budget, a session must produce a finite best
+    // latency no worse than ~the default, a measurement count bounded by
+    // the trial budget, and a monotone convergence history.
+    moses::util::prop::check_with(0xC0DE, 12, |rng| {
+        let strategies = [
+            Strategy::RandomSearch,
+            Strategy::AnsorRandom,
+            Strategy::TensetFinetune,
+            Strategy::TensetPretrain,
+            Strategy::Moses(MosesConfig::default()),
+        ];
+        let strategy = strategies[rng.below(strategies.len())].clone();
+        let trials = 4 + rng.below(16);
+        let batch = 2 + rng.below(4);
+        let mut config = cfg(strategy.clone(), trials);
+        config.measure_batch = batch;
+        config.seed = rng.next_u64();
+
+        let model = if strategy.uses_pretrained() {
+            CostModel::with_params(backend(), layout::init_params(&mut Rng::new(1)))
+        } else {
+            CostModel::new(backend(), &mut Rng::new(2))
+        };
+        let target = match rng.below(3) {
+            0 => presets::rtx_2060(),
+            1 => presets::jetson_tx2(),
+            _ => presets::tesla_k80(),
+        };
+        let mut tuner = AutoTuner::with_model(&config, target, model);
+        let session = tuner.tune(&small_tasks()[..1]).unwrap();
+        let r = &session.tasks[0];
+
+        assert!(r.best_latency_s.is_finite() && r.best_latency_s > 0.0);
+        assert!(
+            r.best_latency_s <= r.default_latency_s * 1.0001,
+            "worse than default: {} vs {}",
+            r.best_latency_s,
+            r.default_latency_s
+        );
+        let rounds = (trials / batch).max(1);
+        // Measurements: at most one batch per round plus final verify.
+        assert!(r.measured <= rounds * batch + 1, "{} > {}", r.measured, rounds * batch + 1);
+        assert_eq!(r.history.len(), rounds);
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+        // Clock consistency: session time positive iff anything ran.
+        assert!(session.search_time_s() > 0.0);
+    });
+}

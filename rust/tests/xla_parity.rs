@@ -1,0 +1,170 @@
+//! Rust↔XLA numeric parity: the pure-Rust mirror (`rust_mlp`) must agree
+//! with the AOT-compiled Pallas/JAX artifacts executed through PJRT.
+//!
+//! This is the cross-language analogue of the pytest kernel-vs-ref suite:
+//! python tests pin Pallas == jnp-oracle, this test pins XLA artifacts ==
+//! Rust mirror, so all four implementations agree transitively.
+//!
+//! Skips (with a loud message) if `artifacts/` is missing — run
+//! `make artifacts` first; the Makefile `test` target does.
+
+use std::sync::Arc;
+
+use moses::costmodel::{layout, mask::Mask, Backend, RustBackend, XlaBackend};
+use moses::runtime::Engine;
+use moses::util::rng::Rng;
+
+fn engine_or_skip() -> Option<Arc<Engine>> {
+    let dir = Engine::default_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP xla_parity: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::load(&dir).expect("engine load")))
+}
+
+fn rand_rows(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..n * layout::N_FEATURES).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.0, 10.0) as f32).collect();
+    let w: Vec<f32> = vec![1.0; n];
+    (x, y, w)
+}
+
+fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        let diff = (a[i] - b[i]).abs();
+        let tol = atol + rtol * b[i].abs();
+        assert!(
+            diff <= tol,
+            "{what}[{i}]: xla={} rust={} diff={diff} tol={tol}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn predict_parity() {
+    let Some(engine) = engine_or_skip() else { return };
+    let xla = XlaBackend { engine };
+    let rust = RustBackend::default();
+    assert_eq!(xla.pred_batch(), rust.pred_batch);
+
+    let mut rng = Rng::new(100);
+    let params = layout::init_params(&mut rng);
+    let (x, _, _) = rand_rows(&mut rng, xla.pred_batch());
+    let a = xla.predict_fixed(&params, &x).unwrap();
+    let b = rust.predict_fixed(&params, &x).unwrap();
+    assert_close(&a, &b, 2e-4, 2e-4, "predict");
+}
+
+#[test]
+fn loss_parity() {
+    let Some(engine) = engine_or_skip() else { return };
+    let xla = XlaBackend { engine };
+    let rust = RustBackend::default();
+    let mut rng = Rng::new(101);
+    let params = layout::init_params(&mut rng);
+    let (x, y, w) = rand_rows(&mut rng, xla.train_batch());
+    let a = xla.loss_fixed(&params, &x, &y, &w).unwrap();
+    let b = rust.loss_fixed(&params, &x, &y, &w).unwrap();
+    assert!((a - b).abs() <= 1e-4 + 1e-3 * b.abs(), "loss: xla={a} rust={b}");
+}
+
+#[test]
+fn train_step_parity_vanilla_and_masked() {
+    let Some(engine) = engine_or_skip() else { return };
+    let xla = XlaBackend { engine };
+    let rust = RustBackend::default();
+    let mut rng = Rng::new(102);
+    let params = layout::init_params(&mut rng);
+    let m = vec![0.0f32; layout::N_PARAMS];
+    let v = vec![0.0f32; layout::N_PARAMS];
+    let (x, y, w) = rand_rows(&mut rng, xla.train_batch());
+
+    // Coordinates whose analytic gradient is ~0 (e.g. the head bias b3 —
+    // a pairwise-difference loss is invariant to constant score shifts)
+    // get an Adam step of lr·g/(|g|+eps) where g is pure summation noise,
+    // so XLA and Rust legitimately disagree there.  Compare only where
+    // the gradient carries signal.
+    let (_, grads) = moses::costmodel::rust_mlp::backward(&params, &x, y.len(), &y, &w);
+    let signal: Vec<bool> = grads.iter().map(|g| g.abs() >= 1e-6).collect();
+    let n_signal = signal.iter().filter(|&&s| s).count();
+    assert!(
+        n_signal as f64 > 0.5 * layout::N_PARAMS as f64,
+        "degenerate test batch: only {n_signal} signal coords"
+    );
+    let close_where = |a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str| {
+        for i in 0..a.len() {
+            if !signal[i] {
+                continue;
+            }
+            let diff = (a[i] - b[i]).abs();
+            let tol = atol + rtol * b[i].abs();
+            assert!(diff <= tol, "{what}[{i}]: xla={} rust={} diff={diff}", a[i], b[i]);
+        }
+    };
+
+    for (label, mask) in [
+        ("vanilla", Mask::all_ones(layout::N_PARAMS)),
+        ("half", {
+            let xi: Vec<f32> = (0..layout::N_PARAMS).map(|_| rng.uniform() as f32).collect();
+            Mask::from_xi_ratio(&xi, 0.5)
+        }),
+    ] {
+        let hp = [1e-3, 1e-2, 1.0, 0.0];
+        let (pa, ma, va, la) = xla
+            .train_step_fixed(&params, &m, &v, &x, &y, &w, &mask.values, hp)
+            .unwrap();
+        let (pb, mb, vb, lb) = rust
+            .train_step_fixed(&params, &m, &v, &x, &y, &w, &mask.values, hp)
+            .unwrap();
+        assert!((la - lb).abs() <= 1e-4 + 1e-3 * lb.abs(), "{label} loss: {la} vs {lb}");
+        close_where(&pa, &pb, 1e-3, 2e-5, &format!("{label} params"));
+        close_where(&ma, &mb, 2e-2, 1e-7, &format!("{label} m"));
+        close_where(&va, &vb, 2e-2, 1e-10, &format!("{label} v"));
+    }
+}
+
+#[test]
+fn xi_parity() {
+    let Some(engine) = engine_or_skip() else { return };
+    let xla = XlaBackend { engine };
+    let rust = RustBackend::default();
+    let mut rng = Rng::new(103);
+    let params = layout::init_params(&mut rng);
+    let (x, y, w) = rand_rows(&mut rng, xla.train_batch());
+    let a = xla.xi_fixed(&params, &x, &y, &w).unwrap();
+    let b = rust.xi_fixed(&params, &x, &y, &w).unwrap();
+    // ξ magnitudes are tiny; compare with a mixed tolerance and also the
+    // *induced masks*, which is what the algorithm actually consumes.
+    assert_close(&a, &b, 5e-3, 1e-7, "xi");
+    let ma = Mask::from_xi_ratio(&a, 0.5);
+    let mb = Mask::from_xi_ratio(&b, 0.5);
+    let agree = ma
+        .values
+        .iter()
+        .zip(&mb.values)
+        .filter(|(x, y)| x == y)
+        .count() as f64
+        / layout::N_PARAMS as f64;
+    assert!(agree > 0.99, "mask agreement {agree}");
+}
+
+#[test]
+fn padded_predict_ignores_padding() {
+    let Some(engine) = engine_or_skip() else { return };
+    let backend: Arc<dyn Backend> = Arc::new(XlaBackend { engine });
+    let mut rng = Rng::new(104);
+    let model = moses::costmodel::CostModel::new(backend, &mut rng);
+    let (x, _, _) = rand_rows(&mut rng, 13);
+    let scores = model.predict(&x, 13).unwrap();
+    assert_eq!(scores.len(), 13);
+    // Re-scoring the same rows in a different-sized call gives the same
+    // answers (padding did not bleed in).
+    let again = model.predict(&x[..5 * layout::N_FEATURES], 5).unwrap();
+    for i in 0..5 {
+        assert!((scores[i] - again[i]).abs() < 1e-6);
+    }
+}
