@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = TuneConfig {
         trials_per_task: 64,
         strategy: Strategy::Moses(MosesConfig::default()),
-        backend: BackendKind::Xla,
+        backend: BackendKind::auto(),
         ..TuneConfig::default()
     };
     let model = moses::costmodel::CostModel::with_params(exp.backend_arc()?, pretrained);

@@ -1,0 +1,95 @@
+//! Warm start from the tune cache: repeating a workload on the same
+//! device costs ZERO measured trials, and a new device's search starts
+//! from the schedules other devices already found — schedule-level
+//! transfer beside the paper's parameter-level transfer.
+//!
+//! ```bash
+//! cargo run --release --example warm_start
+//! ```
+
+use std::sync::Arc;
+
+use moses::coordinator::{AutoTuner, BackendKind, Session, TuneConfig};
+use moses::device::{presets, DeviceArch};
+use moses::models::zoo;
+use moses::transfer::Strategy;
+use moses::tunecache::TuneCache;
+use moses::util::table::Table;
+
+fn cfg(seed: u64) -> TuneConfig {
+    TuneConfig {
+        trials_per_task: 24,
+        measure_batch: 4,
+        strategy: Strategy::AnsorRandom,
+        population: 32,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed,
+        ..TuneConfig::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let tasks = zoo::squeezenet().tasks()[..4].to_vec();
+    let path = std::env::temp_dir().join("moses_warm_start.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let cache = Arc::new(TuneCache::open(&path, 8)?);
+
+    let mut table = Table::new(
+        "Warm start on 4 SqueezeNet tasks",
+        &["run", "device", "measured", "cache hits", "seeded tasks", "latency ms", "search s"],
+    );
+    let mut run = |label: &str, device: DeviceArch, seed: u64| -> anyhow::Result<Session> {
+        let mut tuner = AutoTuner::from_config(&cfg(seed), device)?;
+        tuner.attach_cache(cache.clone());
+        let s = tuner.tune(&tasks)?;
+        table.row(vec![
+            label.to_string(),
+            s.device.clone(),
+            s.total_measurements().to_string(),
+            s.cache_hits().to_string(),
+            s.warm_seeded_tasks().to_string(),
+            format!("{:.3}", s.total_best_latency_ms()),
+            format!("{:.0}", s.search_time_s()),
+        ]);
+        Ok(s)
+    };
+
+    let _cold = run("cold", presets::rtx_2060(), 1)?;
+    let repeat = run("repeat (same device)", presets::rtx_2060(), 2)?;
+    let cross = run("cross-device", presets::jetson_tx2(), 3)?;
+    drop(run);
+    table.print();
+
+    assert_eq!(repeat.total_measurements(), 0, "repeat run must be measurement-free");
+    assert!(cross.warm_seeded_tasks() > 0, "cross-device run must be seeded");
+
+    // The same trial budget WITHOUT the cache, for comparison.  (The
+    // seeded run additionally spends up to `seed_probe` measurements
+    // per task verifying cross-device seeds — the measurement counts
+    // below make that visible.)
+    let mut unseeded = AutoTuner::from_config(&cfg(3), presets::jetson_tx2())?;
+    let cold_tx2 = unseeded.tune(&tasks)?;
+    println!(
+        "\ntx2 seeded  : {:.3} ms after {:.0} virtual s ({} measurements, incl. seed probes)\n\
+         tx2 unseeded: {:.3} ms after {:.0} virtual s ({} measurements)",
+        cross.total_best_latency_ms(),
+        cross.search_time_s(),
+        cross.total_measurements(),
+        cold_tx2.total_best_latency_ms(),
+        cold_tx2.search_time_s(),
+        cold_tx2.total_measurements(),
+    );
+
+    let s = cache.stats();
+    let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "\ncache: {} hits / {} misses, {} cross-device seeds, {} commits; \
+         {} live records, {size} bytes on disk",
+        s.hits, s.misses, s.cross_device_seeds, s.commits,
+        cache.total_records(),
+    );
+    cache.compact()?;
+    println!("after compaction: {} bytes", std::fs::metadata(&path)?.len());
+    Ok(())
+}

@@ -11,8 +11,8 @@ use moses::runtime::Engine;
 use moses::util::bench::Bencher;
 
 fn main() {
-    if !Engine::default_dir().join("meta.json").exists() {
-        println!("ablation: SKIPPED (no artifacts — run `make artifacts`)");
+    if let Some(reason) = Engine::xla_skip_reason() {
+        println!("ablation: SKIPPED ({reason})");
         return;
     }
     let cfg = ExpConfig {

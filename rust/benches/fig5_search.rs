@@ -12,8 +12,8 @@ use moses::runtime::Engine;
 use moses::util::bench::Bencher;
 
 fn main() {
-    if !Engine::default_dir().join("meta.json").exists() {
-        println!("fig5: SKIPPED (no artifacts — run `make artifacts`)");
+    if let Some(reason) = Engine::xla_skip_reason() {
+        println!("fig5: SKIPPED ({reason})");
         return;
     }
     let trials: usize = std::env::var("MOSES_BENCH_TRIALS")

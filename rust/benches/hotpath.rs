@@ -11,6 +11,7 @@ use moses::device::{presets, DeviceSim};
 use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
 use moses::runtime::Engine;
 use moses::search::{EvolutionarySearch, SearchPolicy};
+use moses::tunecache::{TuneRecord, TuneStore, WorkloadKey};
 use moses::util::bench::Bencher;
 use moses::util::rng::Rng;
 
@@ -69,9 +70,54 @@ fn main() {
         evo.propose(8, &rust_model, &|_| false, &mut rng, &mut || {})
     });
 
-    // --- XLA backend (skipped without artifacts) --------------------------
+    // --- tunecache (the check-before-search hot path) ---------------------
+    // A populated store: 128 workloads × 2 devices × topk records each.
+    let store = TuneStore::new(8);
+    let arch_a = presets::rtx_2060();
+    let arch_b = presets::jetson_tx2();
+    let mut workload_keys = Vec::new();
+    for i in 0..128usize {
+        let t = Subgraph::new(
+            "cache.dense",
+            SubgraphKind::Dense { m: 32 + i, n: 256, k: 256 },
+        );
+        for arch in [&arch_a, &arch_b] {
+            let key = WorkloadKey::new(&t, arch);
+            for j in 0..8usize {
+                let sched = gen.sample(&mut rng);
+                store.commit(&TuneRecord::new(
+                    key,
+                    &arch.name,
+                    &sched,
+                    1e-3 * (j + 1) as f64,
+                    100.0,
+                    64,
+                ));
+            }
+        }
+        workload_keys.push(WorkloadKey::new(&t, &arch_a));
+    }
+    let hit_key = workload_keys[64];
+    let miss_key = WorkloadKey { workload: 0xDEAD_BEEF, device: hit_key.device };
+    b.run("cache_lookup_hit", || store.best(&hit_key));
+    b.run("cache_lookup_miss", || store.best(&miss_key));
+    b.run("cache_cross_device_seeds", || {
+        store.cross_device(hit_key.workload, hit_key.device)
+    });
+    // Rotate schedules and latencies so commits exercise the real
+    // admission path (insert + sort + evict), not just duplicate-reject.
+    let commit_pool: Vec<_> = gen.sample_distinct(&mut rng, 16);
+    let mut commit_i = 0usize;
+    b.run("cache_commit", || {
+        commit_i += 1;
+        let sched = &commit_pool[commit_i % commit_pool.len()];
+        let lat = 1e-3 / (1.0 + (commit_i % 7) as f64);
+        store.commit(&TuneRecord::new(hit_key, &arch_a.name, sched, lat, 200.0, 64))
+    });
+
+    // --- XLA backend (skipped when unavailable) ---------------------------
     let dir = Engine::default_dir();
-    if dir.join("meta.json").exists() {
+    if Engine::xla_available() {
         let engine = Arc::new(Engine::load(&dir).expect("engine"));
         let xla_model = CostModel::new(Arc::new(XlaBackend { engine }), &mut rng);
         let mut feats512 = Vec::with_capacity(512 * 164);
@@ -97,6 +143,9 @@ fn main() {
         });
         b.run("xla_xi_256", || xla_train.xi(&x, &y).unwrap());
     } else {
-        println!("bench xla_*: SKIPPED (no artifacts — run `make artifacts`)");
+        println!(
+            "bench xla_*: SKIPPED ({})",
+            Engine::xla_skip_reason().unwrap_or("unknown")
+        );
     }
 }

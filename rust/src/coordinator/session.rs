@@ -1,6 +1,7 @@
 //! Tuning session results: per-task outcomes + aggregate metrics.
 
 use crate::device::VirtualClock;
+use crate::metrics::cache::CacheStats;
 use crate::program::{Schedule, Subgraph};
 
 /// Outcome of tuning one task.
@@ -18,6 +19,10 @@ pub struct TaskResult {
     pub predicted_only: usize,
     /// Best-so-far true latency after each round (convergence curve).
     pub history: Vec<f64>,
+    /// Served straight from the tune cache (zero measured trials).
+    pub cache_hit: bool,
+    /// Cross-device schedules injected into the search population.
+    pub warm_seeds: usize,
 }
 
 impl TaskResult {
@@ -35,6 +40,9 @@ pub struct Session {
     pub tasks: Vec<TaskResult>,
     /// Total virtual search time (measurements + model queries/updates).
     pub clock: VirtualClock,
+    /// Tune-cache counter snapshot at session end (None when tuning
+    /// without a cache).
+    pub cache: Option<CacheStats>,
 }
 
 impl Session {
@@ -70,6 +78,16 @@ impl Session {
     pub fn total_measurements(&self) -> usize {
         self.tasks.iter().map(|t| t.measured).sum()
     }
+
+    /// Tasks served entirely from the tune cache.
+    pub fn cache_hits(&self) -> usize {
+        self.tasks.iter().filter(|t| t.cache_hit).count()
+    }
+
+    /// Tasks whose search population received cross-device seeds.
+    pub fn warm_seeded_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| t.warm_seeds > 0).count()
+    }
 }
 
 #[cfg(test)]
@@ -89,6 +107,8 @@ mod tests {
             measured: 10,
             predicted_only: 5,
             history: vec![default, lat],
+            cache_hit: false,
+            warm_seeds: 0,
         }
     }
 
@@ -99,6 +119,7 @@ mod tests {
             strategy: "moses".into(),
             tasks: vec![mk_task(1e-3, 2e-3, 1), mk_task(2e-3, 6e-3, 2)],
             clock: VirtualClock::new(),
+            cache: None,
         };
         assert!((s.total_best_latency_ms() - (1.0 + 4.0)).abs() < 1e-9);
         assert!((s.total_default_latency_ms() - (2.0 + 12.0)).abs() < 1e-9);

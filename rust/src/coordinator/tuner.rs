@@ -12,6 +12,7 @@ use crate::program::{featurize, Schedule, Subgraph, TensorProgram, N_FEATURES};
 use crate::runtime::Engine;
 use crate::search::{EvolutionarySearch, RandomSearch, SearchPolicy};
 use crate::transfer::{self, AdaptiveController, MosesAdapter, Strategy};
+use crate::tunecache::{warmstart, TuneCache, TuneRecord, WorkloadKey};
 use crate::util::rng::Rng;
 
 /// Which compute backend executes the cost model.
@@ -22,6 +23,23 @@ pub enum BackendKind {
     /// Pure-Rust mirror (artifact-less fallback, tests).
     Rust,
 }
+
+impl BackendKind {
+    /// Pick the best available backend: XLA when compiled in
+    /// (`--features xla`) and the AOT artifacts are present, the
+    /// pure-Rust mirror otherwise.
+    pub fn auto() -> BackendKind {
+        if Engine::xla_available() {
+            BackendKind::Xla
+        } else {
+            BackendKind::Rust
+        }
+    }
+}
+
+/// Cap on cross-device schedules injected into one task's search
+/// population (the evolutionary engine holds up to 32 seeds).
+const MAX_WARM_SEEDS: usize = 8;
 
 /// Tuning configuration (one model × one device × one strategy).
 #[derive(Debug, Clone)]
@@ -44,6 +62,11 @@ pub struct TuneConfig {
     /// Evolutionary engine parameters.
     pub population: usize,
     pub generations: usize,
+    /// On a cache miss with cross-device seeds: how many of the most
+    /// promising seeds to verify on-device before the search rounds
+    /// (grounds the session's best immediately; the rest only seed the
+    /// evolutionary population).
+    pub seed_probe: usize,
 }
 
 impl Default for TuneConfig {
@@ -63,6 +86,7 @@ impl Default for TuneConfig {
             pretrained_path: None,
             population: 64,
             generations: 3,
+            seed_probe: 2,
         }
     }
 }
@@ -84,6 +108,9 @@ pub struct AutoTuner {
     replay: Vec<Sample>,
     best_gflops_per_task: Vec<f64>,
     rng: Rng,
+    /// Shared tuning-record store (check-before-search,
+    /// commit-after-measure, cross-device warm start).
+    cache: Option<Arc<TuneCache>>,
 }
 
 impl AutoTuner {
@@ -121,6 +148,7 @@ impl AutoTuner {
             replay: Vec::new(),
             best_gflops_per_task: Vec::new(),
             rng,
+            cache: None,
         })
     }
 
@@ -139,7 +167,16 @@ impl AutoTuner {
             replay: Vec::new(),
             best_gflops_per_task: Vec::new(),
             rng: Rng::new(config.seed),
+            cache: None,
         }
+    }
+
+    /// Attach a shared tuning-record store: tasks are checked against it
+    /// before searching (an exact hit costs zero measured trials), every
+    /// measured outcome is committed back, and on a miss records from
+    /// other devices seed the evolutionary population.
+    pub fn attach_cache(&mut self, cache: Arc<TuneCache>) {
+        self.cache = Some(cache);
     }
 
     /// Access the underlying cost model (diagnostics).
@@ -166,6 +203,7 @@ impl AutoTuner {
             strategy: self.config.strategy.name().to_string(),
             tasks: results,
             clock,
+            cache: self.cache.as_ref().map(|c| c.stats()),
         })
     }
 
@@ -201,6 +239,52 @@ impl AutoTuner {
         let default_sched = Schedule::default_for(&geometry);
         let default_latency =
             self.sim.true_latency(&TensorProgram::new(task.clone(), default_sched));
+
+        // Check the tune cache before searching.  An exact-device hit at
+        // a sufficient trial budget reuses the cached best schedule
+        // outright — zero measured trials; otherwise the miss may still
+        // yield this device's own records (bigger-budget re-search) and
+        // cross-device seeds below.
+        let mut warm_seeds: Vec<Schedule> = Vec::new();
+        let mut local_seeds: Vec<Schedule> = Vec::new();
+        if let Some(cache) = self.cache.clone() {
+            let plan = warmstart::plan(
+                &cache,
+                task,
+                &self.sim.arch,
+                MAX_WARM_SEEDS,
+                self.config.trials_per_task,
+            );
+            if let Some(rec) = plan.exact {
+                let cached = rec.schedule();
+                if cached.is_valid(&geometry) {
+                    let cached_latency =
+                        self.sim.true_latency(&TensorProgram::new(task.clone(), cached));
+                    // The default fallback applies to cached choices too.
+                    let (best_latency, best_sched) =
+                        if cached_latency.is_finite() && cached_latency <= default_latency {
+                            (cached_latency, cached)
+                        } else {
+                            (default_latency, default_sched)
+                        };
+                    let rounds =
+                        (self.config.trials_per_task / self.config.measure_batch).max(1);
+                    return Ok(TaskResult {
+                        task: task.clone(),
+                        best_latency_s: best_latency,
+                        best_schedule: best_sched,
+                        default_latency_s: default_latency,
+                        measured: 0,
+                        predicted_only: 0,
+                        history: vec![best_latency; rounds],
+                        cache_hit: true,
+                        warm_seeds: 0,
+                    });
+                }
+            }
+            warm_seeds = plan.seeds.iter().map(|s| s.schedule).collect();
+            local_seeds = plan.local_seeds;
+        }
 
         // Non-compute tasks (tiny elementwise/pool) are barely tunable;
         // the loop below handles them fine, they just converge instantly.
@@ -238,6 +322,51 @@ impl AutoTuner {
         let mut history = Vec::with_capacity(rounds);
         // Best prediction-only candidate awaiting final verification.
         let mut pending_predicted: Option<(Schedule, f32)> = None;
+        // Measured-OK (schedule, true latency) pairs for cache commit.
+        let mut cache_outcomes: Vec<(Schedule, f64)> = Vec::new();
+
+        // Re-seed from this device's own cached records (present when a
+        // bigger budget than any previous session was requested): their
+        // latencies are deterministic ground truth, so ground the best
+        // and mark them seen at zero measurement cost.
+        for s in &local_seeds {
+            let prog = TensorProgram::new(task.clone(), *s);
+            let true_lat = self.sim.true_latency(&prog);
+            if true_lat < best_latency {
+                best_latency = true_lat;
+                best_sched = *s;
+            }
+            seen_fps.push(prog.fingerprint());
+            evo.add_seed(*s);
+        }
+
+        // Warm start: verify the most promising cross-device seeds on
+        // device first (grounds the session's best immediately), then
+        // hand ALL seeds to the evolutionary engine's population.
+        for (i, s) in warm_seeds.iter().enumerate() {
+            if i < self.config.seed_probe {
+                let prog = TensorProgram::new(task.clone(), *s);
+                let m = self.sim.measure(&prog, rng);
+                clock.charge_measurement(m.cost_s);
+                measured += 1;
+                seen_fps.push(prog.fingerprint());
+                let feats = featurize(task, s);
+                let gflops = if m.ok { m.gflops } else { 0.0 };
+                if m.ok {
+                    let true_lat = self.sim.true_latency(&prog);
+                    cache_outcomes.push((*s, true_lat));
+                    if true_lat < best_latency {
+                        best_latency = true_lat;
+                        best_sched = *s;
+                    }
+                    if gflops > self.best_gflops_per_task[task_ord] {
+                        self.best_gflops_per_task[task_ord] = gflops;
+                    }
+                }
+                self.push_replay(Sample { task_ord, feats, gflops });
+            }
+            evo.add_seed(*s);
+        }
 
         for round in 0..rounds {
             let seen = |s: &Schedule| seen_fps.contains(&fp(task, s));
@@ -289,6 +418,7 @@ impl AutoTuner {
                     let gflops = if m.ok { m.gflops } else { 0.0 };
                     if m.ok {
                         let true_lat = self.sim.true_latency(&prog);
+                        cache_outcomes.push((*s, true_lat));
                         if true_lat < best_latency {
                             best_latency = true_lat;
                             best_sched = *s;
@@ -358,6 +488,7 @@ impl AutoTuner {
                 measured += 1;
                 if meas.ok {
                     let true_lat = self.sim.true_latency(&prog);
+                    cache_outcomes.push((candidates[top], true_lat));
                     if true_lat < best_latency {
                         best_latency = true_lat;
                         best_sched = candidates[top];
@@ -385,6 +516,7 @@ impl AutoTuner {
             measured += 1;
             if m.ok {
                 let true_lat = self.sim.true_latency(&prog);
+                cache_outcomes.push((s, true_lat));
                 if true_lat < best_latency {
                     best_latency = true_lat;
                     best_sched = s;
@@ -400,6 +532,24 @@ impl AutoTuner {
             best_sched = default_sched;
         }
 
+        // Commit measured outcomes plus the final choice, so later
+        // sessions — on this device or others — can warm start.
+        if let Some(cache) = &self.cache {
+            let key = WorkloadKey::new(task, &self.sim.arch);
+            cache_outcomes.push((best_sched, best_latency));
+            for (sched, lat) in &cache_outcomes {
+                let gflops = task.flops() / lat.max(1e-12) / 1e9;
+                cache.commit(TuneRecord::new(
+                    key,
+                    &self.sim.arch.name,
+                    sched,
+                    *lat,
+                    gflops,
+                    self.config.trials_per_task,
+                ));
+            }
+        }
+
         Ok(TaskResult {
             task: task.clone(),
             best_latency_s: best_latency,
@@ -408,6 +558,8 @@ impl AutoTuner {
             measured,
             predicted_only,
             history,
+            cache_hit: false,
+            warm_seeds: warm_seeds.len(),
         })
     }
 }

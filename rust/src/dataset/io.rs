@@ -14,45 +14,6 @@ use crate::program::{Subgraph, SubgraphKind};
 
 const MAGIC: &[u8; 8] = b"MOSESDS1";
 
-fn kind_encode(kind: &SubgraphKind) -> (u8, Vec<u32>) {
-    match *kind {
-        SubgraphKind::Conv2d { n, h, w, cin, cout, kh, kw, stride, pad } => (
-            0,
-            vec![n as u32, h as u32, w as u32, cin as u32, cout as u32, kh as u32, kw as u32, stride as u32, pad as u32],
-        ),
-        SubgraphKind::DepthwiseConv2d { n, h, w, c, kh, kw, stride, pad } => (
-            1,
-            vec![n as u32, h as u32, w as u32, c as u32, kh as u32, kw as u32, stride as u32, pad as u32],
-        ),
-        SubgraphKind::Dense { m, n, k } => (2, vec![m as u32, n as u32, k as u32]),
-        SubgraphKind::BatchMatmul { b, m, n, k } => {
-            (3, vec![b as u32, m as u32, n as u32, k as u32])
-        }
-        SubgraphKind::Pool2d { n, h, w, c, k, stride } => (
-            4,
-            vec![n as u32, h as u32, w as u32, c as u32, k as u32, stride as u32],
-        ),
-        SubgraphKind::Elementwise { len, ops } => (5, vec![len as u32, ops as u32]),
-    }
-}
-
-fn kind_decode(tag: u8, p: &[u32]) -> Result<SubgraphKind> {
-    let u = |i: usize| p[i] as usize;
-    Ok(match tag {
-        0 => SubgraphKind::Conv2d {
-            n: u(0), h: u(1), w: u(2), cin: u(3), cout: u(4), kh: u(5), kw: u(6), stride: u(7), pad: u(8),
-        },
-        1 => SubgraphKind::DepthwiseConv2d {
-            n: u(0), h: u(1), w: u(2), c: u(3), kh: u(4), kw: u(5), stride: u(6), pad: u(7),
-        },
-        2 => SubgraphKind::Dense { m: u(0), n: u(1), k: u(2) },
-        3 => SubgraphKind::BatchMatmul { b: u(0), m: u(1), n: u(2), k: u(3) },
-        4 => SubgraphKind::Pool2d { n: u(0), h: u(1), w: u(2), c: u(3), k: u(4), stride: u(5) },
-        5 => SubgraphKind::Elementwise { len: u(0), ops: u(1) },
-        _ => bail!("unknown subgraph kind tag {tag}"),
-    })
-}
-
 struct Writer<W: Write> {
     w: W,
 }
@@ -124,7 +85,7 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     w.u32(ds.tasks.len() as u32)?;
     for t in &ds.tasks {
         w.str(&t.name)?;
-        let (tag, params) = kind_encode(&t.kind);
+        let (tag, params) = t.kind.encode_tagged();
         w.u32(tag as u32)?;
         w.u32(params.len() as u32)?;
         for p in params {
@@ -168,7 +129,9 @@ pub fn load(path: &Path) -> Result<Dataset> {
             params.push(r.u32()?);
         }
         let repeats = r.u32()? as usize;
-        let mut sub = Subgraph::new(&name, kind_decode(tag, &params)?);
+        let kind = SubgraphKind::decode_tagged(tag, &params)
+            .ok_or_else(|| anyhow::anyhow!("bad subgraph record (tag {tag})"))?;
+        let mut sub = Subgraph::new(&name, kind);
         sub.repeats = repeats;
         ds.tasks.push(sub);
     }

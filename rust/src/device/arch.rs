@@ -91,6 +91,39 @@ impl DeviceArch {
     pub fn ridge_point(&self) -> f64 {
         self.peak_gflops() * 1e9 / self.mem_bw_bytes()
     }
+
+    /// Stable fingerprint of the architecture's tuning-relevant
+    /// parameters.  The display name is deliberately excluded: two
+    /// identically-specced boards produce the same latency response, so
+    /// they share tuning-cache records.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(128);
+        bytes.extend_from_slice(&self.family.id().to_le_bytes());
+        for v in [
+            self.sm_count,
+            self.cores_per_sm,
+            self.l2_kb,
+            self.shared_per_sm_kb,
+            self.max_threads_per_sm,
+            self.max_blocks_per_sm,
+            self.regs_per_sm_k,
+            self.warp_size,
+        ] {
+            bytes.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+        for f in [
+            self.clock_ghz,
+            self.mem_bw_gbs,
+            self.launch_overhead_us,
+            self.measure_overhead_s,
+            self.quirk_sigma,
+            self.noise_sigma,
+        ] {
+            bytes.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+        bytes.push(self.embedded as u8);
+        crate::util::rng::hash_bytes(&bytes)
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +158,27 @@ mod tests {
         let r2060 = presets::rtx_2060();
         assert!(tx2.measure_overhead_s > 5.0 * r2060.measure_overhead_s);
         assert!(tx2.embedded && !r2060.embedded);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_spec_sensitive() {
+        let a = presets::jetson_tx2();
+        assert_eq!(a.fingerprint(), presets::jetson_tx2().fingerprint());
+        // Renaming alone does not move the fingerprint...
+        let mut renamed = a.clone();
+        renamed.name = "tx2-rev-b".into();
+        assert_eq!(a.fingerprint(), renamed.fingerprint());
+        // ...but any spec change does.
+        let mut clocked = a.clone();
+        clocked.clock_ghz += 0.1;
+        assert_ne!(a.fingerprint(), clocked.fingerprint());
+        // All presets are pairwise distinct.
+        let fps: Vec<u64> = presets::all().iter().map(|d| d.fingerprint()).collect();
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "presets {i} and {j} collide");
+            }
+        }
     }
 
     #[test]

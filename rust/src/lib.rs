@@ -24,6 +24,18 @@
 //!   the auto-tuning coordinator ([`coordinator`]), the XLA/PJRT runtime
 //!   that executes the AOT artifacts ([`runtime`]) and the paper's
 //!   metrics ([`metrics`]).
+//!
+//! ## The tuning-record store ([`tunecache`])
+//!
+//! Sitting beside the coordinator is a sharded, persistent store of
+//! measured `(workload, device) → top-k (schedule, latency)` records.
+//! Sessions check it before searching (an exact hit costs zero measured
+//! trials), commit after measuring, and — on a miss for the target
+//! device — seed the evolutionary search with the same workload's
+//! records from *other* devices: schedule-level transfer complementing
+//! Moses' parameter-level transfer.  Records persist as a JSONL append
+//! log with compaction, so tuning knowledge accumulates across sessions
+//! and hosts; hit/miss/seed counters live in [`metrics::cache`].
 
 pub mod coordinator;
 pub mod costmodel;
@@ -35,4 +47,5 @@ pub mod program;
 pub mod runtime;
 pub mod search;
 pub mod transfer;
+pub mod tunecache;
 pub mod util;

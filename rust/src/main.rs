@@ -12,6 +12,7 @@
 //! HLO artifacts (`make artifacts`) on the PJRT CPU client.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -24,6 +25,7 @@ use moses::metrics::experiments::{self, ExpConfig};
 use moses::models::zoo;
 use moses::program::{featurize, SpaceGenerator, TensorProgram, N_FEATURES};
 use moses::transfer::Strategy;
+use moses::tunecache::{DEFAULT_TOPK, TuneCache};
 use moses::util::cli::Flags;
 use moses::util::rng::Rng;
 use moses::util::stats;
@@ -31,9 +33,10 @@ use moses::util::table::Table;
 
 fn backend_kind(name: &str) -> Result<BackendKind> {
     match name {
+        "auto" => Ok(BackendKind::auto()),
         "xla" => Ok(BackendKind::Xla),
         "rust" => Ok(BackendKind::Rust),
-        other => bail!("unknown backend '{other}' (use xla|rust)"),
+        other => bail!("unknown backend '{other}' (use auto|xla|rust)"),
     }
 }
 
@@ -91,8 +94,14 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         .opt("trials", "64", "candidate trials per task")
         .opt("batch", "8", "measurements per round")
         .opt("seed", "0", "RNG seed")
-        .opt("backend", "xla", "cost-model backend (xla|rust)")
+        .opt("backend", "auto", "cost-model backend (auto|xla|rust)")
         .opt("pretrained", "", "checkpoint path (default: auto-pretrain+cache)")
+        .opt(
+            "tune-cache",
+            "artifacts/tunecache.jsonl",
+            "persistent tuning-record store (zero-trial repeats + cross-device warm start)",
+        )
+        .switch("no-cache", "disable the tuning-record store")
         .switch("verbose", "per-task output");
     if args.iter().any(|a| a == "--help") {
         print!("{}", flags.help("tune", "Tune a DNN on a simulated target device."));
@@ -141,6 +150,16 @@ fn cmd_tune(args: &[String]) -> Result<()> {
     );
     let mut tuner = AutoTuner::with_model(&cfg, target.clone(), cost_model);
 
+    let cache: Option<Arc<TuneCache>> = if p.get_bool("no-cache") {
+        None
+    } else {
+        let path = PathBuf::from(p.get("tune-cache"));
+        Some(Arc::new(TuneCache::open(&path, DEFAULT_TOPK)?))
+    };
+    if let Some(c) = &cache {
+        tuner.attach_cache(c.clone());
+    }
+
     println!(
         "tuning {} on {} with {} ({} trials/task, backend {})",
         model.name,
@@ -182,6 +201,20 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         session.search_time_s(),
         session.total_measurements()
     );
+    if let Some(c) = &cache {
+        let s = c.stats();
+        println!(
+            "tune cache         : {} hit / {} miss ({:.0}% hit rate), {} cross-device seeds, \
+             {} records over {} workloads at {}",
+            s.hits,
+            s.misses,
+            100.0 * s.hit_rate(),
+            s.cross_device_seeds,
+            c.total_records(),
+            c.num_workloads(),
+            c.path().map(|p| p.display().to_string()).unwrap_or_else(|| "<memory>".into()),
+        );
+    }
     println!("harness wall time  : {wall:.1} s");
     Ok(())
 }
@@ -196,7 +229,7 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
         .opt("records", "96", "records per task")
         .opt("epochs", "8", "training epochs")
         .opt("seed", "0", "RNG seed")
-        .opt("backend", "xla", "cost-model backend (xla|rust)");
+        .opt("backend", "auto", "cost-model backend (auto|xla|rust)");
     if args.iter().any(|a| a == "--help") {
         print!("{}", flags.help("pretrain", "Pre-train the source-device cost model."));
         return Ok(());
@@ -285,7 +318,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         .opt("tasks", "8", "random eval tasks")
         .opt("records", "64", "records per task")
         .opt("seed", "123", "RNG seed")
-        .opt("backend", "xla", "cost-model backend (xla|rust)");
+        .opt("backend", "auto", "cost-model backend (auto|xla|rust)");
     if args.iter().any(|a| a == "--help") {
         print!(
             "{}",
@@ -339,7 +372,7 @@ fn cmd_tables(args: &[String]) -> Result<()> {
         .opt("trials-small", "48", "small-tier trials per task (paper: 200)")
         .opt("trials-large", "192", "large-tier trials per task (paper: 20000/5000)")
         .opt("seed", "0", "RNG seed")
-        .opt("backend", "xla", "cost-model backend (xla|rust)")
+        .opt("backend", "auto", "cost-model backend (auto|xla|rust)")
         .opt("fig6-model", "mobilenet", "model for the ratio ablation")
         .opt("fig6-seeds", "0,1,2", "seeds for the ratio ablation")
         .opt("out", "", "also append markdown to this file");

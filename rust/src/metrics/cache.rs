@@ -1,0 +1,106 @@
+//! Tuning-cache observability: hit/miss/seed/commit counters and their
+//! point-in-time snapshot for session reports.
+//!
+//! Counters are atomic because one [`crate::tunecache::TuneCache`] is
+//! shared (behind an `Arc`) across every tuning session on a host; the
+//! snapshot is a plain `Copy` struct so sessions can embed it in their
+//! results without holding any reference to the live cache.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Live counters owned by a tune cache.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    cross_device_seeds: AtomicUsize,
+    commits: AtomicUsize,
+    rejects: AtomicUsize,
+}
+
+impl CacheCounters {
+    /// An exact (workload, device) lookup was served from cache.
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An exact (workload, device) lookup found nothing.
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` schedules from other devices were offered as search seeds.
+    pub fn record_seeds(&self, n: usize) {
+        self.cross_device_seeds.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A record passed top-k admission.
+    pub fn record_commit(&self) {
+        self.commits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A record was refused (duplicate-no-better, evicted, non-finite).
+    pub fn record_reject(&self) {
+        self.rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            cross_device_seeds: self.cross_device_seeds.load(Ordering::Relaxed),
+            commits: self.commits.load(Ordering::Relaxed),
+            rejects: self.rejects.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time counter values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub cross_device_seeds: usize,
+    pub commits: usize,
+    pub rejects: usize,
+}
+
+impl CacheStats {
+    /// Fraction of exact lookups answered from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_into_snapshot() {
+        let c = CacheCounters::default();
+        c.record_hit();
+        c.record_hit();
+        c.record_miss();
+        c.record_seeds(5);
+        c.record_commit();
+        c.record_reject();
+        let s = c.snapshot();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.cross_device_seeds, 5);
+        assert_eq!(s.commits, 1);
+        assert_eq!(s.rejects, 1);
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_hit_rate_is_zero() {
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

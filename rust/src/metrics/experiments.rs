@@ -55,7 +55,9 @@ pub struct ExpConfig {
 impl Default for ExpConfig {
     fn default() -> Self {
         ExpConfig {
-            backend: BackendKind::Xla,
+            // XLA when compiled in and artifacts exist, rust otherwise —
+            // examples and benches then run in any environment.
+            backend: BackendKind::auto(),
             seed: 0,
             trials_small: 48,
             trials_large: 192,

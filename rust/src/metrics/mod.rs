@@ -1,6 +1,8 @@
 //! Evaluation metrics (paper §4.3): end-to-end latency/throughput,
-//! search-efficiency gain, and the CMAT composite score.
+//! search-efficiency gain, the CMAT composite score, and tuning-cache
+//! hit/miss/seed counters ([`cache`]).
 
+pub mod cache;
 pub mod experiments;
 
 /// CMAT — Cost Model & Auto-tuning efficiency gain score (paper §4.3):

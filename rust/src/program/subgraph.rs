@@ -162,6 +162,82 @@ impl SubgraphKind {
         self.flops() / self.total_bytes().max(1.0)
     }
 
+    /// Tagged canonical encoding (kind tag + shape parameters in a fixed
+    /// order) — the single source of truth for dataset serialization and
+    /// workload hashing.
+    pub fn encode_tagged(&self) -> (u8, Vec<u32>) {
+        match *self {
+            SubgraphKind::Conv2d { n, h, w, cin, cout, kh, kw, stride, pad } => (
+                0,
+                vec![
+                    n as u32, h as u32, w as u32, cin as u32, cout as u32, kh as u32,
+                    kw as u32, stride as u32, pad as u32,
+                ],
+            ),
+            SubgraphKind::DepthwiseConv2d { n, h, w, c, kh, kw, stride, pad } => (
+                1,
+                vec![
+                    n as u32, h as u32, w as u32, c as u32, kh as u32, kw as u32,
+                    stride as u32, pad as u32,
+                ],
+            ),
+            SubgraphKind::Dense { m, n, k } => (2, vec![m as u32, n as u32, k as u32]),
+            SubgraphKind::BatchMatmul { b, m, n, k } => {
+                (3, vec![b as u32, m as u32, n as u32, k as u32])
+            }
+            SubgraphKind::Pool2d { n, h, w, c, k, stride } => (
+                4,
+                vec![n as u32, h as u32, w as u32, c as u32, k as u32, stride as u32],
+            ),
+            SubgraphKind::Elementwise { len, ops } => (5, vec![len as u32, ops as u32]),
+        }
+    }
+
+    /// Inverse of [`SubgraphKind::encode_tagged`].  Returns `None` for an
+    /// unknown tag or a too-short parameter list (corrupt input).
+    pub fn decode_tagged(tag: u8, p: &[u32]) -> Option<SubgraphKind> {
+        let need = match tag {
+            0 => 9,
+            1 => 8,
+            2 => 3,
+            3 => 4,
+            4 => 6,
+            5 => 2,
+            _ => return None,
+        };
+        if p.len() < need {
+            return None;
+        }
+        let u = |i: usize| p[i] as usize;
+        Some(match tag {
+            0 => SubgraphKind::Conv2d {
+                n: u(0),
+                h: u(1),
+                w: u(2),
+                cin: u(3),
+                cout: u(4),
+                kh: u(5),
+                kw: u(6),
+                stride: u(7),
+                pad: u(8),
+            },
+            1 => SubgraphKind::DepthwiseConv2d {
+                n: u(0),
+                h: u(1),
+                w: u(2),
+                c: u(3),
+                kh: u(4),
+                kw: u(5),
+                stride: u(6),
+                pad: u(7),
+            },
+            2 => SubgraphKind::Dense { m: u(0), n: u(1), k: u(2) },
+            3 => SubgraphKind::BatchMatmul { b: u(0), m: u(1), n: u(2), k: u(3) },
+            4 => SubgraphKind::Pool2d { n: u(0), h: u(1), w: u(2), c: u(3), k: u(4), stride: u(5) },
+            _ => SubgraphKind::Elementwise { len: u(0), ops: u(1) },
+        })
+    }
+
     /// Short kind tag for logs/dataset records.
     pub fn tag(&self) -> &'static str {
         match self {
@@ -191,6 +267,20 @@ impl Subgraph {
 
     pub fn flops(&self) -> f64 {
         self.kind.flops()
+    }
+
+    /// Stable, collision-resistant fingerprint of the *normalized*
+    /// workload: kind + shape parameters only.  Invariant to task naming
+    /// and weight-shared repeat counts, so `resnet18.conv2_1` and a
+    /// same-shaped layer of another model share one tuning-cache line.
+    pub fn workload_fingerprint(&self) -> u64 {
+        let (tag, params) = self.kind.encode_tagged();
+        let mut bytes = Vec::with_capacity(1 + 4 * params.len());
+        bytes.push(tag);
+        for p in &params {
+            bytes.extend_from_slice(&p.to_le_bytes());
+        }
+        crate::util::rng::hash_bytes(&bytes)
     }
 }
 
@@ -284,5 +374,43 @@ mod tests {
         let s = Subgraph::new("t", conv());
         assert_eq!(s.repeats, 1);
         assert_eq!(s.with_repeats(3).repeats, 3);
+    }
+
+    #[test]
+    fn tagged_encoding_roundtrips_every_kind() {
+        for kind in [
+            conv(),
+            SubgraphKind::DepthwiseConv2d {
+                n: 1, h: 56, w: 56, c: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+            SubgraphKind::Dense { m: 128, n: 768, k: 3072 },
+            SubgraphKind::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
+            SubgraphKind::Pool2d { n: 1, h: 112, w: 112, c: 64, k: 3, stride: 2 },
+            SubgraphKind::Elementwise { len: 4096, ops: 3 },
+        ] {
+            let (tag, params) = kind.encode_tagged();
+            assert_eq!(SubgraphKind::decode_tagged(tag, &params), Some(kind));
+        }
+        // Corrupt inputs decode to None, never panic.
+        assert_eq!(SubgraphKind::decode_tagged(99, &[1, 2, 3]), None);
+        assert_eq!(SubgraphKind::decode_tagged(0, &[1, 2]), None);
+    }
+
+    #[test]
+    fn workload_fingerprint_ignores_name_and_repeats() {
+        let a = Subgraph::new("resnet18.conv2_1", conv());
+        let b = Subgraph::new("other.model.layer9", conv()).with_repeats(4);
+        assert_eq!(a.workload_fingerprint(), b.workload_fingerprint());
+        // Any shape change must move the fingerprint.
+        let c = Subgraph::new(
+            "t",
+            SubgraphKind::Conv2d {
+                n: 1, h: 224, w: 224, cin: 3, cout: 64, kh: 3, kw: 3, stride: 2, pad: 0,
+            },
+        );
+        assert_ne!(a.workload_fingerprint(), c.workload_fingerprint());
+        // Different kinds with similar numbers differ too.
+        let d = Subgraph::new("t", SubgraphKind::Dense { m: 224, n: 224, k: 3 });
+        assert_ne!(a.workload_fingerprint(), d.workload_fingerprint());
     }
 }

@@ -69,7 +69,41 @@ pub struct TrainOutput {
     pub loss: f32,
 }
 
+impl Engine {
+    /// Find the artifact dir: `$MOSES_ARTIFACTS` or `artifacts/` relative
+    /// to the working dir or the crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("MOSES_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("meta.json").exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Why the XLA/PJRT path cannot run right now, or `None` if it can.
+    /// The single source of truth for every "use XLA?" decision
+    /// (backend auto-selection, bench/test skip messages).
+    pub fn xla_skip_reason() -> Option<&'static str> {
+        if !cfg!(feature = "xla") {
+            Some("built without the `xla` cargo feature")
+        } else if !Engine::default_dir().join("meta.json").exists() {
+            Some("no artifacts — run `make artifacts`")
+        } else {
+            None
+        }
+    }
+
+    /// Is the XLA/PJRT path usable (compiled in AND artifacts present)?
+    pub fn xla_available() -> bool {
+        Engine::xla_skip_reason().is_none()
+    }
+}
+
 /// PJRT CPU engine holding the four compiled executables.
+#[cfg(feature = "xla")]
 pub struct Engine {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -84,6 +118,7 @@ pub struct Engine {
     pub artifact_dir: PathBuf,
 }
 
+#[cfg(feature = "xla")]
 fn load_exe(
     client: &xla::PjRtClient,
     dir: &Path,
@@ -98,10 +133,12 @@ fn load_exe(
         .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))
 }
 
+#[cfg(feature = "xla")]
 fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
     /// Load and compile all artifacts from `dir` (default `artifacts/`).
     pub fn load(dir: &Path) -> Result<Engine> {
@@ -125,19 +162,6 @@ impl Engine {
             meta,
             artifact_dir: dir.to_path_buf(),
         })
-    }
-
-    /// Find the artifact dir: `$MOSES_ARTIFACTS` or `artifacts/` relative
-    /// to the working dir or the crate root.
-    pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("MOSES_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        let cwd = PathBuf::from("artifacts");
-        if cwd.join("meta.json").exists() {
-            return cwd;
-        }
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
     /// Upload a host slice as a device buffer.
@@ -258,5 +282,62 @@ impl Engine {
             self.buf(w, &[b])?,
         ];
         Ok(to_vec_f32(&Self::exec1(&self.loss_eval, &args)?)?[0])
+    }
+}
+
+/// Artifact-less stub compiled when the `xla` feature is off (the
+/// vendored `xla` crate is not in the offline crate cache).  Keeps the
+/// whole crate — including every `BackendKind::Xla` code path —
+/// type-checking and building everywhere; `load` always errors, so the
+/// execution methods below are unreachable in practice but mirror the
+/// real signatures.
+#[cfg(not(feature = "xla"))]
+pub struct Engine {
+    pub meta: ArtifactMeta,
+    pub artifact_dir: PathBuf,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Engine {
+    const NO_XLA: &'static str =
+        "this build has no XLA/PJRT support (compile with `--features xla` after vendoring \
+         the xla crate, or use the pure-Rust backend: `--backend rust`)";
+
+    /// Validate the artifact metadata for precise errors, then refuse:
+    /// there is no PJRT runtime to execute with in this build.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let _ = ArtifactMeta::load(dir)?;
+        bail!("{} (artifacts found at {dir:?})", Self::NO_XLA)
+    }
+
+    pub fn predict(&self, _params: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+        bail!(Self::NO_XLA)
+    }
+
+    pub fn predict_small(&self, _params: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+        bail!(Self::NO_XLA)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        _params: &[f32],
+        _m: &[f32],
+        _v: &[f32],
+        _x: &[f32],
+        _y: &[f32],
+        _w: &[f32],
+        _mask: &[f32],
+        _hp: [f32; 4],
+    ) -> Result<TrainOutput> {
+        bail!(Self::NO_XLA)
+    }
+
+    pub fn xi(&self, _params: &[f32], _x: &[f32], _y: &[f32], _w: &[f32]) -> Result<Vec<f32>> {
+        bail!(Self::NO_XLA)
+    }
+
+    pub fn loss_eval(&self, _params: &[f32], _x: &[f32], _y: &[f32], _w: &[f32]) -> Result<f32> {
+        bail!(Self::NO_XLA)
     }
 }

@@ -1,0 +1,73 @@
+//! Canonical cache identity: which record line a (subgraph, device)
+//! tuning request maps to.
+//!
+//! The workload half is the *normalized* subgraph — shape parameters
+//! only, invariant to task naming and weight-shared repeat counts
+//! ([`Subgraph::workload_fingerprint`]) — so `resnet18.conv2_1` and a
+//! same-shaped layer of another model share records.  The device half
+//! fingerprints the architecture's tuning-relevant parameters rather
+//! than its display name ([`DeviceArch::fingerprint`]), so two
+//! identically-specced boards share records too.
+
+use std::fmt;
+
+use crate::device::DeviceArch;
+use crate::program::Subgraph;
+
+/// Cache key: (normalized workload, device architecture).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkloadKey {
+    /// Shape-only subgraph fingerprint.
+    pub workload: u64,
+    /// Architecture fingerprint.
+    pub device: u64,
+}
+
+impl WorkloadKey {
+    pub fn new(task: &Subgraph, arch: &DeviceArch) -> WorkloadKey {
+        WorkloadKey { workload: task.workload_fingerprint(), device: arch.fingerprint() }
+    }
+}
+
+impl fmt::Display for WorkloadKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}@{:016x}", self.workload, self.device)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::program::SubgraphKind;
+
+    fn conv(name: &str) -> Subgraph {
+        Subgraph::new(
+            name,
+            SubgraphKind::Conv2d {
+                n: 1, h: 28, w: 28, cin: 64, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+        )
+    }
+
+    #[test]
+    fn key_normalizes_names_but_separates_devices() {
+        let arch = presets::rtx_2060();
+        assert_eq!(
+            WorkloadKey::new(&conv("a.1"), &arch),
+            WorkloadKey::new(&conv("b.2").with_repeats(3), &arch)
+        );
+        assert_ne!(
+            WorkloadKey::new(&conv("a.1"), &presets::rtx_2060()),
+            WorkloadKey::new(&conv("a.1"), &presets::jetson_tx2())
+        );
+    }
+
+    #[test]
+    fn display_is_fixed_width_hex() {
+        let k = WorkloadKey { workload: 0xAB, device: 1 };
+        let s = k.to_string();
+        assert_eq!(s.len(), 33);
+        assert!(s.starts_with("00000000000000ab@"));
+    }
+}

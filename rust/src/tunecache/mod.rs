@@ -1,0 +1,185 @@
+//! `tunecache` — a sharded, persistent store of measured tuning records
+//! with cross-device warm start.
+//!
+//! Moses transfers cost-model *parameters* across devices; this layer
+//! reuses what transfers at the *schedule-record* level, so a
+//! production tuner serving many models × many devices stops burning
+//! measured trials on workloads it has already solved:
+//!
+//! * [`key`] — canonical [`WorkloadKey`]: normalized-subgraph hash ×
+//!   device-architecture fingerprint (naming-invariant on both sides);
+//! * [`store`] — [`TuneStore`], an `RwLock`-striped concurrent map
+//!   holding the top-k measured `(schedule, latency)` records per
+//!   (workload, device) with eviction;
+//! * [`persist`] — JSONL load-on-open / append-on-commit / compaction,
+//!   so tuning logs survive across sessions and hosts;
+//! * [`warmstart`] — on a miss for the target device, records for the
+//!   *same workload on other devices* become seeds for the evolutionary
+//!   search's initial population: schedule-level transfer complementing
+//!   the paper's parameter-level transfer.
+//!
+//! [`TuneCache`] ties the three together and feeds the hit/miss/seed
+//! counters in [`crate::metrics::cache`].
+
+pub mod key;
+pub mod persist;
+pub mod store;
+pub mod warmstart;
+
+pub use key::WorkloadKey;
+pub use store::{TuneRecord, TuneStore};
+pub use warmstart::{SeedRecord, WarmStartPlan};
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::cache::{CacheCounters, CacheStats};
+
+/// Default top-k records kept per (workload, device).
+pub const DEFAULT_TOPK: usize = 8;
+
+/// The persistent cache: in-memory sharded store + JSONL append log +
+/// hit/miss/seed counters.  Share one instance per host via `Arc`.
+pub struct TuneCache {
+    store: TuneStore,
+    path: Option<PathBuf>,
+    file: Mutex<Option<File>>,
+    counters: CacheCounters,
+    /// Lines appended since open/compaction (compaction debt).
+    appended: AtomicUsize,
+}
+
+impl TuneCache {
+    /// Open (or create) a cache backed by a JSONL file.  Existing
+    /// records are loaded through top-k admission; malformed lines are
+    /// skipped with a warning.
+    pub fn open(path: &Path, topk: usize) -> Result<TuneCache> {
+        let store = TuneStore::new(topk);
+        if path.exists() {
+            let (records, skipped) = persist::load_records(path)?;
+            if skipped > 0 {
+                eprintln!("tunecache: skipped {skipped} malformed line(s) in {path:?}");
+            }
+            for r in &records {
+                store.commit(r);
+            }
+        } else if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {parent:?}"))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {path:?} for append"))?;
+        Ok(TuneCache {
+            store,
+            path: Some(path.to_path_buf()),
+            file: Mutex::new(Some(file)),
+            counters: CacheCounters::default(),
+            appended: AtomicUsize::new(0),
+        })
+    }
+
+    /// Purely in-memory cache (tests, benches, ephemeral sessions).
+    pub fn in_memory(topk: usize) -> TuneCache {
+        TuneCache {
+            store: TuneStore::new(topk),
+            path: None,
+            file: Mutex::new(None),
+            counters: CacheCounters::default(),
+            appended: AtomicUsize::new(0),
+        }
+    }
+
+    /// Backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn counters(&self) -> &CacheCounters {
+        &self.counters
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.counters.snapshot()
+    }
+
+    /// Commit one measured record: top-k admission, then append to the
+    /// log if admitted (rejected records are never encoded).  Compacts
+    /// automatically once the append debt exceeds 4× the live frontier.
+    pub fn commit(&self, rec: TuneRecord) -> bool {
+        let kept = self.store.commit(&rec);
+        if !kept {
+            self.counters.record_reject();
+            return false;
+        }
+        self.counters.record_commit();
+        if self.path.is_some() {
+            {
+                let mut guard = self.file.lock().expect("tunecache file poisoned");
+                if let Some(f) = guard.as_mut() {
+                    let line = persist::encode_line(&rec);
+                    if writeln!(f, "{line}").is_err() {
+                        eprintln!("tunecache: append failed; record kept in memory only");
+                    }
+                }
+            }
+            let appended = self.appended.fetch_add(1, Ordering::Relaxed) + 1;
+            // Short-circuit keeps the O(records) store walk off the
+            // commit path until real append debt has built up.
+            if appended > 64 && appended > 4 * self.store.total_records() {
+                if let Err(e) = self.compact() {
+                    eprintln!("tunecache: compaction failed: {e:#}");
+                }
+            }
+        }
+        true
+    }
+
+    /// Rewrite the log to exactly the live frontier.
+    pub fn compact(&self) -> Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let mut guard = self.file.lock().expect("tunecache file poisoned");
+        persist::rewrite(path, &self.store.snapshot())?;
+        *guard = Some(
+            OpenOptions::new()
+                .append(true)
+                .open(path)
+                .with_context(|| format!("reopening {path:?}"))?,
+        );
+        self.appended.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+
+    // ------------------------------------------------- store delegates --
+
+    pub fn best(&self, key: &WorkloadKey) -> Option<TuneRecord> {
+        self.store.best(key)
+    }
+
+    pub fn records(&self, key: &WorkloadKey) -> Vec<TuneRecord> {
+        self.store.get(key)
+    }
+
+    pub fn cross_device(&self, workload: u64, exclude_device: u64) -> Vec<TuneRecord> {
+        self.store.cross_device(workload, exclude_device)
+    }
+
+    pub fn total_records(&self) -> usize {
+        self.store.total_records()
+    }
+
+    pub fn num_workloads(&self) -> usize {
+        self.store.num_workloads()
+    }
+}

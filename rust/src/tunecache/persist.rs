@@ -1,0 +1,202 @@
+//! JSONL persistence for tuning records.
+//!
+//! One JSON object per line, append-on-commit: a crash loses at most
+//! the final partial line, which the tolerant loader skips.  Repeated
+//! runs append duplicate and later-evicted lines; [`super::TuneCache`]
+//! compacts the file back to the live top-k frontier once the append
+//! debt grows.  Hashes are hex *strings* because the JSON number model
+//! (f64) cannot carry a full 64-bit value.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::store::TuneRecord;
+
+/// Schema version stamped on every line.
+const VERSION: f64 = 1.0;
+
+/// Encode one record as a single JSONL line (no trailing newline).
+pub fn encode_line(r: &TuneRecord) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(VERSION)),
+        ("workload", Json::Str(format!("{:016x}", r.workload))),
+        ("device", Json::Str(format!("{:016x}", r.device))),
+        ("device_name", Json::Str(r.device_name.clone())),
+        ("knobs", Json::Arr(r.knobs.iter().map(|&k| Json::Num(k as f64)).collect())),
+        ("latency_s", Json::Num(r.latency_s)),
+        ("gflops", Json::Num(r.gflops)),
+        ("trials", Json::Num(r.trials as f64)),
+    ])
+    .to_string()
+}
+
+/// Decode one JSONL line.
+pub fn decode_line(line: &str) -> Result<TuneRecord> {
+    let v = Json::parse(line).context("parsing tunecache line")?;
+    let hex = |k: &str| -> Result<u64> {
+        let s = v
+            .get(k)
+            .and_then(Json::as_str)
+            .with_context(|| format!("missing hex field '{k}'"))?;
+        u64::from_str_radix(s, 16).with_context(|| format!("field '{k}' is not hex"))
+    };
+    let num = |k: &str| -> Result<f64> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("missing numeric field '{k}'"))
+    };
+    let knobs_arr = v.get("knobs").and_then(Json::as_arr).context("missing 'knobs'")?;
+    anyhow::ensure!(knobs_arr.len() == 9, "expected 9 knobs, got {}", knobs_arr.len());
+    let mut knobs = [0u32; 9];
+    for (slot, j) in knobs.iter_mut().zip(knobs_arr) {
+        *slot = j.as_f64().context("knob is not a number")? as u32;
+    }
+    let latency_s = num("latency_s")?;
+    // Sanity bounds: launch overhead alone is microseconds, and no
+    // simulated kernel runs for hours.  A bit-flipped but still-valid
+    // JSON line must not become an undisplaceable per-key best (nor,
+    // via an absurd `trials`, satisfy every future hit test).
+    anyhow::ensure!(
+        (1e-9..=1e4).contains(&latency_s),
+        "implausible latency_s {latency_s}"
+    );
+    let trials = v.get("trials").and_then(Json::as_usize).unwrap_or(0);
+    anyhow::ensure!(trials <= 1_000_000, "implausible trials {trials}");
+    Ok(TuneRecord {
+        workload: hex("workload")?,
+        device: hex("device")?,
+        device_name: v
+            .get("device_name")
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string(),
+        knobs,
+        latency_s,
+        gflops: num("gflops")?,
+        // `trials` is absent in pre-trials log lines: 0 means "budget
+        // unknown", which never satisfies a hit test.
+        trials,
+    })
+}
+
+/// Load every parseable record from a JSONL file.  Malformed lines are
+/// skipped and counted — an interrupted append must not poison the
+/// whole store.
+pub fn load_records(path: &Path) -> Result<(Vec<TuneRecord>, usize)> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut records = Vec::new();
+    let mut skipped = 0usize;
+    for line in BufReader::new(file).lines() {
+        let line = line.with_context(|| format!("reading {path:?}"))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match decode_line(trimmed) {
+            Ok(r) => records.push(r),
+            Err(_) => skipped += 1,
+        }
+    }
+    Ok((records, skipped))
+}
+
+/// Atomically rewrite `path` to exactly `records` (compaction): write a
+/// sibling temp file, then rename over the original.
+pub fn rewrite(path: &Path, records: &[TuneRecord]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let file =
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        let mut w = std::io::BufWriter::new(file);
+        for r in records {
+            writeln!(w, "{}", encode_line(r))?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TuneRecord {
+        TuneRecord {
+            // Deliberately above 2^53: must survive the f64 number model.
+            workload: 0xFEDC_BA98_7654_3210,
+            device: 0x0123_4567_89AB_CDEF,
+            device_name: "rtx2060".into(),
+            knobs: [32, 2, 8, 4, 8, 1, 0, 0, 0],
+            latency_s: 1.25e-3,
+            gflops: 812.5,
+            trials: 200,
+        }
+    }
+
+    #[test]
+    fn line_roundtrip_preserves_full_u64_hashes() {
+        let r = sample();
+        let line = encode_line(&r);
+        assert!(!line.contains('\n'));
+        let back = decode_line(&line).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        assert!(decode_line("not json").is_err());
+        assert!(decode_line("{}").is_err());
+        // Wrong knob count.
+        let mut r = sample();
+        r.device_name = "x".into();
+        let bad = encode_line(&r).replace("[32,2,8,4,8,1,0,0,0]", "[1,2]");
+        assert!(decode_line(&bad).is_err());
+        // Implausible values (a corrupt-but-parseable line) are refused
+        // rather than becoming an undisplaceable cache entry.
+        let tiny = encode_line(&sample()).replace("0.00125", "1e-30");
+        assert!(decode_line(&tiny).is_err());
+        let huge_trials = encode_line(&sample()).replace("\"trials\":200", "\"trials\":4000000000");
+        assert!(decode_line(&huge_trials).is_err());
+    }
+
+    #[test]
+    fn decode_tolerates_pre_trials_lines() {
+        // A line written before the `trials` field existed loads with
+        // budget 0 ("unknown"), which never satisfies a hit test.
+        let old = encode_line(&sample()).replace(",\"trials\":200", "");
+        let r = decode_line(&old).unwrap();
+        assert_eq!(r.trials, 0);
+        assert_eq!(r.knobs, sample().knobs);
+    }
+
+    #[test]
+    fn file_roundtrip_and_tolerant_load() {
+        let dir = std::env::temp_dir().join("moses_tunecache_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.jsonl");
+        let records = vec![sample(), {
+            let mut r = sample();
+            r.knobs[0] = 64;
+            r.latency_s = 2e-3;
+            r
+        }];
+        rewrite(&path, &records).unwrap();
+        let (back, skipped) = load_records(&path).unwrap();
+        assert_eq!(back, records);
+        assert_eq!(skipped, 0);
+
+        // Append garbage (simulating a torn write) — loader skips it.
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{{\"workload\": trunca").unwrap();
+        }
+        let (back2, skipped2) = load_records(&path).unwrap();
+        assert_eq!(back2, records);
+        assert_eq!(skipped2, 1);
+    }
+}

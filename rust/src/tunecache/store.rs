@@ -1,0 +1,331 @@
+//! Sharded, concurrent, top-k tuning-record store.
+//!
+//! A `RwLock`-striped hash map keyed by the normalized workload hash:
+//! lookups take one shard read lock, commits one shard write lock, and
+//! the stripe count bounds contention when many tuning sessions share
+//! one store.  Within a workload, records are grouped per device and
+//! kept sorted by latency, with the worst evicted beyond `topk` — the
+//! store holds the *useful frontier* of tuning history, not the full
+//! log (the JSONL file in [`super::persist`] is the log).
+//!
+//! Sharding by workload (not by the combined key) is deliberate: all
+//! devices' records for one workload live in one shard, so the
+//! cross-device warm-start query is a single shard read.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::program::Schedule;
+
+use super::key::WorkloadKey;
+
+/// Number of lock stripes (power of two).
+const N_SHARDS: usize = 16;
+
+/// One measured tuning outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneRecord {
+    /// Normalized workload fingerprint.
+    pub workload: u64,
+    /// Architecture fingerprint of the measuring device.
+    pub device: u64,
+    /// Human-readable device name (seed-origin reporting).
+    pub device_name: String,
+    /// Encoded schedule knobs ([`Schedule::encode`]).
+    pub knobs: [u32; 9],
+    /// Noise-free latency of the schedule on `device`, seconds.
+    pub latency_s: f64,
+    /// Achieved throughput, GFLOP/s.
+    pub gflops: f64,
+    /// Trial budget of the session that produced the record.  A cached
+    /// result only satisfies a later request with an equal-or-smaller
+    /// budget; a bigger one re-searches (seeded) instead of being
+    /// short-circuited by a cheap earlier run.
+    pub trials: usize,
+}
+
+impl TuneRecord {
+    pub fn new(
+        key: WorkloadKey,
+        device_name: &str,
+        schedule: &Schedule,
+        latency_s: f64,
+        gflops: f64,
+        trials: usize,
+    ) -> TuneRecord {
+        TuneRecord {
+            workload: key.workload,
+            device: key.device,
+            device_name: device_name.to_string(),
+            knobs: schedule.encode(),
+            latency_s,
+            gflops,
+            trials,
+        }
+    }
+
+    pub fn key(&self) -> WorkloadKey {
+        WorkloadKey { workload: self.workload, device: self.device }
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        Schedule::decode(&self.knobs)
+    }
+}
+
+/// Per-workload map: device fingerprint → records sorted best-first.
+type DeviceRecords = HashMap<u64, Vec<TuneRecord>>;
+
+/// The sharded in-memory store.
+pub struct TuneStore {
+    shards: Vec<RwLock<HashMap<u64, DeviceRecords>>>,
+    topk: usize,
+}
+
+impl TuneStore {
+    /// Create a store keeping the best `topk` records per
+    /// (workload, device).
+    pub fn new(topk: usize) -> TuneStore {
+        assert!(topk > 0, "topk must be positive");
+        TuneStore {
+            shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            topk,
+        }
+    }
+
+    pub fn topk(&self) -> usize {
+        self.topk
+    }
+
+    fn shard(&self, workload: u64) -> &RwLock<HashMap<u64, DeviceRecords>> {
+        &self.shards[(workload as usize) & (N_SHARDS - 1)]
+    }
+
+    /// Insert a record, keeping the per-(workload, device) list sorted by
+    /// latency and capped at `topk`.  A duplicate schedule keeps its best
+    /// latency (and the larger trial budget).  Non-finite/non-positive
+    /// latencies are refused.  Returns whether the commit changed the
+    /// store (and therefore must reach the append log).
+    pub fn commit(&self, rec: &TuneRecord) -> bool {
+        if !rec.latency_s.is_finite() || rec.latency_s <= 0.0 {
+            return false;
+        }
+        let mut shard = self.shard(rec.workload).write().expect("tunecache shard poisoned");
+        let recs = shard.entry(rec.workload).or_default().entry(rec.device).or_default();
+        if let Some(pos) = recs.iter().position(|r| r.knobs == rec.knobs) {
+            if rec.latency_s < recs[pos].latency_s {
+                let trials = recs[pos].trials.max(rec.trials);
+                recs[pos] = rec.clone();
+                recs[pos].trials = trials;
+                recs.sort_by(|a, b| a.latency_s.total_cmp(&b.latency_s));
+                return true;
+            }
+            if rec.trials > recs[pos].trials {
+                // Same schedule, not better — but measured under a bigger
+                // budget: remember that so the hit test stays honest.
+                recs[pos].trials = rec.trials;
+                return true;
+            }
+            return false;
+        }
+        recs.push(rec.clone());
+        recs.sort_by(|a, b| a.latency_s.total_cmp(&b.latency_s));
+        recs.truncate(self.topk);
+        recs.iter().any(|r| r.knobs == rec.knobs)
+    }
+
+    /// All records for one (workload, device), best-first.
+    pub fn get(&self, key: &WorkloadKey) -> Vec<TuneRecord> {
+        let shard = self.shard(key.workload).read().expect("tunecache shard poisoned");
+        shard
+            .get(&key.workload)
+            .and_then(|devices| devices.get(&key.device))
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Best record for one (workload, device).
+    pub fn best(&self, key: &WorkloadKey) -> Option<TuneRecord> {
+        let shard = self.shard(key.workload).read().expect("tunecache shard poisoned");
+        shard.get(&key.workload)?.get(&key.device)?.first().cloned()
+    }
+
+    /// Records for the same workload on *other* devices, round-robin by
+    /// per-device rank (each device's best first) so no single source
+    /// device monopolizes a seed list.  Device order is fixed by
+    /// fingerprint for determinism.
+    pub fn cross_device(&self, workload: u64, exclude_device: u64) -> Vec<TuneRecord> {
+        let shard = self.shard(workload).read().expect("tunecache shard poisoned");
+        let Some(devices) = shard.get(&workload) else {
+            return Vec::new();
+        };
+        let mut groups: Vec<(&u64, &Vec<TuneRecord>)> =
+            devices.iter().filter(|(d, _)| **d != exclude_device).collect();
+        groups.sort_by_key(|(d, _)| **d);
+        let max_rank = groups.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+        let mut out = Vec::new();
+        for rank in 0..max_rank {
+            for (_, v) in &groups {
+                if let Some(r) = v.get(rank) {
+                    out.push(r.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Total live records across all shards.
+    pub fn total_records(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .expect("tunecache shard poisoned")
+                    .values()
+                    .map(|d| d.values().map(Vec::len).sum::<usize>())
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Number of distinct workloads.
+    pub fn num_workloads(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("tunecache shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_records() == 0
+    }
+
+    /// Deterministic dump, sorted by (workload, device, latency) — used
+    /// for persistence rewrites and tests.
+    pub fn snapshot(&self) -> Vec<TuneRecord> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let shard = s.read().expect("tunecache shard poisoned");
+            for devices in shard.values() {
+                for recs in devices.values() {
+                    out.extend(recs.iter().cloned());
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            (a.workload, a.device)
+                .cmp(&(b.workload, b.device))
+                .then(a.latency_s.total_cmp(&b.latency_s))
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(workload: u64, device: u64) -> WorkloadKey {
+        WorkloadKey { workload, device }
+    }
+
+    fn rec(workload: u64, device: u64, knob0: u32, latency_s: f64) -> TuneRecord {
+        TuneRecord {
+            workload,
+            device,
+            device_name: format!("dev{device}"),
+            knobs: [knob0, 1, 1, 1, 1, 1, 0, 0, 0],
+            latency_s,
+            gflops: 1.0,
+            trials: 64,
+        }
+    }
+
+    #[test]
+    fn topk_keeps_best_sorted_and_evicts_worst() {
+        let store = TuneStore::new(3);
+        for i in 0..6u32 {
+            // Latencies 6,5,4,3,2,1 ms in commit order.
+            assert!(store.commit(&rec(7, 1, i, (6 - i) as f64 * 1e-3)) || i < 3);
+        }
+        let got = store.get(&key(7, 1));
+        assert_eq!(got.len(), 3);
+        let lats: Vec<f64> = got.iter().map(|r| r.latency_s).collect();
+        assert_eq!(lats, vec![1e-3, 2e-3, 3e-3]);
+        assert_eq!(store.best(&key(7, 1)).unwrap().knobs[0], 5);
+        // A worse-than-frontier record is refused.
+        assert!(!store.commit(&rec(7, 1, 99, 1.0)));
+        assert_eq!(store.get(&key(7, 1)).len(), 3);
+    }
+
+    #[test]
+    fn duplicate_schedule_keeps_best_latency_and_max_trials() {
+        let store = TuneStore::new(4);
+        assert!(store.commit(&rec(1, 1, 7, 5e-3)));
+        // Same knobs, worse latency, same budget: refused.
+        assert!(!store.commit(&rec(1, 1, 7, 9e-3)));
+        assert_eq!(store.get(&key(1, 1)).len(), 1);
+        // Same knobs, worse latency but BIGGER budget: trials merged so
+        // the workload counts as searched at the larger budget.
+        let mut bigger = rec(1, 1, 7, 9e-3);
+        bigger.trials = 512;
+        assert!(store.commit(&bigger));
+        let got = store.get(&key(1, 1));
+        assert!((got[0].latency_s - 5e-3).abs() < 1e-15);
+        assert_eq!(got[0].trials, 512);
+        // Same knobs, better latency: upgraded in place, trials kept.
+        assert!(store.commit(&rec(1, 1, 7, 2e-3)));
+        let got = store.get(&key(1, 1));
+        assert_eq!(got.len(), 1);
+        assert!((got[0].latency_s - 2e-3).abs() < 1e-15);
+        assert_eq!(got[0].trials, 512);
+    }
+
+    #[test]
+    fn rejects_unusable_latencies() {
+        let store = TuneStore::new(2);
+        assert!(!store.commit(&rec(1, 1, 0, f64::INFINITY)));
+        assert!(!store.commit(&rec(1, 1, 1, f64::NAN)));
+        assert!(!store.commit(&rec(1, 1, 2, 0.0)));
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn cross_device_round_robins_and_excludes_target() {
+        let store = TuneStore::new(4);
+        for i in 0..3u32 {
+            store.commit(&rec(9, 100, i, (i + 1) as f64 * 1e-3));
+            store.commit(&rec(9, 200, 10 + i, (i + 1) as f64 * 1e-3));
+        }
+        store.commit(&rec(9, 300, 42, 1e-3)); // the "target" device
+        let seeds = store.cross_device(9, 300);
+        assert_eq!(seeds.len(), 6);
+        assert!(seeds.iter().all(|r| r.device != 300));
+        // Rank 0 of each source device comes before any rank 1.
+        assert_eq!(seeds[0].knobs[0] % 10, 0);
+        assert_eq!(seeds[1].knobs[0] % 10, 0);
+        assert_eq!(seeds[2].knobs[0] % 10, 1);
+        // Unknown workload: empty, not a panic.
+        assert!(store.cross_device(0xDEAD, 300).is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let store = TuneStore::new(8);
+        store.commit(&rec(2, 1, 0, 3e-3));
+        store.commit(&rec(1, 2, 1, 2e-3));
+        store.commit(&rec(1, 1, 2, 4e-3));
+        store.commit(&rec(1, 1, 3, 1e-3));
+        let snap = store.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert_eq!(store.total_records(), 4);
+        assert_eq!(store.num_workloads(), 2);
+        for w in snap.windows(2) {
+            assert!(
+                (w[0].workload, w[0].device) <= (w[1].workload, w[1].device),
+                "snapshot out of order"
+            );
+        }
+        assert!((snap[0].latency_s - 1e-3).abs() < 1e-15); // (1,1) best first
+    }
+}

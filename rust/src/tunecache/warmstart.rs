@@ -1,0 +1,203 @@
+//! Cross-device warm start: schedule-level transfer complementing the
+//! paper's parameter-level transfer.
+//!
+//! On an exact (workload, device) hit the tuner can skip search
+//! entirely.  On a miss, records for the *same workload on other
+//! devices* become seeds for the evolutionary search's initial
+//! population — good-schedule structure (tiling shapes, vectorization,
+//! staging) transfers across GPUs even where absolute latencies do
+//! not, exactly the Eq. 3 decomposition the cost-model transfer relies
+//! on.
+
+use crate::device::DeviceArch;
+use crate::program::{Schedule, Subgraph};
+
+use super::key::WorkloadKey;
+use super::store::TuneRecord;
+use super::TuneCache;
+
+/// One cross-device seed candidate.
+#[derive(Debug, Clone)]
+pub struct SeedRecord {
+    pub schedule: Schedule,
+    /// Device the record was measured on.
+    pub source_device: String,
+    /// Latency on the *source* device — not comparable across devices,
+    /// meaningful only for per-device ranking.
+    pub source_latency_s: f64,
+}
+
+/// What the cache knows about one (task, target device) pair.
+#[derive(Debug, Clone, Default)]
+pub struct WarmStartPlan {
+    /// Best record measured on the target device itself — `Some` ONLY
+    /// when the cached search budget satisfies the requested one, i.e.
+    /// the tuner may short-circuit with zero measured trials.
+    pub exact: Option<TuneRecord>,
+    /// Largest trial budget any cached record of this (workload, device)
+    /// was produced under (0 = never searched here).
+    pub searched_trials: usize,
+    /// This device's own cached schedules, best-first — re-seeds for a
+    /// bigger-budget search (their true latencies are already known, so
+    /// the tuner grounds on them without spending measurements).
+    pub local_seeds: Vec<Schedule>,
+    /// Cross-device seeds: best-first round-robin across source devices,
+    /// deduplicated, validated against the task geometry, capped.
+    pub seeds: Vec<SeedRecord>,
+}
+
+/// Query the cache for a task on a target device at a given trial
+/// budget, recording hit/miss and seed-origin counters.
+///
+/// A hit requires records searched at `requested_trials` or more: a
+/// cheap earlier run must not silently satisfy a bigger requested
+/// search (and a tiny-budget default-only result must not poison the
+/// workload forever).
+pub fn plan(
+    cache: &TuneCache,
+    task: &Subgraph,
+    target: &DeviceArch,
+    max_seeds: usize,
+    requested_trials: usize,
+) -> WarmStartPlan {
+    let key = WorkloadKey::new(task, target);
+    let geometry = task.geometry();
+    // Drop records whose knobs don't decode to a valid schedule for
+    // this geometry (corrupt log lines): they must neither satisfy the
+    // hit test nor silently suppress the seed lists.
+    let local: Vec<TuneRecord> = cache
+        .records(&key)
+        .into_iter()
+        .filter(|r| r.schedule().is_valid(&geometry))
+        .collect();
+    let searched_trials = local.iter().map(|r| r.trials).max().unwrap_or(0);
+    if !local.is_empty() && searched_trials >= requested_trials {
+        cache.counters().record_hit();
+        return WarmStartPlan {
+            exact: local.first().cloned(),
+            searched_trials,
+            local_seeds: Vec::new(),
+            seeds: Vec::new(),
+        };
+    }
+    cache.counters().record_miss();
+
+    let local_seeds: Vec<Schedule> = local.iter().map(|r| r.schedule()).collect();
+    let mut seeds = Vec::new();
+    // Don't re-offer schedules this device already has records for.
+    let mut seen: Vec<[u32; 9]> = local.iter().map(|r| r.knobs).collect();
+    for rec in cache.cross_device(key.workload, key.device) {
+        if seeds.len() >= max_seeds {
+            break;
+        }
+        if seen.contains(&rec.knobs) {
+            continue;
+        }
+        let schedule = rec.schedule();
+        if !schedule.is_valid(&geometry) {
+            continue;
+        }
+        seen.push(rec.knobs);
+        seeds.push(SeedRecord {
+            schedule,
+            source_device: rec.device_name.clone(),
+            source_latency_s: rec.latency_s,
+        });
+    }
+    cache.counters().record_seeds(seeds.len());
+    WarmStartPlan { exact: None, searched_trials, local_seeds, seeds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::program::{SpaceGenerator, SubgraphKind};
+    use crate::util::rng::Rng;
+
+    fn task() -> Subgraph {
+        Subgraph::new(
+            "ws.conv",
+            SubgraphKind::Conv2d {
+                n: 1, h: 28, w: 28, cin: 64, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+        )
+    }
+
+    fn populate(cache: &TuneCache, arch: &DeviceArch, n: usize, seed: u64, trials: usize) {
+        let t = task();
+        let key = WorkloadKey::new(&t, arch);
+        let gen = SpaceGenerator::new(t.geometry());
+        let mut rng = Rng::new(seed);
+        for (i, s) in gen.sample_distinct(&mut rng, n).iter().enumerate() {
+            cache.commit(TuneRecord::new(
+                key,
+                &arch.name,
+                s,
+                (i + 1) as f64 * 1e-3,
+                1.0,
+                trials,
+            ));
+        }
+    }
+
+    #[test]
+    fn miss_yields_cross_device_seeds() {
+        let cache = TuneCache::in_memory(8);
+        populate(&cache, &presets::rtx_2060(), 5, 1, 64);
+        populate(&cache, &presets::tesla_k80(), 5, 2, 64);
+
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), 6, 64);
+        assert!(p.exact.is_none());
+        assert_eq!(p.searched_trials, 0);
+        assert!(p.local_seeds.is_empty());
+        // Up to 6 seeds; identical schedules sampled on both devices
+        // dedup, so allow a small shortfall.
+        assert!(p.seeds.len() >= 5, "expected >=5 seeds, got {}", p.seeds.len());
+        // Both source devices contribute (round-robin).
+        assert!(p.seeds.iter().any(|s| s.source_device == "rtx2060"));
+        assert!(p.seeds.iter().any(|s| s.source_device == "k80"));
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.cross_device_seeds, p.seeds.len());
+    }
+
+    #[test]
+    fn exact_hit_short_circuits_seeding() {
+        let cache = TuneCache::in_memory(8);
+        populate(&cache, &presets::jetson_tx2(), 3, 3, 64);
+        populate(&cache, &presets::rtx_2060(), 3, 4, 64);
+
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), 8, 64);
+        let exact = p.exact.expect("expected an exact hit");
+        assert!((exact.latency_s - 1e-3).abs() < 1e-15);
+        assert_eq!(p.searched_trials, 64);
+        assert!(p.seeds.is_empty() && p.local_seeds.is_empty());
+        assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn bigger_budget_downgrades_hit_to_local_reseed() {
+        let cache = TuneCache::in_memory(8);
+        populate(&cache, &presets::jetson_tx2(), 3, 5, 16);
+        populate(&cache, &presets::rtx_2060(), 3, 6, 16);
+
+        // Requesting more trials than ever searched: no short-circuit,
+        // but this device's own records come back as local seeds and the
+        // other device's as cross-device seeds.
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), 8, 200);
+        assert!(p.exact.is_none());
+        assert_eq!(p.searched_trials, 16);
+        assert_eq!(p.local_seeds.len(), 3);
+        assert!(!p.seeds.is_empty());
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn empty_cache_plans_nothing() {
+        let cache = TuneCache::in_memory(8);
+        let p = plan(&cache, &task(), &presets::rtx_2060(), 8, 64);
+        assert!(p.exact.is_none() && p.seeds.is_empty() && p.local_seeds.is_empty());
+        assert_eq!(cache.stats().misses, 1);
+    }
+}

@@ -1,0 +1,260 @@
+//! tunecache integration: key stability, top-k eviction, JSONL
+//! persistence across cache generations, and end-to-end warm start
+//! through the AutoTuner — repeats are measurement-free, cross-device
+//! records seed the target device's evolutionary search.
+
+use std::sync::Arc;
+
+use moses::coordinator::{AutoTuner, BackendKind, TuneConfig};
+use moses::device::{presets, DeviceSim};
+use moses::program::{SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
+use moses::transfer::Strategy;
+use moses::tunecache::{persist, warmstart, TuneCache, TuneRecord, WorkloadKey};
+use moses::util::rng::Rng;
+
+fn conv_task(name: &str) -> Subgraph {
+    Subgraph::new(
+        name,
+        SubgraphKind::Conv2d {
+            n: 1, h: 28, w: 28, cin: 64, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+        },
+    )
+}
+
+fn cfg(seed: u64) -> TuneConfig {
+    TuneConfig {
+        trials_per_task: 16,
+        measure_batch: 4,
+        strategy: Strategy::AnsorRandom,
+        population: 24,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed,
+        ..TuneConfig::default()
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("moses_tunecache_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn workload_key_is_name_invariant_and_device_aware() {
+    let a = conv_task("resnet18.conv2_1");
+    let b = conv_task("mobilenet.pw3").with_repeats(4);
+    assert_eq!(a.workload_fingerprint(), b.workload_fingerprint());
+    let arch = presets::rtx_2060();
+    assert_eq!(WorkloadKey::new(&a, &arch), WorkloadKey::new(&b, &arch));
+    // Shape changes move the key; device changes move the key.
+    let c = Subgraph::new(
+        "x",
+        SubgraphKind::Conv2d {
+            n: 1, h: 28, w: 28, cin: 64, cout: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+        },
+    );
+    assert_ne!(a.workload_fingerprint(), c.workload_fingerprint());
+    assert_ne!(
+        WorkloadKey::new(&a, &presets::rtx_2060()),
+        WorkloadKey::new(&a, &presets::jetson_tx2())
+    );
+}
+
+#[test]
+fn persist_roundtrip_tolerance_and_compaction() {
+    let path = tmp("roundtrip.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let task = conv_task("p.conv");
+    let gen = SpaceGenerator::new(task.geometry());
+    let mut rng = Rng::new(2);
+    let scheds = gen.sample_distinct(&mut rng, 6);
+    {
+        let cache = TuneCache::open(&path, 8).unwrap();
+        for (i, s) in scheds.iter().enumerate() {
+            for arch in [presets::rtx_2060(), presets::jetson_tx2()] {
+                let key = WorkloadKey::new(&task, &arch);
+                cache.commit(TuneRecord::new(
+                    key,
+                    &arch.name,
+                    s,
+                    (i + 1) as f64 * 1e-3,
+                    2.0,
+                    64,
+                ));
+            }
+        }
+        assert_eq!(cache.total_records(), 12);
+    }
+
+    // A new cache generation sees the identical frontier.
+    let reopened = TuneCache::open(&path, 8).unwrap();
+    assert_eq!(reopened.total_records(), 12);
+    let key = WorkloadKey::new(&task, &presets::rtx_2060());
+    assert_eq!(reopened.records(&key).len(), 6);
+    assert!((reopened.best(&key).unwrap().latency_s - 1e-3).abs() < 1e-15);
+
+    // A torn append (crash mid-write) must not poison the file.
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "{{\"workload\": trunca").unwrap();
+    }
+    let tolerant = TuneCache::open(&path, 8).unwrap();
+    assert_eq!(tolerant.total_records(), 12);
+
+    // Compaction rewrites to exactly the live frontier, dropping junk.
+    tolerant.compact().unwrap();
+    let (records, skipped) = persist::load_records(&path).unwrap();
+    assert_eq!(records.len(), 12);
+    assert_eq!(skipped, 0);
+    // And the cache still appends fine after compaction.
+    let extra = gen.sample_distinct(&mut rng, 7)[6];
+    assert!(tolerant.commit(TuneRecord::new(key, "rtx2060", &extra, 0.1e-3, 3.0, 64)));
+    let (records2, _) = persist::load_records(&path).unwrap();
+    assert_eq!(records2.len(), 13);
+}
+
+#[test]
+fn repeat_run_is_measurement_free() {
+    let tasks = vec![
+        conv_task("rr.conv"),
+        Subgraph::new("rr.dense", SubgraphKind::Dense { m: 64, n: 256, k: 256 }),
+    ];
+    let cache = Arc::new(TuneCache::in_memory(8));
+
+    let mut first = AutoTuner::from_config(&cfg(1), presets::rtx_2060()).unwrap();
+    first.attach_cache(cache.clone());
+    let s1 = first.tune(&tasks).unwrap();
+    assert!(s1.total_measurements() > 0);
+    assert_eq!(s1.cache_hits(), 0);
+
+    let mut second = AutoTuner::from_config(&cfg(2), presets::rtx_2060()).unwrap();
+    second.attach_cache(cache.clone());
+    let s2 = second.tune(&tasks).unwrap();
+    assert_eq!(s2.total_measurements(), 0, "repeat run must be served from cache");
+    assert_eq!(s2.cache_hits(), 2);
+    // The cached choice is exactly as good as what the first session
+    // found (both report noise-free true latencies).
+    assert!(s2.total_best_latency_ms() <= s1.total_best_latency_ms() * (1.0 + 1e-9));
+
+    let stats = cache.stats();
+    assert_eq!(stats.hits, 2);
+    assert_eq!(stats.misses, 2);
+    // Session embeds the snapshot.
+    assert_eq!(s2.cache.unwrap().hits, 2);
+}
+
+#[test]
+fn cross_device_records_seed_target_search() {
+    let task = conv_task("xd.conv");
+    let cache = Arc::new(TuneCache::in_memory(8));
+
+    // A session on the source device populates the cache.
+    let mut src = AutoTuner::from_config(&cfg(5), presets::rtx_2060()).unwrap();
+    src.attach_cache(cache.clone());
+    src.tune(std::slice::from_ref(&task)).unwrap();
+    assert!(cache.total_records() > 0);
+
+    // The target device misses exactly but receives cross-device seeds.
+    let plan = warmstart::plan(&cache, &task, &presets::jetson_tx2(), 8, 16);
+    assert!(plan.exact.is_none());
+    assert!(!plan.seeds.is_empty(), "cross-device seeds expected");
+    assert!(plan.seeds.iter().all(|s| s.source_device == "rtx2060"));
+
+    // Seeded tuning on the target injects the seeds into the search.
+    let mut warm = AutoTuner::from_config(&cfg(6), presets::jetson_tx2()).unwrap();
+    warm.attach_cache(cache.clone());
+    let sw = warm.tune(std::slice::from_ref(&task)).unwrap();
+    assert!(!sw.tasks[0].cache_hit);
+    assert!(sw.tasks[0].warm_seeds > 0, "search population must be seeded");
+
+    // The probed seeds ground the session immediately: by the end of the
+    // FIRST round the seeded session is already at least as good as the
+    // best probed cross-device schedule — a cold session needs however
+    // many trials its search takes to get there.
+    let sim = DeviceSim::new(presets::jetson_tx2());
+    let probe_best = plan
+        .seeds
+        .iter()
+        .take(cfg(6).seed_probe)
+        .map(|s| sim.true_latency(&TensorProgram::new(task.clone(), s.schedule)))
+        .fold(f64::INFINITY, f64::min);
+    if probe_best.is_finite() {
+        assert!(
+            sw.tasks[0].history[0] <= probe_best * (1.0 + 1e-9),
+            "round-0 best {} should already match the probed seed {}",
+            sw.tasks[0].history[0],
+            probe_best
+        );
+        // Fewer-trials claim: the warm session reaches that quality at
+        // round 0; the cold session may or may not, but never earlier.
+        let mut cold = AutoTuner::from_config(&cfg(6), presets::jetson_tx2()).unwrap();
+        let sc = cold.tune(std::slice::from_ref(&task)).unwrap();
+        let reach = |h: &[f64]| {
+            h.iter()
+                .position(|&v| v <= probe_best * (1.0 + 1e-9))
+                .unwrap_or(h.len())
+        };
+        assert!(
+            reach(&sw.tasks[0].history) <= reach(&sc.tasks[0].history),
+            "warm start took longer to reach the cached quality: {:?} vs {:?}",
+            sw.tasks[0].history,
+            sc.tasks[0].history
+        );
+    }
+
+    // Commit-after-measure: the target device's results are now cached
+    // too, so a repeat on the target is measurement-free.
+    let mut again = AutoTuner::from_config(&cfg(7), presets::jetson_tx2()).unwrap();
+    again.attach_cache(cache.clone());
+    let sa = again.tune(std::slice::from_ref(&task)).unwrap();
+    assert_eq!(sa.total_measurements(), 0);
+    assert_eq!(sa.cache_hits(), 1);
+}
+
+#[test]
+fn larger_budget_overrides_exact_hit_and_reuses_local_records() {
+    // A cheap run must not permanently satisfy (or poison) the
+    // workload: requesting more trials re-searches, grounded on the
+    // device's own cached records at zero measurement cost.
+    let task = conv_task("lb.conv");
+    let cache = Arc::new(TuneCache::in_memory(8));
+
+    let mut small = AutoTuner::from_config(&cfg(9), presets::rtx_2060()).unwrap();
+    small.attach_cache(cache.clone());
+    small.tune(std::slice::from_ref(&task)).unwrap();
+    let key = WorkloadKey::new(&task, &presets::rtx_2060());
+    let cached_best = cache.best(&key).unwrap().latency_s;
+
+    // Equal budget: exact hit, zero measurements.
+    let mut same = AutoTuner::from_config(&cfg(10), presets::rtx_2060()).unwrap();
+    same.attach_cache(cache.clone());
+    let ss = same.tune(std::slice::from_ref(&task)).unwrap();
+    assert_eq!(ss.total_measurements(), 0);
+
+    // Double the budget: the hit is refused, search runs again...
+    let mut big_cfg = cfg(11);
+    big_cfg.trials_per_task = 32;
+    let mut big = AutoTuner::from_config(&big_cfg, presets::rtx_2060()).unwrap();
+    big.attach_cache(cache.clone());
+    let sb = big.tune(std::slice::from_ref(&task)).unwrap();
+    assert!(!sb.tasks[0].cache_hit);
+    assert!(sb.total_measurements() > 0);
+    // ...but never regresses below the cached best (local re-seeding).
+    assert!(
+        sb.tasks[0].best_latency_s <= cached_best * (1.0 + 1e-9),
+        "big-budget run regressed: {} vs cached {}",
+        sb.tasks[0].best_latency_s,
+        cached_best
+    );
+
+    // The workload now counts as searched at 32 trials: repeating at 32
+    // is measurement-free again.
+    let mut big2_cfg = cfg(12);
+    big2_cfg.trials_per_task = 32;
+    let mut big2 = AutoTuner::from_config(&big2_cfg, presets::rtx_2060()).unwrap();
+    big2.attach_cache(cache.clone());
+    let sb2 = big2.tune(std::slice::from_ref(&task)).unwrap();
+    assert_eq!(sb2.total_measurements(), 0);
+}

@@ -6,7 +6,11 @@
 //! Rust mirror, so all four implementations agree transitively.
 //!
 //! Skips (with a loud message) if `artifacts/` is missing — run
-//! `make artifacts` first; the Makefile `test` target does.
+//! `make artifacts` first; the Makefile `test` target does.  The whole
+//! suite is compiled out when the `xla` feature is off (the default in
+//! offline builds, where the PJRT runtime is unavailable).
+
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 
