@@ -37,7 +37,10 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         "Warm start on 4 SqueezeNet tasks",
-        &["run", "device", "measured", "cache hits", "seeded tasks", "latency ms", "search s"],
+        &[
+            "run", "device", "measured", "cache hits", "seeded tasks", "nn-seeded",
+            "latency ms", "search s",
+        ],
     );
     let mut run = |label: &str, device: DeviceArch, seed: u64| -> anyhow::Result<Session> {
         let mut tuner = AutoTuner::from_config(&cfg(seed), device)?;
@@ -49,6 +52,7 @@ fn main() -> anyhow::Result<()> {
             s.total_measurements().to_string(),
             s.cache_hits().to_string(),
             s.warm_seeded_tasks().to_string(),
+            s.neighbor_seeded_tasks().to_string(),
             format!("{:.3}", s.total_best_latency_ms()),
             format!("{:.0}", s.search_time_s()),
         ]);
@@ -84,9 +88,9 @@ fn main() -> anyhow::Result<()> {
     let s = cache.stats();
     let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     println!(
-        "\ncache: {} hits / {} misses, {} cross-device seeds, {} commits; \
-         {} live records, {size} bytes on disk",
-        s.hits, s.misses, s.cross_device_seeds, s.commits,
+        "\ncache: {} hits / {} misses, {} cross-device seeds, {} neighbor seeds, \
+         {} commits; {} live records, {size} bytes on disk",
+        s.hits, s.misses, s.cross_device_seeds, s.neighbor_seeds, s.commits,
         cache.total_records(),
     );
     cache.compact()?;

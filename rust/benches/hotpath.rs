@@ -11,7 +11,7 @@ use moses::device::{presets, DeviceSim};
 use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
 use moses::runtime::Engine;
 use moses::search::{EvolutionarySearch, SearchPolicy};
-use moses::tunecache::{TuneRecord, TuneStore, WorkloadKey};
+use moses::tunecache::{TuneRecord, TuneStore, WorkloadIndex, WorkloadKey, RECORD_VERSION};
 use moses::util::bench::Bencher;
 use moses::util::rng::Rng;
 
@@ -73,20 +73,24 @@ fn main() {
     // --- tunecache (the check-before-search hot path) ---------------------
     // A populated store: 128 workloads × 2 devices × topk records each.
     let store = TuneStore::new(8);
+    let index = WorkloadIndex::new();
     let arch_a = presets::rtx_2060();
     let arch_b = presets::jetson_tx2();
     let mut workload_keys = Vec::new();
+    let mut descs = Vec::new();
     for i in 0..128usize {
         let t = Subgraph::new(
             "cache.dense",
             SubgraphKind::Dense { m: 32 + i, n: 256, k: 256 },
         );
+        let desc = t.descriptor();
         for arch in [&arch_a, &arch_b] {
             let key = WorkloadKey::new(&t, arch);
             for j in 0..8usize {
                 let sched = gen.sample(&mut rng);
                 store.commit(&TuneRecord::new(
                     key,
+                    desc,
                     &arch.name,
                     &sched,
                     1e-3 * (j + 1) as f64,
@@ -95,7 +99,10 @@ fn main() {
                 ));
             }
         }
-        workload_keys.push(WorkloadKey::new(&t, &arch_a));
+        let key = WorkloadKey::new(&t, &arch_a);
+        index.insert(key.workload, desc, RECORD_VERSION);
+        workload_keys.push(key);
+        descs.push(desc);
     }
     let hit_key = workload_keys[64];
     let miss_key = WorkloadKey { workload: 0xDEAD_BEEF, device: hit_key.device };
@@ -108,12 +115,29 @@ fn main() {
     // admission path (insert + sort + evict), not just duplicate-reject.
     let commit_pool: Vec<_> = gen.sample_distinct(&mut rng, 16);
     let mut commit_i = 0usize;
+    let hit_desc = descs[64];
     b.run("cache_commit", || {
         commit_i += 1;
         let sched = &commit_pool[commit_i % commit_pool.len()];
         let lat = 1e-3 / (1.0 + (commit_i % 7) as f64);
-        store.commit(&TuneRecord::new(hit_key, &arch_a.name, sched, lat, 200.0, 64))
+        store.commit(&TuneRecord::new(hit_key, hit_desc, &arch_a.name, sched, lat, 200.0, 64))
     });
+
+    // --- nearest-neighbor index (the miss-path retrieval) ------------------
+    // 128 indexed workloads, as a miss on a novel shape would scan.
+    let novel = Subgraph::new(
+        "nn.dense",
+        SubgraphKind::Dense { m: 96, n: 320, k: 256 },
+    );
+    b.run("nn_descriptor", || novel.descriptor());
+    let query = novel.descriptor();
+    b.run("nn_query_k4_of128", || index.nearest(&query, 4, 1.0, 0));
+    let mut nn_i = 0usize;
+    b.run("nn_index_insert", || {
+        nn_i += 1;
+        index.insert(nn_i as u64, descs[nn_i % descs.len()], RECORD_VERSION)
+    });
+    b.run("nn_workload_records", || store.workload_records(hit_key.workload));
 
     // --- XLA backend (skipped when unavailable) ---------------------------
     let dir = Engine::default_dir();

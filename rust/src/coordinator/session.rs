@@ -21,8 +21,12 @@ pub struct TaskResult {
     pub history: Vec<f64>,
     /// Served straight from the tune cache (zero measured trials).
     pub cache_hit: bool,
-    /// Cross-device schedules injected into the search population.
+    /// Same-workload cross-device schedules injected into the search
+    /// population.
     pub warm_seeds: usize,
+    /// Similar-workload (nearest-neighbor) schedules injected into the
+    /// search population.
+    pub neighbor_seeds: usize,
 }
 
 impl TaskResult {
@@ -88,6 +92,12 @@ impl Session {
     pub fn warm_seeded_tasks(&self) -> usize {
         self.tasks.iter().filter(|t| t.warm_seeds > 0).count()
     }
+
+    /// Tasks whose search population received nearest-neighbor seeds
+    /// from similar workloads.
+    pub fn neighbor_seeded_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| t.neighbor_seeds > 0).count()
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +119,7 @@ mod tests {
             history: vec![default, lat],
             cache_hit: false,
             warm_seeds: 0,
+            neighbor_seeds: 0,
         }
     }
 

@@ -12,7 +12,9 @@ use crate::program::{featurize, Schedule, Subgraph, TensorProgram, N_FEATURES};
 use crate::runtime::Engine;
 use crate::search::{EvolutionarySearch, RandomSearch, SearchPolicy};
 use crate::transfer::{self, AdaptiveController, MosesAdapter, Strategy};
-use crate::tunecache::{warmstart, TuneCache, TuneRecord, WorkloadKey};
+use crate::tunecache::{
+    warmstart, TuneCache, TuneRecord, WorkloadKey, DEFAULT_NN_K, DEFAULT_NN_RADIUS,
+};
 use crate::util::rng::Rng;
 
 /// Which compute backend executes the cost model.
@@ -37,8 +39,9 @@ impl BackendKind {
     }
 }
 
-/// Cap on cross-device schedules injected into one task's search
-/// population (the evolutionary engine holds up to 32 seeds).
+/// Cap on warm-start schedules (cross-device plus nearest-neighbor)
+/// injected into one task's search population (the evolutionary engine
+/// holds up to 32 seeds).
 const MAX_WARM_SEEDS: usize = 8;
 
 /// Tuning configuration (one model × one device × one strategy).
@@ -67,6 +70,11 @@ pub struct TuneConfig {
     /// (grounds the session's best immediately; the rest only seed the
     /// evolutionary population).
     pub seed_probe: usize,
+    /// Nearest-neighbor warm-start radius in normalized descriptor
+    /// space; `None` disables the neighbor tier.
+    pub nn_radius: Option<f64>,
+    /// Neighbor workloads consulted per nearest-neighbor query.
+    pub nn_k: usize,
 }
 
 impl Default for TuneConfig {
@@ -87,6 +95,8 @@ impl Default for TuneConfig {
             population: 64,
             generations: 3,
             seed_probe: 2,
+            nn_radius: Some(DEFAULT_NN_RADIUS),
+            nn_k: DEFAULT_NN_K,
         }
     }
 }
@@ -246,14 +256,19 @@ impl AutoTuner {
         // yield this device's own records (bigger-budget re-search) and
         // cross-device seeds below.
         let mut warm_seeds: Vec<Schedule> = Vec::new();
+        let mut neighbor_seeds: Vec<Schedule> = Vec::new();
         let mut local_seeds: Vec<Schedule> = Vec::new();
         if let Some(cache) = self.cache.clone() {
             let plan = warmstart::plan(
                 &cache,
                 task,
                 &self.sim.arch,
-                MAX_WARM_SEEDS,
-                self.config.trials_per_task,
+                &warmstart::WarmStartOptions {
+                    max_seeds: MAX_WARM_SEEDS,
+                    requested_trials: self.config.trials_per_task,
+                    nn_k: self.config.nn_k,
+                    nn_radius: self.config.nn_radius,
+                },
             );
             if let Some(rec) = plan.exact {
                 let cached = rec.schedule();
@@ -279,10 +294,12 @@ impl AutoTuner {
                         history: vec![best_latency; rounds],
                         cache_hit: true,
                         warm_seeds: 0,
+                        neighbor_seeds: 0,
                     });
                 }
             }
             warm_seeds = plan.seeds.iter().map(|s| s.schedule).collect();
+            neighbor_seeds = plan.neighbor_seeds.iter().map(|s| s.schedule).collect();
             local_seeds = plan.local_seeds;
         }
 
@@ -340,10 +357,14 @@ impl AutoTuner {
             evo.add_seed(*s);
         }
 
-        // Warm start: verify the most promising cross-device seeds on
-        // device first (grounds the session's best immediately), then
-        // hand ALL seeds to the evolutionary engine's population.
-        for (i, s) in warm_seeds.iter().enumerate() {
+        // Warm start: verify the most promising seeds on device first
+        // (grounds the session's best immediately), then hand ALL seeds
+        // to the evolutionary engine's population.  Same-workload
+        // cross-device seeds rank ahead of similar-workload neighbor
+        // seeds in the probe order — they carry no shape mismatch.
+        let probe_order: Vec<Schedule> =
+            warm_seeds.iter().chain(neighbor_seeds.iter()).copied().collect();
+        for (i, s) in probe_order.iter().enumerate() {
             if i < self.config.seed_probe {
                 let prog = TensorProgram::new(task.clone(), *s);
                 let m = self.sim.measure(&prog, rng);
@@ -476,10 +497,13 @@ impl AutoTuner {
                 }
                 let preds = self.model.predict(&cx, candidates.len())?;
                 clock.charge_query();
+                // Non-finite predictions must neither panic the ranking
+                // nor win it; all-NaN degrades to the first candidate.
                 let top = preds
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .filter(|(_, p)| p.is_finite())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap_or(0);
                 let prog = TensorProgram::new(task.clone(), candidates[top]);
@@ -536,11 +560,13 @@ impl AutoTuner {
         // sessions — on this device or others — can warm start.
         if let Some(cache) = &self.cache {
             let key = WorkloadKey::new(task, &self.sim.arch);
+            let desc = task.descriptor();
             cache_outcomes.push((best_sched, best_latency));
             for (sched, lat) in &cache_outcomes {
                 let gflops = task.flops() / lat.max(1e-12) / 1e9;
                 cache.commit(TuneRecord::new(
                     key,
+                    desc,
                     &self.sim.arch.name,
                     sched,
                     *lat,
@@ -560,6 +586,7 @@ impl AutoTuner {
             history,
             cache_hit: false,
             warm_seeds: warm_seeds.len(),
+            neighbor_seeds: neighbor_seeds.len(),
         })
     }
 }

@@ -33,9 +33,15 @@
 //! trials), commit after measuring, and — on a miss for the target
 //! device — seed the evolutionary search with the same workload's
 //! records from *other* devices: schedule-level transfer complementing
-//! Moses' parameter-level transfer.  Records persist as a JSONL append
-//! log with compaction, so tuning knowledge accumulates across sessions
-//! and hosts; hit/miss/seed counters live in [`metrics::cache`].
+//! Moses' parameter-level transfer.  A feature-space workload index
+//! ([`tunecache::index`]) extends the fallback to *similar* workloads:
+//! a never-seen shape retrieves its nearest cached neighbors by
+//! descriptor distance and starts from their schedules, remapped onto
+//! the new geometry.  Records carry a featurizer/simulator version
+//! stamp so a latency-model change invalidates them on load.  Records
+//! persist as a JSONL append log with compaction, so tuning knowledge
+//! accumulates across sessions and hosts; hit/miss/seed counters live
+//! in [`metrics::cache`].
 
 pub mod coordinator;
 pub mod costmodel;

@@ -102,6 +102,13 @@ fn cmd_tune(args: &[String]) -> Result<()> {
             "persistent tuning-record store (zero-trial repeats + cross-device warm start)",
         )
         .switch("no-cache", "disable the tuning-record store")
+        .opt(
+            "nn-radius",
+            "",
+            "nearest-neighbor warm-start radius, normalized log2 descriptor distance \
+             (empty = built-in default)",
+        )
+        .switch("no-nn", "disable nearest-neighbor warm start (exact cache hits only)")
         .switch("verbose", "per-task output");
     if args.iter().any(|a| a == "--help") {
         print!("{}", flags.help("tune", "Tune a DNN on a simulated target device."));
@@ -134,12 +141,24 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         None
     };
 
+    // Empty string defers to the library default so the CLI can never
+    // drift from a retuned DEFAULT_NN_RADIUS.
+    let nn_radius = if p.get("nn-radius").is_empty() {
+        moses::tunecache::DEFAULT_NN_RADIUS
+    } else {
+        p.get_f64("nn-radius")?
+    };
+    anyhow::ensure!(
+        nn_radius.is_finite() && nn_radius >= 0.0,
+        "--nn-radius must be a non-negative number"
+    );
     let cfg = TuneConfig {
         trials_per_task: p.get_usize("trials")?,
         measure_batch: p.get_usize("batch")?,
         strategy: strategy.clone(),
         seed: p.get_u64("seed")?,
         backend,
+        nn_radius: if p.get_bool("no-nn") { None } else { Some(nn_radius) },
         ..TuneConfig::default()
     };
     let cost_model = moses::transfer::init_model(
@@ -175,7 +194,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
     if p.get_bool("verbose") {
         let mut t = Table::new(
             "Per-task results",
-            &["task", "default ms", "tuned ms", "speedup", "measured", "pred-only"],
+            &["task", "default ms", "tuned ms", "speedup", "measured", "pred-only", "seeds"],
         );
         for r in &session.tasks {
             t.row(vec![
@@ -185,6 +204,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
                 format!("{:.2}x", r.speedup()),
                 r.measured.to_string(),
                 r.predicted_only.to_string(),
+                format!("{}+{}nn", r.warm_seeds, r.neighbor_seeds),
             ]);
         }
         t.print();
@@ -205,15 +225,23 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         let s = c.stats();
         println!(
             "tune cache         : {} hit / {} miss ({:.0}% hit rate), {} cross-device seeds, \
-             {} records over {} workloads at {}",
+             {} neighbor seeds, {} records over {} workloads at {}",
             s.hits,
             s.misses,
             100.0 * s.hit_rate(),
             s.cross_device_seeds,
+            s.neighbor_seeds,
             c.total_records(),
             c.num_workloads(),
             c.path().map(|p| p.display().to_string()).unwrap_or_else(|| "<memory>".into()),
         );
+        if s.stale_dropped > 0 {
+            println!(
+                "                     ({} stale record(s) dropped on load — \
+                 featurizer/simulator version changed)",
+                s.stale_dropped
+            );
+        }
     }
     println!("harness wall time  : {wall:.1} s");
     Ok(())

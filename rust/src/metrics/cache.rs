@@ -14,8 +14,10 @@ pub struct CacheCounters {
     hits: AtomicUsize,
     misses: AtomicUsize,
     cross_device_seeds: AtomicUsize,
+    neighbor_seeds: AtomicUsize,
     commits: AtomicUsize,
     rejects: AtomicUsize,
+    stale_dropped: AtomicUsize,
 }
 
 impl CacheCounters {
@@ -34,6 +36,18 @@ impl CacheCounters {
         self.cross_device_seeds.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// `n` schedules from *similar* workloads (nearest-neighbor
+    /// retrieval) were offered as search seeds.
+    pub fn record_neighbor_seeds(&self, n: usize) {
+        self.neighbor_seeds.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` records were dropped on load for carrying a stale
+    /// featurizer/simulator version stamp.
+    pub fn record_stale(&self, n: usize) {
+        self.stale_dropped.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// A record passed top-k admission.
     pub fn record_commit(&self) {
         self.commits.fetch_add(1, Ordering::Relaxed);
@@ -49,8 +63,10 @@ impl CacheCounters {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             cross_device_seeds: self.cross_device_seeds.load(Ordering::Relaxed),
+            neighbor_seeds: self.neighbor_seeds.load(Ordering::Relaxed),
             commits: self.commits.load(Ordering::Relaxed),
             rejects: self.rejects.load(Ordering::Relaxed),
+            stale_dropped: self.stale_dropped.load(Ordering::Relaxed),
         }
     }
 }
@@ -61,8 +77,10 @@ pub struct CacheStats {
     pub hits: usize,
     pub misses: usize,
     pub cross_device_seeds: usize,
+    pub neighbor_seeds: usize,
     pub commits: usize,
     pub rejects: usize,
+    pub stale_dropped: usize,
 }
 
 impl CacheStats {
@@ -88,14 +106,18 @@ mod tests {
         c.record_hit();
         c.record_miss();
         c.record_seeds(5);
+        c.record_neighbor_seeds(3);
         c.record_commit();
         c.record_reject();
+        c.record_stale(2);
         let s = c.snapshot();
         assert_eq!(s.hits, 2);
         assert_eq!(s.misses, 1);
         assert_eq!(s.cross_device_seeds, 5);
+        assert_eq!(s.neighbor_seeds, 3);
         assert_eq!(s.commits, 1);
         assert_eq!(s.rejects, 1);
+        assert_eq!(s.stale_dropped, 2);
         assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 

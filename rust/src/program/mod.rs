@@ -20,7 +20,7 @@ pub mod subgraph;
 pub use features::{featurize, N_FEATURES};
 pub use generator::SpaceGenerator;
 pub use schedule::Schedule;
-pub use subgraph::{Geometry, Subgraph, SubgraphKind};
+pub use subgraph::{Geometry, Subgraph, SubgraphKind, DESC_DIM};
 
 /// A concrete tensor program = a subgraph plus one schedule point.
 #[derive(Debug, Clone, PartialEq)]

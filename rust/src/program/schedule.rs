@@ -176,6 +176,41 @@ impl Schedule {
         true
     }
 
+    /// Remap a schedule tuned for one geometry onto another: shrink
+    /// whichever knobs overshoot the new extents (reduction split,
+    /// block tiles, vector width) while keeping the overall tiling
+    /// *structure* — the part that transfers between similar workloads.
+    /// All knob choices are powers of two, so halving stays within the
+    /// choice sets.  The result still needs [`Schedule::is_valid`]: a
+    /// schedule that was invalid to begin with stays invalid.
+    pub fn remap_for(&self, g: &Geometry) -> Schedule {
+        let mut s = *self;
+        while s.rt > 1 && s.rt > g.r.next_power_of_two() {
+            s.rt /= 2;
+        }
+        while s.block_tile_x() > 2 * g.x.next_power_of_two() && s.block_tile_x() > 1 {
+            if s.ix > 1 {
+                s.ix /= 2;
+            } else {
+                s.tx /= 2;
+            }
+        }
+        while s.block_tile_y() > 2 * g.y.next_power_of_two() && s.block_tile_y() > 1 {
+            if s.iy > 1 {
+                s.iy /= 2;
+            } else {
+                s.ty /= 2;
+            }
+        }
+        while s.vectorize > 1 && s.vectorize > s.ix.max(s.iy) {
+            s.vectorize /= 2;
+        }
+        if s.layout == Layout::Packed && s.vectorize == 1 {
+            s.layout = Layout::RowMajor;
+        }
+        s
+    }
+
     // ------------------------------------------------ serialization ----
 
     /// Fixed-width knob encoding (for fingerprints & dataset records).
@@ -266,6 +301,33 @@ mod tests {
         let small = Schedule::default_for(&g);
         let big = Schedule { ix: 16, iy: 16, unroll: 512, ..small };
         assert!(big.regs_per_thread() > small.regs_per_thread());
+    }
+
+    #[test]
+    fn remap_shrinks_onto_smaller_geometry() {
+        let big = geom();
+        let s = Schedule {
+            tx: 64,
+            ix: 4,
+            ty: 8,
+            iy: 4,
+            rt: 64,
+            vectorize: 4,
+            unroll: 512,
+            use_shared: true,
+            layout: Layout::Packed,
+        };
+        assert!(s.is_valid(&big));
+        // A much smaller problem: the raw schedule overshoots it.
+        let small = Geometry { x: 64, y: 8, r: 4, mac: true };
+        assert!(!s.is_valid(&small));
+        let r = s.remap_for(&small);
+        assert!(r.is_valid(&small), "remapped schedule invalid: {r:?}");
+        // Structure knobs that already fit are untouched.
+        assert_eq!(r.unroll, s.unroll);
+        assert_eq!(r.use_shared, s.use_shared);
+        // Remapping onto the original geometry is the identity.
+        assert_eq!(s.remap_for(&big), s);
     }
 
     #[test]

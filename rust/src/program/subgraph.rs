@@ -14,6 +14,9 @@
 //! | Pool2d        | N·OH·OW         | C           | K·K           |
 //! | Elementwise   | len             | 1           | 1             |
 
+/// Dimensionality of the workload descriptor ([`Subgraph::descriptor`]).
+pub const DESC_DIM: usize = 9;
+
 /// Operator kind with full shape parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SubgraphKind {
@@ -162,6 +165,30 @@ impl SubgraphKind {
         self.flops() / self.total_bytes().max(1.0)
     }
 
+    /// Compact feature-space descriptor of the workload: log-scaled
+    /// geometry extents, MAC flag, log-scaled flops, per-buffer bytes,
+    /// and arithmetic intensity.  Log scaling (`log2(1 + v)`) makes the
+    /// L2 distance between two descriptors measure *ratios* between
+    /// shapes, so a conv with twice the channels sits one octave away
+    /// regardless of absolute size — the similarity metric the
+    /// nearest-neighbor warm start retrieves along.
+    pub fn descriptor(&self) -> [f64; DESC_DIM] {
+        let l2 = |v: f64| (1.0 + v.max(0.0)).log2();
+        let g = self.geometry();
+        let (in_b, w_b, out_b) = self.buffer_bytes();
+        [
+            l2(g.x as f64),
+            l2(g.y as f64),
+            l2(g.r as f64),
+            if g.mac { 1.0 } else { 0.0 },
+            l2(self.flops()),
+            l2(in_b),
+            l2(w_b),
+            l2(out_b),
+            l2(self.arithmetic_intensity()),
+        ]
+    }
+
     /// Tagged canonical encoding (kind tag + shape parameters in a fixed
     /// order) — the single source of truth for dataset serialization and
     /// workload hashing.
@@ -269,6 +296,13 @@ impl Subgraph {
         self.kind.flops()
     }
 
+    /// Feature-space descriptor of the normalized workload
+    /// ([`SubgraphKind::descriptor`]) — like the fingerprint, invariant
+    /// to task naming and repeat counts.
+    pub fn descriptor(&self) -> [f64; DESC_DIM] {
+        self.kind.descriptor()
+    }
+
     /// Stable, collision-resistant fingerprint of the *normalized*
     /// workload: kind + shape parameters only.  Invariant to task naming
     /// and weight-shared repeat counts, so `resnet18.conv2_1` and a
@@ -374,6 +408,25 @@ mod tests {
         let s = Subgraph::new("t", conv());
         assert_eq!(s.repeats, 1);
         assert_eq!(s.with_repeats(3).repeats, 3);
+    }
+
+    #[test]
+    fn descriptor_is_finite_and_shape_sensitive() {
+        let a = conv().descriptor();
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Same shape -> identical descriptor regardless of naming.
+        let named = Subgraph::new("x.y", conv()).with_repeats(5);
+        assert_eq!(named.descriptor(), a);
+        // Doubling cout moves the y/flops dims by about one octave.
+        let wider = SubgraphKind::Conv2d {
+            n: 1, h: 224, w: 224, cin: 3, cout: 128, kh: 3, kw: 3, stride: 1, pad: 0,
+        };
+        let b = wider.descriptor();
+        assert!((b[1] - a[1] - 1.0).abs() < 0.05, "y dim should shift ~1 octave");
+        assert!((b[4] - a[4] - 1.0).abs() < 0.05, "flops dim should shift ~1 octave");
+        // A very different kind is far in every compute dimension.
+        let e = SubgraphKind::Elementwise { len: 1024, ops: 1 }.descriptor();
+        assert!((e[2] - a[2]).abs() > 2.0, "reduction extents should differ");
     }
 
     #[test]

@@ -52,7 +52,9 @@ impl EvolutionarySearch {
         }
     }
 
-    /// Score a set of schedules with the cost model.
+    /// Score a set of schedules with the cost model.  Non-finite
+    /// predictions (a diverging model can emit NaN/inf) are mapped to a
+    /// sentinel-worst score so ranking stays total and panic-free.
     fn score(
         &mut self,
         pop: &[Schedule],
@@ -65,7 +67,14 @@ impl EvolutionarySearch {
             self.feat_buf.extend_from_slice(&featurize(&self.subgraph, s));
         }
         charge_query();
-        model.predict(&self.feat_buf, pop.len()).unwrap_or_else(|_| vec![0.0; pop.len()])
+        let mut scores =
+            model.predict(&self.feat_buf, pop.len()).unwrap_or_else(|_| vec![0.0; pop.len()]);
+        for v in &mut scores {
+            if !v.is_finite() {
+                *v = f32::NEG_INFINITY;
+            }
+        }
+        scores
     }
 
     /// Tournament pick: the better of two random members.
@@ -106,11 +115,18 @@ impl SearchPolicy for EvolutionarySearch {
                 pop.push(m);
             }
         }
+        // Random fill, attempt-bounded: a tiny geometry's distinct
+        // schedule space can be smaller than the population, in which
+        // case duplicates are accepted past the bound rather than
+        // spinning forever.
+        let mut attempts = 0usize;
+        let max_attempts = 32 * self.population.max(4);
         while pop.len() < self.population {
             let s = self.generator.sample(rng);
-            if !pop.contains(&s) {
+            if attempts >= max_attempts || !pop.contains(&s) {
                 pop.push(s);
             }
+            attempts += 1;
         }
 
         let mut scores = self.score(&pop, model, charge_query);
@@ -118,11 +134,12 @@ impl SearchPolicy for EvolutionarySearch {
         for _gen in 0..self.generations {
             // Elite carry-over.
             let mut order: Vec<usize> = (0..pop.len()).collect();
-            order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
             let n_elite = ((self.population as f64 * self.elite_frac) as usize).max(1);
             let mut next: Vec<Schedule> =
                 order[..n_elite].iter().map(|&i| pop[i]).collect();
-            // Offspring.
+            // Offspring, attempt-bounded like the random fill above.
+            let mut attempts = 0usize;
             while next.len() < self.population {
                 let pa = *Self::tournament(&pop, &scores, rng);
                 let pb = *Self::tournament(&pop, &scores, rng);
@@ -130,9 +147,10 @@ impl SearchPolicy for EvolutionarySearch {
                 if rng.chance(self.mutation_prob) {
                     child = self.generator.mutate(&child, rng);
                 }
-                if !next.contains(&child) {
+                if attempts >= max_attempts || !next.contains(&child) {
                     next.push(child);
                 }
+                attempts += 1;
             }
             pop = next;
             scores = self.score(&pop, model, charge_query);
@@ -140,7 +158,7 @@ impl SearchPolicy for EvolutionarySearch {
 
         // Final: predicted top-k, unseen only.
         let mut order: Vec<usize> = (0..pop.len()).collect();
-        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
         let mut out = Vec::with_capacity(k);
         for &i in &order {
             if out.len() >= k {
@@ -235,6 +253,43 @@ mod tests {
             mean_prop > mean_rand,
             "evolution {mean_prop} should beat random {mean_rand}"
         );
+    }
+
+    #[test]
+    fn nan_predictions_do_not_panic_or_win() {
+        // A diverged model (all-NaN params) emits NaN for every
+        // schedule; propose must neither panic in the ranking sorts nor
+        // hang, and still returns k candidates.
+        let mut es = EvolutionarySearch::new(task());
+        es.population = 16;
+        es.generations = 2;
+        let nan_model = CostModel::with_params(
+            Arc::new(RustBackend { pred_batch: 64, train_batch: 64 }),
+            vec![f32::NAN; layout::N_PARAMS],
+        );
+        let mut rng = Rng::new(6);
+        let out = es.propose(4, &nan_model, &|_| false, &mut rng, &mut || {});
+        assert_eq!(out.len(), 4);
+        let g = es.subgraph.geometry();
+        assert!(out.iter().all(|s| s.is_valid(&g)));
+    }
+
+    #[test]
+    fn tiny_schedule_space_terminates_with_duplicates() {
+        // A 1x1x1 elementwise geometry has only a handful of distinct
+        // valid schedules — far fewer than this population.  The fill
+        // loops must accept duplicates past the attempt bound instead
+        // of spinning forever.
+        let tiny = Subgraph::new("tiny.elt", SubgraphKind::Elementwise { len: 1, ops: 1 });
+        let mut es = EvolutionarySearch::new(tiny);
+        es.population = 512;
+        es.generations = 1;
+        let m = model(7);
+        let mut rng = Rng::new(8);
+        let out = es.propose(4, &m, &|_| false, &mut rng, &mut || {});
+        assert!(!out.is_empty());
+        let g = es.subgraph.geometry();
+        assert!(out.iter().all(|s| s.is_valid(&g)));
     }
 
     #[test]

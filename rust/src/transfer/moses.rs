@@ -54,7 +54,10 @@ impl MosesAdapter {
         y: &[f32],
     ) -> Result<bool> {
         self.rounds_since_refresh += 1;
-        if self.rounds_since_refresh <= self.config.mask_refresh_every {
+        // `<` not `<=`: with `mask_refresh_every = N` the boundary is
+        // recomputed on every Nth round after a refresh, as the config
+        // documents (the old `<=` stretched the cadence to N+1).
+        if self.rounds_since_refresh < self.config.mask_refresh_every {
             return Ok(false);
         }
         let xi = model.xi(x, y)?;
@@ -119,9 +122,11 @@ mod tests {
         assert!(ad.maybe_refresh(&m, &x, &y).unwrap()); // initial
         assert!(!ad.maybe_refresh(&m, &x, &y).unwrap());
         assert!(!ad.maybe_refresh(&m, &x, &y).unwrap());
+        assert!(ad.maybe_refresh(&m, &x, &y).unwrap()); // every 3rd round
         assert!(!ad.maybe_refresh(&m, &x, &y).unwrap());
-        assert!(ad.maybe_refresh(&m, &x, &y).unwrap()); // 4th after initial
-        assert_eq!(ad.refreshes(), 2);
+        assert!(!ad.maybe_refresh(&m, &x, &y).unwrap());
+        assert!(ad.maybe_refresh(&m, &x, &y).unwrap());
+        assert_eq!(ad.refreshes(), 3);
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Feature-space workload index: nearest-neighbor retrieval over
+//! cached workload descriptors.
+//!
+//! The exact-hash cache ([`super::store`]) only helps when a workload
+//! has been seen *identically* before; this index turns the cache into
+//! a retrieval system.  Every admitted record carries its workload's
+//! compact descriptor ([`crate::program::Subgraph::descriptor`]):
+//! log2-scaled geometry extents (spatial × spatial × reduction), a MAC
+//! flag, log2 flops, log2 bytes per logical buffer, and log2 arithmetic
+//! intensity.  Because every continuous dimension is log-scaled, the
+//! **normalized L2 distance** used here —
+//! `sqrt(Σ_i (a_i − b_i)² / DESC_DIM)` — measures average per-dimension
+//! *shape ratio* in octaves: distance 1.0 means the two workloads
+//! differ by about a factor of two per dimension.  Workloads within a
+//! configurable radius are close enough that their tuned schedules
+//! (tiling structure, vectorization, staging) transfer as search seeds,
+//! which is exactly the feature-space-similarity transfer TLP/TCL
+//! demonstrate for tensor programs.
+//!
+//! Entries are version-stamped: a descriptor computed by an older
+//! featurizer/simulator ([`super::RECORD_VERSION`]) is refused at
+//! insert, so a latency-model change can never leak stale neighbors
+//! into a fresh session.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::program::DESC_DIM;
+
+use super::RECORD_VERSION;
+
+/// Default retrieval radius in normalized-L2 descriptor space
+/// (~one octave of average per-dimension shape difference).
+pub const DEFAULT_NN_RADIUS: f64 = 1.0;
+
+/// Default number of neighbor workloads consulted per query.
+pub const DEFAULT_NN_K: usize = 4;
+
+/// Normalized L2 distance between two workload descriptors.
+pub fn distance(a: &[f64; DESC_DIM], b: &[f64; DESC_DIM]) -> f64 {
+    let sum: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (sum / DESC_DIM as f64).sqrt()
+}
+
+/// Concurrent map from workload fingerprint to descriptor, queried by
+/// k-nearest-neighbor under a radius.  Sized for thousands of distinct
+/// workloads, where a linear scan (a few µs) is far below the cost of
+/// even one schedule featurization — no spatial structure needed yet.
+#[derive(Debug, Default)]
+pub struct WorkloadIndex {
+    entries: RwLock<HashMap<u64, [f64; DESC_DIM]>>,
+}
+
+impl WorkloadIndex {
+    pub fn new() -> WorkloadIndex {
+        WorkloadIndex::default()
+    }
+
+    /// Register a workload's descriptor.  Returns whether the entry was
+    /// accepted: descriptors stamped by a different featurizer/simulator
+    /// version are refused (their distances are not comparable), as are
+    /// non-finite descriptors (corrupt log lines).
+    pub fn insert(&self, workload: u64, desc: [f64; DESC_DIM], version: u32) -> bool {
+        if version != RECORD_VERSION || desc.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        self.entries.write().expect("workload index poisoned").insert(workload, desc);
+        true
+    }
+
+    /// The `k` nearest indexed workloads within `radius` of `query`,
+    /// closest first, excluding `exclude` (the querying workload
+    /// itself).  Ties break on the workload fingerprint so retrieval is
+    /// deterministic across runs.
+    pub fn nearest(
+        &self,
+        query: &[f64; DESC_DIM],
+        k: usize,
+        radius: f64,
+        exclude: u64,
+    ) -> Vec<(u64, f64)> {
+        let entries = self.entries.read().expect("workload index poisoned");
+        let mut hits: Vec<(u64, f64)> = entries
+            .iter()
+            .filter(|(w, _)| **w != exclude)
+            .map(|(w, d)| (*w, distance(query, d)))
+            .filter(|(_, dist)| *dist <= radius)
+            .collect();
+        hits.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        hits.truncate(k);
+        hits
+    }
+
+    /// Number of indexed workloads.
+    pub fn len(&self) -> usize {
+        self.entries.read().expect("workload index poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::program::{Subgraph, SubgraphKind};
+
+    fn conv(cout: usize) -> [f64; DESC_DIM] {
+        Subgraph::new(
+            "t",
+            SubgraphKind::Conv2d {
+                n: 1, h: 28, w: 28, cin: 64, cout, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+        )
+        .descriptor()
+    }
+
+    #[test]
+    fn self_distance_is_zero_and_symmetric() {
+        let a = conv(64);
+        let b = conv(128);
+        assert_eq!(distance(&a, &a), 0.0);
+        assert!(distance(&a, &b) > 0.0);
+        assert!((distance(&a, &b) - distance(&b, &a)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nearest_orders_by_distance_and_respects_radius() {
+        let idx = WorkloadIndex::new();
+        assert!(idx.insert(1, conv(48), RECORD_VERSION));
+        assert!(idx.insert(2, conv(96), RECORD_VERSION));
+        let dense = Subgraph::new("d", SubgraphKind::Dense { m: 64, n: 4096, k: 4096 })
+            .descriptor();
+        assert!(idx.insert(3, dense, RECORD_VERSION));
+        assert_eq!(idx.len(), 3);
+
+        let q = conv(64);
+        let near = idx.nearest(&q, 8, DEFAULT_NN_RADIUS, 0);
+        // Both convs are within an octave; the big dense matmul is not.
+        assert_eq!(near.len(), 2, "got {near:?}");
+        assert_eq!(near[0].0, 1, "48-channel conv is closest to 64");
+        assert!(near[0].1 <= near[1].1);
+        // k truncates.
+        assert_eq!(idx.nearest(&q, 1, DEFAULT_NN_RADIUS, 0).len(), 1);
+        // The querying workload itself is excluded.
+        assert!(idx.nearest(&conv(48), 8, 10.0, 1).iter().all(|(w, _)| *w != 1));
+        // A zero radius returns nothing for a novel query.
+        assert!(idx.nearest(&q, 8, 0.0, 0).is_empty());
+    }
+
+    #[test]
+    fn stale_version_stamps_are_rejected() {
+        let idx = WorkloadIndex::new();
+        assert!(!idx.insert(7, conv(64), RECORD_VERSION + 1));
+        assert!(!idx.insert(8, conv(64), 0));
+        assert!(idx.is_empty());
+        // Non-finite descriptors (corrupt lines) are refused too.
+        let mut bad = conv(64);
+        bad[0] = f64::NAN;
+        assert!(!idx.insert(9, bad, RECORD_VERSION));
+        assert!(idx.is_empty());
+    }
+}

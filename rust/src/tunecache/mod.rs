@@ -13,22 +13,36 @@
 //!   (workload, device) with eviction;
 //! * [`persist`] — JSONL load-on-open / append-on-commit / compaction,
 //!   so tuning logs survive across sessions and hosts;
+//! * [`index`] — [`WorkloadIndex`], a feature-space map from workload
+//!   descriptors to cached workloads, queried by nearest-neighbor
+//!   distance so genuinely new shapes can borrow similar shapes' seeds;
 //! * [`warmstart`] — on a miss for the target device, records for the
 //!   *same workload on other devices* become seeds for the evolutionary
-//!   search's initial population: schedule-level transfer complementing
-//!   the paper's parameter-level transfer.
+//!   search's initial population, and the nearest-neighbor tier fills
+//!   the rest: schedule-level transfer complementing the paper's
+//!   parameter-level transfer.
 //!
-//! [`TuneCache`] ties the three together and feeds the hit/miss/seed
-//! counters in [`crate::metrics::cache`].
+//! [`TuneCache`] ties the pieces together and feeds the
+//! hit/miss/seed/stale counters in [`crate::metrics::cache`].
 
+pub mod index;
 pub mod key;
 pub mod persist;
 pub mod store;
 pub mod warmstart;
 
+pub use index::{WorkloadIndex, DEFAULT_NN_K, DEFAULT_NN_RADIUS};
 pub use key::WorkloadKey;
 pub use store::{TuneRecord, TuneStore};
-pub use warmstart::{SeedRecord, WarmStartPlan};
+pub use warmstart::{SeedRecord, WarmStartOptions, WarmStartPlan};
+
+/// Version stamp of the featurizer/simulator semantics records are
+/// measured under.  Bump whenever [`crate::program::features`], the
+/// descriptor layout ([`crate::program::Subgraph::descriptor`]), or the
+/// latency model ([`crate::device::sim`]) changes meaning: stamped
+/// records from older versions are dropped on load and refused by the
+/// neighbor index, so a model change can never serve stale results.
+pub const RECORD_VERSION: u32 = 1;
 
 use std::fs::{File, OpenOptions};
 use std::io::Write;
@@ -47,6 +61,9 @@ pub const DEFAULT_TOPK: usize = 8;
 /// hit/miss/seed counters.  Share one instance per host via `Arc`.
 pub struct TuneCache {
     store: TuneStore,
+    /// Workload-descriptor index over everything in `store` — the
+    /// retrieval side of the cache (nearest-neighbor warm start).
+    index: WorkloadIndex,
     path: Option<PathBuf>,
     file: Mutex<Option<File>>,
     counters: CacheCounters,
@@ -57,17 +74,37 @@ pub struct TuneCache {
 impl TuneCache {
     /// Open (or create) a cache backed by a JSONL file.  Existing
     /// records are loaded through top-k admission; malformed lines are
-    /// skipped with a warning.
+    /// skipped with a warning, and records stamped by a different
+    /// featurizer/simulator version ([`RECORD_VERSION`]) are dropped —
+    /// their latencies and descriptors are no longer comparable.
     pub fn open(path: &Path, topk: usize) -> Result<TuneCache> {
         let store = TuneStore::new(topk);
+        let index = WorkloadIndex::new();
+        let counters = CacheCounters::default();
+        let mut dropped = 0usize;
         if path.exists() {
             let (records, skipped) = persist::load_records(path)?;
             if skipped > 0 {
                 eprintln!("tunecache: skipped {skipped} malformed line(s) in {path:?}");
             }
+            let mut stale = 0usize;
             for r in &records {
-                store.commit(r);
+                if r.version != RECORD_VERSION {
+                    stale += 1;
+                    continue;
+                }
+                if store.commit(r) {
+                    index.insert(r.workload, r.desc, r.version);
+                }
             }
+            if stale > 0 {
+                counters.record_stale(stale);
+                eprintln!(
+                    "tunecache: dropped {stale} stale record(s) in {path:?} \
+                     (featurizer/simulator version != {RECORD_VERSION})"
+                );
+            }
+            dropped = stale + skipped;
         } else if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
@@ -79,19 +116,31 @@ impl TuneCache {
             .append(true)
             .open(path)
             .with_context(|| format!("opening {path:?} for append"))?;
-        Ok(TuneCache {
+        let cache = TuneCache {
             store,
+            index,
             path: Some(path.to_path_buf()),
             file: Mutex::new(Some(file)),
-            counters: CacheCounters::default(),
+            counters,
             appended: AtomicUsize::new(0),
-        })
+        };
+        // Purge dropped (stale/malformed) lines from disk once, here:
+        // the debt-triggered compaction in commit() never fires for
+        // them, so without this every future open would re-parse and
+        // re-warn about the same dead lines forever.
+        if dropped > 0 {
+            if let Err(e) = cache.compact() {
+                eprintln!("tunecache: open-time compaction failed: {e:#}");
+            }
+        }
+        Ok(cache)
     }
 
     /// Purely in-memory cache (tests, benches, ephemeral sessions).
     pub fn in_memory(topk: usize) -> TuneCache {
         TuneCache {
             store: TuneStore::new(topk),
+            index: WorkloadIndex::new(),
             path: None,
             file: Mutex::new(None),
             counters: CacheCounters::default(),
@@ -122,6 +171,7 @@ impl TuneCache {
             return false;
         }
         self.counters.record_commit();
+        self.index.insert(rec.workload, rec.desc, rec.version);
         if self.path.is_some() {
             {
                 let mut guard = self.file.lock().expect("tunecache file poisoned");
@@ -173,6 +223,24 @@ impl TuneCache {
 
     pub fn cross_device(&self, workload: u64, exclude_device: u64) -> Vec<TuneRecord> {
         self.store.cross_device(workload, exclude_device)
+    }
+
+    /// All records for one workload across every device (neighbor-seed
+    /// retrieval).
+    pub fn workload_records(&self, workload: u64) -> Vec<TuneRecord> {
+        self.store.workload_records(workload)
+    }
+
+    /// The `k` nearest *cached* workloads within `radius` of a
+    /// descriptor, closest first, excluding the querying workload.
+    pub fn neighbors(
+        &self,
+        desc: &[f64; crate::program::DESC_DIM],
+        k: usize,
+        radius: f64,
+        exclude_workload: u64,
+    ) -> Vec<(u64, f64)> {
+        self.index.nearest(desc, k, radius, exclude_workload)
     }
 
     pub fn total_records(&self) -> usize {

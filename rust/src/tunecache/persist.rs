@@ -12,12 +12,13 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::program::DESC_DIM;
 use crate::util::json::Json;
 
 use super::store::TuneRecord;
 
-/// Schema version stamped on every line.
-const VERSION: f64 = 1.0;
+/// Schema version stamped on every line (v2 added `desc`/`version`).
+const VERSION: f64 = 2.0;
 
 /// Encode one record as a single JSONL line (no trailing newline).
 pub fn encode_line(r: &TuneRecord) -> String {
@@ -30,6 +31,8 @@ pub fn encode_line(r: &TuneRecord) -> String {
         ("latency_s", Json::Num(r.latency_s)),
         ("gflops", Json::Num(r.gflops)),
         ("trials", Json::Num(r.trials as f64)),
+        ("desc", Json::Arr(r.desc.iter().map(|&d| Json::Num(d)).collect())),
+        ("version", Json::Num(r.version as f64)),
     ])
     .to_string()
 }
@@ -66,6 +69,26 @@ pub fn decode_line(line: &str) -> Result<TuneRecord> {
     );
     let trials = v.get("trials").and_then(Json::as_usize).unwrap_or(0);
     anyhow::ensure!(trials <= 1_000_000, "implausible trials {trials}");
+    // `desc`/`version` are absent in pre-v2 lines: version 0 means
+    // "unknown featurizer", which the load path drops as stale.  The
+    // two travel together — a line with a version but no descriptor
+    // (truncated/hand-edited) is downgraded to 0 too, so an all-zero
+    // descriptor can never enter the nearest-neighbor index.
+    let mut desc = [0.0f64; DESC_DIM];
+    let mut has_desc = false;
+    if let Some(arr) = v.get("desc").and_then(Json::as_arr) {
+        anyhow::ensure!(arr.len() == DESC_DIM, "expected {DESC_DIM}-d desc, got {}", arr.len());
+        for (slot, j) in desc.iter_mut().zip(arr) {
+            *slot = j.as_f64().context("desc entry is not a number")?;
+            anyhow::ensure!(slot.is_finite(), "non-finite desc entry");
+        }
+        has_desc = true;
+    }
+    let version = if has_desc {
+        v.get("version").and_then(Json::as_usize).unwrap_or(0) as u32
+    } else {
+        0
+    };
     Ok(TuneRecord {
         workload: hex("workload")?,
         device: hex("device")?,
@@ -80,6 +103,8 @@ pub fn decode_line(line: &str) -> Result<TuneRecord> {
         // `trials` is absent in pre-trials log lines: 0 means "budget
         // unknown", which never satisfies a hit test.
         trials,
+        desc,
+        version,
     })
 }
 
@@ -125,6 +150,9 @@ pub fn rewrite(path: &Path, records: &[TuneRecord]) -> Result<()> {
 mod tests {
     use super::*;
 
+    use crate::program::{Subgraph, SubgraphKind};
+    use crate::tunecache::RECORD_VERSION;
+
     fn sample() -> TuneRecord {
         TuneRecord {
             // Deliberately above 2^53: must survive the f64 number model.
@@ -135,6 +163,16 @@ mod tests {
             latency_s: 1.25e-3,
             gflops: 812.5,
             trials: 200,
+            // A real descriptor, so the roundtrip exercises non-trivial
+            // f64 shortest-representation printing.
+            desc: Subgraph::new(
+                "s",
+                SubgraphKind::Conv2d {
+                    n: 1, h: 28, w: 28, cin: 64, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+                },
+            )
+            .descriptor(),
+            version: RECORD_VERSION,
         }
     }
 
@@ -172,6 +210,37 @@ mod tests {
         let r = decode_line(&old).unwrap();
         assert_eq!(r.trials, 0);
         assert_eq!(r.knobs, sample().knobs);
+    }
+
+    #[test]
+    fn decode_tolerates_pre_descriptor_lines() {
+        // A pre-v2 line (no desc, no version) still decodes — version 0
+        // marks it stale so the load path can drop it, rather than the
+        // whole log being refused.
+        // "desc" sorts first in the object, so strip `"desc":[...],`.
+        let mut line = encode_line(&sample());
+        let start = line.find("\"desc\":[").unwrap();
+        let end = line[start..].find("],").unwrap() + start + 2;
+        line.replace_range(start..end, "");
+        let line = line.replace(&format!(",\"version\":{RECORD_VERSION}"), "");
+        let r = decode_line(&line).unwrap();
+        assert_eq!(r.version, 0);
+        assert_eq!(r.desc, [0.0; DESC_DIM]);
+        assert_eq!(r.knobs, sample().knobs);
+        // A line that kept its version but LOST the descriptor must be
+        // downgraded to stale too, never indexed at the origin.
+        let mut no_desc = encode_line(&sample());
+        let ds = no_desc.find("\"desc\":[").unwrap();
+        let de = no_desc[ds..].find("],").unwrap() + ds + 2;
+        no_desc.replace_range(ds..de, "");
+        let r = decode_line(&no_desc).unwrap();
+        assert_eq!(r.version, 0, "version without desc must read as stale");
+        // A mutilated desc (wrong arity) is corrupt, not tolerable.
+        let mut short = encode_line(&sample());
+        let s = short.find("\"desc\":[").unwrap() + "\"desc\":[".len();
+        let e = short[s..].find(']').unwrap() + s;
+        short.replace_range(s..e, "1,2");
+        assert!(decode_line(&short).is_err());
     }
 
     #[test]

@@ -15,9 +15,10 @@
 use std::collections::HashMap;
 use std::sync::RwLock;
 
-use crate::program::Schedule;
+use crate::program::{Schedule, DESC_DIM};
 
 use super::key::WorkloadKey;
+use super::RECORD_VERSION;
 
 /// Number of lock stripes (power of two).
 const N_SHARDS: usize = 16;
@@ -42,11 +43,19 @@ pub struct TuneRecord {
     /// budget; a bigger one re-searches (seeded) instead of being
     /// short-circuited by a cheap earlier run.
     pub trials: usize,
+    /// Feature-space descriptor of the workload
+    /// ([`crate::program::Subgraph::descriptor`]) — what the
+    /// nearest-neighbor index retrieves along.
+    pub desc: [f64; DESC_DIM],
+    /// Featurizer/simulator version that produced this record
+    /// ([`super::RECORD_VERSION`]); stale records are dropped on load.
+    pub version: u32,
 }
 
 impl TuneRecord {
     pub fn new(
         key: WorkloadKey,
+        desc: [f64; DESC_DIM],
         device_name: &str,
         schedule: &Schedule,
         latency_s: f64,
@@ -61,6 +70,8 @@ impl TuneRecord {
             latency_s,
             gflops,
             trials,
+            desc,
+            version: RECORD_VERSION,
         }
     }
 
@@ -150,17 +161,19 @@ impl TuneStore {
         shard.get(&key.workload)?.get(&key.device)?.first().cloned()
     }
 
-    /// Records for the same workload on *other* devices, round-robin by
-    /// per-device rank (each device's best first) so no single source
-    /// device monopolizes a seed list.  Device order is fixed by
-    /// fingerprint for determinism.
-    pub fn cross_device(&self, workload: u64, exclude_device: u64) -> Vec<TuneRecord> {
+    /// Records for one workload, round-robin by per-device rank (each
+    /// device's best first) so no single source device monopolizes a
+    /// seed list.  Device order is fixed by fingerprint for determinism;
+    /// `Some(fingerprint)` filters out that device, `None` includes all.
+    fn round_robin(&self, workload: u64, exclude_device: Option<u64>) -> Vec<TuneRecord> {
         let shard = self.shard(workload).read().expect("tunecache shard poisoned");
         let Some(devices) = shard.get(&workload) else {
             return Vec::new();
         };
-        let mut groups: Vec<(&u64, &Vec<TuneRecord>)> =
-            devices.iter().filter(|(d, _)| **d != exclude_device).collect();
+        let mut groups: Vec<(&u64, &Vec<TuneRecord>)> = devices
+            .iter()
+            .filter(|(d, _)| Some(**d) != exclude_device)
+            .collect();
         groups.sort_by_key(|(d, _)| **d);
         let max_rank = groups.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
         let mut out = Vec::new();
@@ -172,6 +185,19 @@ impl TuneStore {
             }
         }
         out
+    }
+
+    /// Records for the same workload on *other* devices (cross-device
+    /// warm start).
+    pub fn cross_device(&self, workload: u64, exclude_device: u64) -> Vec<TuneRecord> {
+        self.round_robin(workload, Some(exclude_device))
+    }
+
+    /// All records for one workload across every device (neighbor-seed
+    /// retrieval: for a *similar* workload even the target device's own
+    /// records are foreign, so none are excluded).
+    pub fn workload_records(&self, workload: u64) -> Vec<TuneRecord> {
+        self.round_robin(workload, None)
     }
 
     /// Total live records across all shards.
@@ -238,6 +264,8 @@ mod tests {
             latency_s,
             gflops: 1.0,
             trials: 64,
+            desc: [0.0; DESC_DIM],
+            version: RECORD_VERSION,
         }
     }
 
@@ -307,6 +335,11 @@ mod tests {
         assert_eq!(seeds[2].knobs[0] % 10, 1);
         // Unknown workload: empty, not a panic.
         assert!(store.cross_device(0xDEAD, 300).is_empty());
+        // workload_records excludes nothing (neighbor-seed retrieval).
+        let all = store.workload_records(9);
+        assert_eq!(all.len(), 7);
+        assert!(all.iter().any(|r| r.device == 300));
+        assert!(store.workload_records(0xDEAD).is_empty());
     }
 
     #[test]

@@ -1,22 +1,28 @@
-//! Cross-device warm start: schedule-level transfer complementing the
-//! paper's parameter-level transfer.
+//! Cross-device and cross-workload warm start: schedule-level transfer
+//! complementing the paper's parameter-level transfer.
 //!
 //! On an exact (workload, device) hit the tuner can skip search
-//! entirely.  On a miss, records for the *same workload on other
-//! devices* become seeds for the evolutionary search's initial
-//! population — good-schedule structure (tiling shapes, vectorization,
-//! staging) transfers across GPUs even where absolute latencies do
-//! not, exactly the Eq. 3 decomposition the cost-model transfer relies
-//! on.
+//! entirely.  On a miss the plan falls back through two seed tiers:
+//!
+//! 1. records for the *same workload on other devices* — good-schedule
+//!    structure (tiling shapes, vectorization, staging) transfers
+//!    across GPUs even where absolute latencies do not, exactly the
+//!    Eq. 3 decomposition the cost-model transfer relies on;
+//! 2. records for *similar workloads* on any device, retrieved from the
+//!    feature-space index ([`super::index`]) within a configurable
+//!    radius, their schedules remapped onto the new geometry
+//!    ([`crate::program::Schedule::remap_for`]) — so a genuinely new
+//!    shape still starts from a neighbor's solution instead of random.
 
 use crate::device::DeviceArch;
 use crate::program::{Schedule, Subgraph};
 
+use super::index::{DEFAULT_NN_K, DEFAULT_NN_RADIUS};
 use super::key::WorkloadKey;
 use super::store::TuneRecord;
 use super::TuneCache;
 
-/// One cross-device seed candidate.
+/// One warm-start seed candidate.
 #[derive(Debug, Clone)]
 pub struct SeedRecord {
     pub schedule: Schedule,
@@ -25,6 +31,35 @@ pub struct SeedRecord {
     /// Latency on the *source* device — not comparable across devices,
     /// meaningful only for per-device ranking.
     pub source_latency_s: f64,
+    /// Descriptor-space distance of the source workload (0.0 for the
+    /// same workload; positive for nearest-neighbor seeds).
+    pub distance: f64,
+}
+
+/// How a warm-start query is scoped.
+#[derive(Debug, Clone, Copy)]
+pub struct WarmStartOptions {
+    /// Cap on seeds offered across both tiers.
+    pub max_seeds: usize,
+    /// Trial budget of the requesting session: a hit requires records
+    /// searched at this budget or more.
+    pub requested_trials: usize,
+    /// Neighbor workloads consulted per query (k in kNN).
+    pub nn_k: usize,
+    /// Normalized-L2 retrieval radius; `None` disables the
+    /// nearest-neighbor tier entirely.
+    pub nn_radius: Option<f64>,
+}
+
+impl WarmStartOptions {
+    pub fn new(max_seeds: usize, requested_trials: usize) -> WarmStartOptions {
+        WarmStartOptions {
+            max_seeds,
+            requested_trials,
+            nn_k: DEFAULT_NN_K,
+            nn_radius: Some(DEFAULT_NN_RADIUS),
+        }
+    }
 }
 
 /// What the cache knows about one (task, target device) pair.
@@ -41,24 +76,28 @@ pub struct WarmStartPlan {
     /// bigger-budget search (their true latencies are already known, so
     /// the tuner grounds on them without spending measurements).
     pub local_seeds: Vec<Schedule>,
-    /// Cross-device seeds: best-first round-robin across source devices,
-    /// deduplicated, validated against the task geometry, capped.
+    /// Same-workload cross-device seeds: best-first round-robin across
+    /// source devices, deduplicated, validated against the task
+    /// geometry, capped.
     pub seeds: Vec<SeedRecord>,
+    /// Similar-workload seeds (nearest-neighbor tier): closest workload
+    /// first, schedules remapped onto this task's geometry, filling
+    /// whatever seed budget the cross-device tier left.
+    pub neighbor_seeds: Vec<SeedRecord>,
 }
 
-/// Query the cache for a task on a target device at a given trial
-/// budget, recording hit/miss and seed-origin counters.
+/// Query the cache for a task on a target device, recording
+/// hit/miss/seed counters.
 ///
-/// A hit requires records searched at `requested_trials` or more: a
-/// cheap earlier run must not silently satisfy a bigger requested
+/// A hit requires records searched at `opts.requested_trials` or more:
+/// a cheap earlier run must not silently satisfy a bigger requested
 /// search (and a tiny-budget default-only result must not poison the
 /// workload forever).
 pub fn plan(
     cache: &TuneCache,
     task: &Subgraph,
     target: &DeviceArch,
-    max_seeds: usize,
-    requested_trials: usize,
+    opts: &WarmStartOptions,
 ) -> WarmStartPlan {
     let key = WorkloadKey::new(task, target);
     let geometry = task.geometry();
@@ -71,13 +110,12 @@ pub fn plan(
         .filter(|r| r.schedule().is_valid(&geometry))
         .collect();
     let searched_trials = local.iter().map(|r| r.trials).max().unwrap_or(0);
-    if !local.is_empty() && searched_trials >= requested_trials {
+    if !local.is_empty() && searched_trials >= opts.requested_trials {
         cache.counters().record_hit();
         return WarmStartPlan {
             exact: local.first().cloned(),
             searched_trials,
-            local_seeds: Vec::new(),
-            seeds: Vec::new(),
+            ..WarmStartPlan::default()
         };
     }
     cache.counters().record_miss();
@@ -87,7 +125,7 @@ pub fn plan(
     // Don't re-offer schedules this device already has records for.
     let mut seen: Vec<[u32; 9]> = local.iter().map(|r| r.knobs).collect();
     for rec in cache.cross_device(key.workload, key.device) {
-        if seeds.len() >= max_seeds {
+        if seeds.len() >= opts.max_seeds {
             break;
         }
         if seen.contains(&rec.knobs) {
@@ -102,10 +140,48 @@ pub fn plan(
             schedule,
             source_device: rec.device_name.clone(),
             source_latency_s: rec.latency_s,
+            distance: 0.0,
         });
     }
     cache.counters().record_seeds(seeds.len());
-    WarmStartPlan { exact: None, searched_trials, local_seeds, seeds }
+
+    // Nearest-neighbor tier: fill the remaining seed budget from
+    // similar workloads' records, closest workload first.  Schedules
+    // are remapped onto this task's geometry and re-validated; even the
+    // target device's own records count here (a similar workload tuned
+    // on this very device is the best neighbor there is).
+    let mut neighbor_seeds = Vec::new();
+    // Skip the index scan entirely when the cross-device tier already
+    // filled the budget — this runs on the check-before-search hot path.
+    if let Some(radius) = opts.nn_radius.filter(|_| seeds.len() < opts.max_seeds) {
+        let desc = task.descriptor();
+        'outer: for (workload, dist) in
+            cache.neighbors(&desc, opts.nn_k, radius, key.workload)
+        {
+            for rec in cache.workload_records(workload) {
+                if seeds.len() + neighbor_seeds.len() >= opts.max_seeds {
+                    break 'outer;
+                }
+                let schedule = rec.schedule().remap_for(&geometry);
+                if !schedule.is_valid(&geometry) {
+                    continue;
+                }
+                let knobs = schedule.encode();
+                if seen.contains(&knobs) {
+                    continue;
+                }
+                seen.push(knobs);
+                neighbor_seeds.push(SeedRecord {
+                    schedule,
+                    source_device: rec.device_name.clone(),
+                    source_latency_s: rec.latency_s,
+                    distance: dist,
+                });
+            }
+        }
+        cache.counters().record_neighbor_seeds(neighbor_seeds.len());
+    }
+    WarmStartPlan { exact: None, searched_trials, local_seeds, seeds, neighbor_seeds }
 }
 
 #[cfg(test)]
@@ -116,22 +192,33 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn task() -> Subgraph {
+        conv_task("ws.conv", 64)
+    }
+
+    fn conv_task(name: &str, cout: usize) -> Subgraph {
         Subgraph::new(
-            "ws.conv",
+            name,
             SubgraphKind::Conv2d {
-                n: 1, h: 28, w: 28, cin: 64, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+                n: 1, h: 28, w: 28, cin: 64, cout, kh: 3, kw: 3, stride: 1, pad: 1,
             },
         )
     }
 
-    fn populate(cache: &TuneCache, arch: &DeviceArch, n: usize, seed: u64, trials: usize) {
-        let t = task();
-        let key = WorkloadKey::new(&t, arch);
+    fn populate_task(
+        cache: &TuneCache,
+        t: &Subgraph,
+        arch: &DeviceArch,
+        n: usize,
+        seed: u64,
+        trials: usize,
+    ) {
+        let key = WorkloadKey::new(t, arch);
         let gen = SpaceGenerator::new(t.geometry());
         let mut rng = Rng::new(seed);
         for (i, s) in gen.sample_distinct(&mut rng, n).iter().enumerate() {
             cache.commit(TuneRecord::new(
                 key,
+                t.descriptor(),
                 &arch.name,
                 s,
                 (i + 1) as f64 * 1e-3,
@@ -141,19 +228,28 @@ mod tests {
         }
     }
 
+    fn populate(cache: &TuneCache, arch: &DeviceArch, n: usize, seed: u64, trials: usize) {
+        populate_task(cache, &task(), arch, n, seed, trials);
+    }
+
+    fn opts(max_seeds: usize, requested_trials: usize) -> WarmStartOptions {
+        WarmStartOptions::new(max_seeds, requested_trials)
+    }
+
     #[test]
     fn miss_yields_cross_device_seeds() {
         let cache = TuneCache::in_memory(8);
         populate(&cache, &presets::rtx_2060(), 5, 1, 64);
         populate(&cache, &presets::tesla_k80(), 5, 2, 64);
 
-        let p = plan(&cache, &task(), &presets::jetson_tx2(), 6, 64);
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), &opts(6, 64));
         assert!(p.exact.is_none());
         assert_eq!(p.searched_trials, 0);
         assert!(p.local_seeds.is_empty());
         // Up to 6 seeds; identical schedules sampled on both devices
         // dedup, so allow a small shortfall.
         assert!(p.seeds.len() >= 5, "expected >=5 seeds, got {}", p.seeds.len());
+        assert!(p.seeds.iter().all(|s| s.distance == 0.0));
         // Both source devices contribute (round-robin).
         assert!(p.seeds.iter().any(|s| s.source_device == "rtx2060"));
         assert!(p.seeds.iter().any(|s| s.source_device == "k80"));
@@ -168,11 +264,12 @@ mod tests {
         populate(&cache, &presets::jetson_tx2(), 3, 3, 64);
         populate(&cache, &presets::rtx_2060(), 3, 4, 64);
 
-        let p = plan(&cache, &task(), &presets::jetson_tx2(), 8, 64);
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), &opts(8, 64));
         let exact = p.exact.expect("expected an exact hit");
         assert!((exact.latency_s - 1e-3).abs() < 1e-15);
         assert_eq!(p.searched_trials, 64);
         assert!(p.seeds.is_empty() && p.local_seeds.is_empty());
+        assert!(p.neighbor_seeds.is_empty());
         assert_eq!(cache.stats().hits, 1);
     }
 
@@ -185,7 +282,7 @@ mod tests {
         // Requesting more trials than ever searched: no short-circuit,
         // but this device's own records come back as local seeds and the
         // other device's as cross-device seeds.
-        let p = plan(&cache, &task(), &presets::jetson_tx2(), 8, 200);
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), &opts(8, 200));
         assert!(p.exact.is_none());
         assert_eq!(p.searched_trials, 16);
         assert_eq!(p.local_seeds.len(), 3);
@@ -196,8 +293,62 @@ mod tests {
     #[test]
     fn empty_cache_plans_nothing() {
         let cache = TuneCache::in_memory(8);
-        let p = plan(&cache, &task(), &presets::rtx_2060(), 8, 64);
+        let p = plan(&cache, &task(), &presets::rtx_2060(), &opts(8, 64));
         assert!(p.exact.is_none() && p.seeds.is_empty() && p.local_seeds.is_empty());
+        assert!(p.neighbor_seeds.is_empty());
         assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn never_seen_workload_gets_neighbor_seeds() {
+        let cache = TuneCache::in_memory(8);
+        // Cache holds only a *similar* conv (48 output channels).
+        let similar = conv_task("ws.similar", 48);
+        populate_task(&cache, &similar, &presets::rtx_2060(), 4, 7, 64);
+
+        let novel = task(); // 64 channels — never cached
+        let p = plan(&cache, &novel, &presets::rtx_2060(), &opts(8, 64));
+        assert!(p.exact.is_none());
+        assert!(p.seeds.is_empty(), "no same-workload records exist");
+        assert!(!p.neighbor_seeds.is_empty(), "similar workload should seed");
+        let g = novel.geometry();
+        for s in &p.neighbor_seeds {
+            assert!(s.schedule.is_valid(&g));
+            assert!(s.distance > 0.0 && s.distance <= DEFAULT_NN_RADIUS);
+        }
+        assert_eq!(cache.stats().neighbor_seeds, p.neighbor_seeds.len());
+    }
+
+    #[test]
+    fn nn_tier_respects_disable_and_radius() {
+        let cache = TuneCache::in_memory(8);
+        populate_task(&cache, &conv_task("ws.similar", 48), &presets::rtx_2060(), 4, 8, 64);
+
+        // Disabled entirely.
+        let mut o = opts(8, 64);
+        o.nn_radius = None;
+        let p = plan(&cache, &task(), &presets::rtx_2060(), &o);
+        assert!(p.neighbor_seeds.is_empty());
+        // A radius too tight to reach the 48-channel conv.
+        let mut o = opts(8, 64);
+        o.nn_radius = Some(1e-6);
+        let p = plan(&cache, &task(), &presets::rtx_2060(), &o);
+        assert!(p.neighbor_seeds.is_empty());
+        // A dissimilar workload (dense) is outside the default radius.
+        let far = Subgraph::new("ws.far", SubgraphKind::Dense { m: 64, n: 4096, k: 4096 });
+        let p = plan(&cache, &far, &presets::rtx_2060(), &opts(8, 64));
+        assert!(p.neighbor_seeds.is_empty(), "dense must not borrow conv seeds");
+    }
+
+    #[test]
+    fn cross_device_tier_takes_priority_over_neighbors() {
+        let cache = TuneCache::in_memory(8);
+        // Same workload on another device AND a similar workload.
+        populate(&cache, &presets::rtx_2060(), 3, 9, 64);
+        populate_task(&cache, &conv_task("ws.similar", 48), &presets::rtx_2060(), 3, 10, 64);
+
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), &opts(4, 64));
+        assert_eq!(p.seeds.len(), 3, "same-workload seeds fill first");
+        assert!(p.seeds.len() + p.neighbor_seeds.len() <= 4, "budget shared");
     }
 }

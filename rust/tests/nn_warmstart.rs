@@ -1,0 +1,173 @@
+//! Nearest-neighbor warm start, end to end: a never-cached conv shape
+//! starts its search from a *similar* cached workload's schedules
+//! (remapped and validated against the new geometry), the seed probe
+//! grounds round 0 on the best neighbor, and the fallback degrades to
+//! zero seeds when the index is empty, disabled, or every record
+//! carries a stale featurizer/simulator version stamp.
+
+use std::sync::Arc;
+
+use moses::coordinator::{AutoTuner, BackendKind, TuneConfig};
+use moses::device::{presets, DeviceSim};
+use moses::program::{Subgraph, SubgraphKind, TensorProgram};
+use moses::transfer::Strategy;
+use moses::tunecache::{persist, warmstart, TuneCache, WarmStartOptions, RECORD_VERSION};
+
+fn conv(name: &str, cout: usize) -> Subgraph {
+    Subgraph::new(
+        name,
+        SubgraphKind::Conv2d {
+            n: 1, h: 28, w: 28, cin: 64, cout, kh: 3, kw: 3, stride: 1, pad: 1,
+        },
+    )
+}
+
+fn cfg(seed: u64) -> TuneConfig {
+    TuneConfig {
+        trials_per_task: 16,
+        measure_batch: 4,
+        strategy: Strategy::AnsorRandom,
+        population: 24,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed,
+        ..TuneConfig::default()
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("moses_nn_warmstart_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn never_cached_shape_starts_from_neighbor_schedules() {
+    let cache = Arc::new(TuneCache::in_memory(8));
+
+    // Tune a 48-channel conv: its records populate store AND index.
+    let similar = conv("nn.similar", 48);
+    let mut src = AutoTuner::from_config(&cfg(1), presets::rtx_2060()).unwrap();
+    src.attach_cache(cache.clone());
+    src.tune(std::slice::from_ref(&similar)).unwrap();
+    assert!(cache.total_records() > 0);
+
+    // A 64-channel conv was never cached: no exact hit, no same-workload
+    // cross-device records — but the neighbor tier finds the 48-channel
+    // records and remaps their schedules onto the new geometry.
+    let novel = conv("nn.novel", 64);
+    let plan = warmstart::plan(
+        &cache,
+        &novel,
+        &presets::rtx_2060(),
+        &WarmStartOptions::new(8, 16),
+    );
+    assert!(plan.exact.is_none());
+    assert!(plan.seeds.is_empty(), "no same-workload records can exist");
+    assert!(!plan.neighbor_seeds.is_empty(), "similar conv should seed the novel one");
+    let g = novel.geometry();
+    for s in &plan.neighbor_seeds {
+        assert!(s.schedule.is_valid(&g), "neighbor seed invalid for new geometry");
+        assert!(s.distance > 0.0, "a different workload cannot be at distance 0");
+    }
+    assert!(cache.stats().neighbor_seeds >= plan.neighbor_seeds.len());
+
+    // End to end: the tuner reports the neighbor seeding, and the seed
+    // probe grounds round 0 at (or below) the best probed neighbor.
+    let mut warm = AutoTuner::from_config(&cfg(2), presets::rtx_2060()).unwrap();
+    warm.attach_cache(cache.clone());
+    let sw = warm.tune(std::slice::from_ref(&novel)).unwrap();
+    assert!(!sw.tasks[0].cache_hit);
+    assert_eq!(sw.tasks[0].warm_seeds, 0);
+    assert!(sw.tasks[0].neighbor_seeds >= 1, "session must report neighbor seeds");
+    assert_eq!(sw.neighbor_seeded_tasks(), 1);
+
+    let sim = DeviceSim::new(presets::rtx_2060());
+    let probe_best = plan
+        .neighbor_seeds
+        .iter()
+        .take(cfg(2).seed_probe)
+        .map(|s| sim.true_latency(&TensorProgram::new(novel.clone(), s.schedule)))
+        .fold(f64::INFINITY, f64::min);
+    if probe_best.is_finite() {
+        assert!(
+            sw.tasks[0].history[0] <= probe_best * (1.0 + 1e-9),
+            "round-0 best {} should already match the probed neighbor {}",
+            sw.tasks[0].history[0],
+            probe_best
+        );
+    }
+}
+
+#[test]
+fn empty_index_and_disabled_nn_yield_zero_neighbor_seeds() {
+    // Empty cache: nothing to retrieve.
+    let cache = Arc::new(TuneCache::in_memory(8));
+    let novel = conv("nn.empty", 64);
+    let plan = warmstart::plan(
+        &cache,
+        &novel,
+        &presets::rtx_2060(),
+        &WarmStartOptions::new(8, 16),
+    );
+    assert!(plan.neighbor_seeds.is_empty());
+    assert_eq!(cache.stats().neighbor_seeds, 0);
+
+    // Populated cache but NN disabled (the --no-nn path).
+    let similar = conv("nn.similar", 48);
+    let mut src = AutoTuner::from_config(&cfg(3), presets::rtx_2060()).unwrap();
+    src.attach_cache(cache.clone());
+    src.tune(std::slice::from_ref(&similar)).unwrap();
+
+    let mut off = cfg(4);
+    off.nn_radius = None;
+    let mut tuner = AutoTuner::from_config(&off, presets::rtx_2060()).unwrap();
+    tuner.attach_cache(cache.clone());
+    let s = tuner.tune(std::slice::from_ref(&novel)).unwrap();
+    assert_eq!(s.tasks[0].neighbor_seeds, 0);
+    assert_eq!(s.neighbor_seeded_tasks(), 0);
+    assert_eq!(cache.stats().neighbor_seeds, 0);
+}
+
+#[test]
+fn stale_version_stamps_are_dropped_on_load_and_never_seed() {
+    let path = tmp("stale.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    // Write a log of records produced under a *different*
+    // featurizer/simulator version.
+    let similar = conv("nn.similar", 48);
+    {
+        let cache = TuneCache::open(&path, 8).unwrap();
+        let mut src = AutoTuner::from_config(&cfg(5), presets::rtx_2060()).unwrap();
+        src.attach_cache(Arc::new(cache));
+        src.tune(std::slice::from_ref(&similar)).unwrap();
+    }
+    let (mut records, _) = persist::load_records(&path).unwrap();
+    assert!(!records.is_empty());
+    for r in &mut records {
+        r.version = RECORD_VERSION + 1;
+    }
+    persist::rewrite(&path, &records).unwrap();
+
+    // Reopen: every record is stale — dropped from store and index.
+    let cache = Arc::new(TuneCache::open(&path, 8).unwrap());
+    assert_eq!(cache.total_records(), 0);
+    assert_eq!(cache.stats().stale_dropped, records.len());
+
+    // Neither the exact tier nor the neighbor tier may serve them: even
+    // the *same* workload is a cold start now, and the similar novel
+    // shape gets zero neighbor seeds.
+    for task in [similar, conv("nn.novel", 64)] {
+        let plan = warmstart::plan(
+            &cache,
+            &task,
+            &presets::rtx_2060(),
+            &WarmStartOptions::new(8, 16),
+        );
+        assert!(plan.exact.is_none());
+        assert!(plan.seeds.is_empty());
+        assert!(plan.neighbor_seeds.is_empty(), "stale records must not seed");
+    }
+    assert_eq!(cache.stats().neighbor_seeds, 0);
+}

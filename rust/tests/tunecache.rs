@@ -76,6 +76,7 @@ fn persist_roundtrip_tolerance_and_compaction() {
                 let key = WorkloadKey::new(&task, &arch);
                 cache.commit(TuneRecord::new(
                     key,
+                    task.descriptor(),
                     &arch.name,
                     s,
                     (i + 1) as f64 * 1e-3,
@@ -110,7 +111,15 @@ fn persist_roundtrip_tolerance_and_compaction() {
     assert_eq!(skipped, 0);
     // And the cache still appends fine after compaction.
     let extra = gen.sample_distinct(&mut rng, 7)[6];
-    assert!(tolerant.commit(TuneRecord::new(key, "rtx2060", &extra, 0.1e-3, 3.0, 64)));
+    assert!(tolerant.commit(TuneRecord::new(
+        key,
+        task.descriptor(),
+        "rtx2060",
+        &extra,
+        0.1e-3,
+        3.0,
+        64
+    )));
     let (records2, _) = persist::load_records(&path).unwrap();
     assert_eq!(records2.len(), 13);
 }
@@ -157,7 +166,12 @@ fn cross_device_records_seed_target_search() {
     assert!(cache.total_records() > 0);
 
     // The target device misses exactly but receives cross-device seeds.
-    let plan = warmstart::plan(&cache, &task, &presets::jetson_tx2(), 8, 16);
+    let plan = warmstart::plan(
+        &cache,
+        &task,
+        &presets::jetson_tx2(),
+        &warmstart::WarmStartOptions::new(8, 16),
+    );
     assert!(plan.exact.is_none());
     assert!(!plan.seeds.is_empty(), "cross-device seeds expected");
     assert!(plan.seeds.iter().all(|s| s.source_device == "rtx2060"));
