@@ -6,11 +6,13 @@
 
 use std::sync::Arc;
 
+use moses::coordinator::{AutoTuner, BackendKind, TuneConfig};
 use moses::costmodel::{layout, CostModel, Mask, RustBackend, XlaBackend};
 use moses::device::{presets, DeviceSim};
 use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
 use moses::runtime::Engine;
 use moses::search::{EvolutionarySearch, SearchPolicy};
+use moses::transfer::Strategy;
 use moses::tunecache::{TuneRecord, TuneStore, WorkloadIndex, WorkloadKey, RECORD_VERSION};
 use moses::util::bench::Bencher;
 use moses::util::rng::Rng;
@@ -138,6 +140,57 @@ fn main() {
         index.insert(nn_i as u64, descs[nn_i % descs.len()], RECORD_VERSION)
     });
     b.run("nn_workload_records", || store.workload_records(hit_key.workload));
+
+    // --- staged pipeline: multi-task session throughput --------------------
+    // 8 tasks tuned end to end, sequentially vs on 4 worker pipelines
+    // sharing one learner actor.  Real wall time — the parallel case
+    // overlaps search + measurement across cores.
+    let session_tasks: Vec<Subgraph> = (0..8)
+        .map(|i| {
+            if i % 2 == 0 {
+                Subgraph::new(
+                    "sess.conv",
+                    SubgraphKind::Conv2d {
+                        n: 1,
+                        h: 14,
+                        w: 14,
+                        cin: 32,
+                        cout: 32 + 16 * i,
+                        kh: 3,
+                        kw: 3,
+                        stride: 1,
+                        pad: 1,
+                    },
+                )
+            } else {
+                Subgraph::new(
+                    "sess.dense",
+                    SubgraphKind::Dense { m: 64, n: 128 + 64 * i, k: 256 },
+                )
+            }
+        })
+        .collect();
+    let tune_session = |jobs: usize| {
+        let cfg = TuneConfig {
+            trials_per_task: 24,
+            measure_batch: 4,
+            strategy: Strategy::AnsorRandom,
+            population: 32,
+            generations: 2,
+            backend: BackendKind::Rust,
+            seed: 7,
+            jobs,
+            ..TuneConfig::default()
+        };
+        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).expect("tuner");
+        tuner.tune(&session_tasks).expect("session").total_measurements()
+    };
+    let (r1, _) = b.run_once("tune_session_8tasks_jobs1", || tune_session(1));
+    let (r4, _) = b.run_once("tune_session_8tasks_jobs4", || tune_session(4));
+    println!(
+        "bench tune_session_8tasks            jobs4 speedup {:.2}x over jobs1",
+        r1.median_ns() / r4.median_ns().max(1.0)
+    );
 
     // --- XLA backend (skipped when unavailable) ---------------------------
     let dir = Engine::default_dir();

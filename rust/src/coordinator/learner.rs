@@ -1,0 +1,484 @@
+//! The learning plane of the staged tuning pipeline.
+//!
+//! A [`Learner`] owns everything that *learns*: the cost model, the
+//! replay buffer, the per-task best-throughput normalizers, and the
+//! Moses adapter (mask refresh + variant weight decay).  Search workers
+//! never touch it directly — they emit [`LearnBatch`]es (replay samples
+//! plus an optional training batch) and read back cheap versioned
+//! snapshots of the model *parameters*:
+//!
+//! * **inline mode** (`--jobs 1`): the driver calls [`Learner::absorb`]
+//!   synchronously between pipeline stages, and stages predict against
+//!   the live model — exactly the sequential tuning loop;
+//! * **actor mode** (`--jobs N`): [`run_learner_actor`] runs the learner
+//!   on its own thread, consuming [`ToLearner`] messages from a channel.
+//!   Within a wave of concurrently-tuned tasks it applies each round's
+//!   batches in ascending task order (a deterministic total order
+//!   independent of thread scheduling), then publishes a new parameter
+//!   snapshot through the [`SnapshotCell`]; workers block on the version
+//!   they need before proposing the next round.  Fixed `(seed, jobs)`
+//!   therefore reproduces bit-identical sessions.
+//!
+//! Virtual-time charges incurred on the learning plane (gradient steps,
+//! ξ saliency refreshes) are attributed to the *originating task's*
+//! clock so per-task and session accounting stay exact in both modes.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::costmodel::{layout, CostModel, Mask};
+use crate::device::VirtualClock;
+use crate::program::N_FEATURES;
+use crate::transfer::MosesAdapter;
+use crate::util::rng::Rng;
+
+/// Replay-buffer entry: raw measurement for one schedule of one task.
+#[derive(Clone)]
+pub(crate) struct Sample {
+    pub task_ord: usize,
+    pub feats: [f32; N_FEATURES],
+    pub gflops: f64,
+}
+
+/// The labeled rows of one measured round, pre-normalization (the
+/// learner normalizes by the task's best-so-far throughput at apply
+/// time, exactly like the sequential loop did).
+pub(crate) struct TrainBatch {
+    pub x: Vec<f32>,
+    pub y_raw: Vec<f32>,
+}
+
+/// One pipeline stage's contribution to the learning plane.  Every
+/// non-cache-hit task emits exactly one batch per stage — `seq` 0 for
+/// the warm-start stage, `r + 1` for round `r` — possibly empty, so the
+/// actor's round barrier sees every live task every sweep.
+pub(crate) struct LearnBatch {
+    pub task_ord: usize,
+    pub seq: u32,
+    pub samples: Vec<Sample>,
+    pub train: Option<TrainBatch>,
+}
+
+/// Learner-side knobs (lifted from `TuneConfig` so the learner can
+/// travel to its own thread without the whole tuning config).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LearnerConfig {
+    pub lr: f32,
+    pub epochs_per_round: usize,
+    pub replay_cap: usize,
+}
+
+/// The stateful learning plane for one tuner (continual across `tune`
+/// calls, shared across that tuner's tasks).
+pub(crate) struct Learner {
+    cfg: LearnerConfig,
+    model: CostModel,
+    adapter: Option<MosesAdapter>,
+    replay: Vec<Sample>,
+    best_gflops_per_task: Vec<f64>,
+    /// Learning-plane virtual-time charges, attributed per task.
+    task_clocks: Vec<VirtualClock>,
+}
+
+/// Everything but the backend handle — `Send`, so a learner can be
+/// rebuilt on the actor thread (see [`crate::costmodel::ModelState`]).
+#[derive(Clone)]
+pub(crate) struct LearnerState {
+    pub model: crate::costmodel::ModelState,
+    pub adapter: Option<MosesAdapter>,
+    pub replay: Vec<Sample>,
+    pub best_gflops_per_task: Vec<f64>,
+    pub task_clocks: Vec<VirtualClock>,
+}
+
+impl Learner {
+    pub fn new(cfg: LearnerConfig, model: CostModel, adapter: Option<MosesAdapter>) -> Learner {
+        Learner {
+            cfg,
+            model,
+            adapter,
+            replay: Vec::new(),
+            best_gflops_per_task: Vec::new(),
+            task_clocks: Vec::new(),
+        }
+    }
+
+    pub fn from_state(
+        cfg: LearnerConfig,
+        backend: Arc<dyn crate::costmodel::Backend>,
+        state: LearnerState,
+    ) -> Learner {
+        Learner {
+            cfg,
+            model: CostModel::from_state(backend, state.model),
+            adapter: state.adapter,
+            replay: state.replay,
+            best_gflops_per_task: state.best_gflops_per_task,
+            task_clocks: state.task_clocks,
+        }
+    }
+
+    pub fn into_state(self) -> LearnerState {
+        LearnerState {
+            model: self.model.export_state(),
+            adapter: self.adapter,
+            replay: self.replay,
+            best_gflops_per_task: self.best_gflops_per_task,
+            task_clocks: self.task_clocks,
+        }
+    }
+
+    /// The live cost model (inline-mode predictions, diagnostics).
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    /// Number of task slots allotted so far — the ordinal base for the
+    /// next `tune` call (ords must never collide across calls: replay
+    /// samples keep referencing their task's normalizer slot).
+    pub fn task_count(&self) -> usize {
+        self.best_gflops_per_task.len()
+    }
+
+    /// Zero the per-task learning-plane clocks (start of a session).
+    pub fn reset_task_clocks(&mut self) {
+        for c in &mut self.task_clocks {
+            *c = VirtualClock::new();
+        }
+    }
+
+    /// This task's accumulated learning-plane charges.
+    pub fn task_clock(&self, ord: usize) -> VirtualClock {
+        self.task_clocks.get(ord).cloned().unwrap_or_default()
+    }
+
+    /// A cheap read-snapshot of the model parameters.
+    pub fn snapshot_params(&self) -> Vec<f32> {
+        self.model.params.clone()
+    }
+
+    fn ensure_task(&mut self, ord: usize) {
+        while self.best_gflops_per_task.len() <= ord {
+            self.best_gflops_per_task.push(0.0);
+        }
+        while self.task_clocks.len() <= ord {
+            self.task_clocks.push(VirtualClock::new());
+        }
+    }
+
+    fn push_replay(&mut self, sample: Sample) {
+        self.replay.push(sample);
+        if self.replay.len() > self.cfg.replay_cap {
+            let drop = self.replay.len() - self.cfg.replay_cap;
+            self.replay.drain(..drop);
+        }
+    }
+
+    /// Rebuild training arrays from the replay buffer with labels
+    /// normalized per task by its best-so-far throughput.
+    fn training_arrays(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(self.replay.len() * N_FEATURES);
+        let mut y = Vec::with_capacity(self.replay.len());
+        for s in &self.replay {
+            x.extend_from_slice(&s.feats);
+            let denom = self.best_gflops_per_task[s.task_ord];
+            y.push(if denom > 0.0 { (s.gflops / denom) as f32 } else { 0.0 });
+        }
+        (x, y)
+    }
+
+    /// Apply one batch: push its samples into the replay buffer (which
+    /// also advances the task's best-throughput normalizer), then — for
+    /// measured rounds of an online-training strategy — refresh the
+    /// Moses boundary and run the configured epochs over the replay.
+    /// `rng` drives the epoch shuffles: the task's own stream inline,
+    /// a per-batch forked stream in actor mode.
+    pub fn absorb(&mut self, batch: LearnBatch, rng: &mut Rng) -> Result<()> {
+        let ord = batch.task_ord;
+        self.ensure_task(ord);
+        for s in batch.samples {
+            if s.gflops > self.best_gflops_per_task[ord] {
+                self.best_gflops_per_task[ord] = s.gflops;
+            }
+            self.push_replay(s);
+        }
+        let Some(train) = batch.train else {
+            return Ok(());
+        };
+        let denom = self.best_gflops_per_task[ord].max(1e-9) as f32;
+        let y_norm: Vec<f32> = train.y_raw.iter().map(|g| g / denom).collect();
+        let (mask, wd) = if let Some(ad) = self.adapter.as_mut() {
+            if ad.maybe_refresh(&self.model, &train.x, &y_norm)? {
+                self.task_clocks[ord].charge_xi();
+            }
+            (ad.mask().clone(), ad.weight_decay())
+        } else {
+            (Mask::all_ones(layout::N_PARAMS), 0.0)
+        };
+        let (tx, ty) = self.training_arrays();
+        // Bill one clock charge per actual gradient step: the backend's
+        // train batch decides how many steps one epoch takes.
+        let bt = self.model.train_batch().max(1);
+        let steps_per_epoch = ty.len().div_ceil(bt).max(1);
+        for _ in 0..self.cfg.epochs_per_round {
+            self.model.train_epoch(&tx, &ty, &mask, self.cfg.lr, wd, rng)?;
+            for _ in 0..steps_per_epoch {
+                self.task_clocks[ord].charge_update();
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Actor mode: snapshot cell + message protocol + deterministic loop.
+// ---------------------------------------------------------------------
+
+struct SnapState {
+    version: u64,
+    params: Arc<Vec<f32>>,
+    poisoned: bool,
+}
+
+/// Versioned read-snapshot of the learner's model parameters.  The
+/// learner publishes after every round sweep; workers block until the
+/// version covering all batches their next prediction must observe.
+pub(crate) struct SnapshotCell {
+    state: Mutex<SnapState>,
+    cv: Condvar,
+}
+
+impl SnapshotCell {
+    pub fn new(params: Vec<f32>) -> SnapshotCell {
+        SnapshotCell {
+            state: Mutex::new(SnapState {
+                version: 0,
+                params: Arc::new(params),
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn publish(&self, version: u64, params: Vec<f32>) {
+        let mut st = self.state.lock().expect("snapshot cell poisoned");
+        st.version = version;
+        st.params = Arc::new(params);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Wake every waiter with failure (the learner died).
+    pub fn poison(&self) {
+        let mut st = self.state.lock().expect("snapshot cell poisoned");
+        st.poisoned = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Block until the published version reaches `v`.  `None` means the
+    /// learner failed and no further snapshot will ever arrive.
+    pub fn wait_for(&self, v: u64) -> Option<Arc<Vec<f32>>> {
+        let mut st = self.state.lock().expect("snapshot cell poisoned");
+        while st.version < v && !st.poisoned {
+            st = self.cv.wait(st).expect("snapshot cell poisoned");
+        }
+        if st.poisoned {
+            None
+        } else {
+            Some(st.params.clone())
+        }
+    }
+}
+
+/// Messages into the learner actor.
+pub(crate) enum ToLearner {
+    /// Start a wave: the ords tuning concurrently, ascending.
+    Wave { tasks: Vec<usize> },
+    /// One pipeline stage's batch, with a forked stream for the epoch
+    /// shuffles (the worker's own stream cannot cross threads).
+    Batch { batch: LearnBatch, shuffle_rng: Rng },
+    /// The task will emit no batch at `seq` or any later sweep.
+    Finished { task_ord: usize, seq: u32 },
+    /// Session over: return the learner state to the driver.
+    Shutdown,
+}
+
+type Stashed = Option<(LearnBatch, Rng)>;
+
+fn stash(buf: &mut BTreeMap<(usize, u32), Stashed>, msg: ToLearner) {
+    match msg {
+        ToLearner::Batch { batch, shuffle_rng } => {
+            buf.insert((batch.task_ord, batch.seq), Some((batch, shuffle_rng)));
+        }
+        ToLearner::Finished { task_ord, seq } => {
+            buf.insert((task_ord, seq), None);
+        }
+        // Wave/Shutdown are control-flow; callers handle them directly.
+        ToLearner::Wave { .. } | ToLearner::Shutdown => {}
+    }
+}
+
+/// The learner actor: per wave, consume every live task's batch for the
+/// current sweep **in ascending task order** (deterministic regardless
+/// of arrival order — out-of-order messages wait in a stash), absorb
+/// them, publish the next snapshot version, repeat until the wave
+/// drains, then report the post-wave version on `wave_done`.
+pub(crate) fn run_learner_actor(
+    mut learner: Learner,
+    rx: Receiver<ToLearner>,
+    cell: &SnapshotCell,
+    wave_done: Sender<u64>,
+) -> Result<Learner> {
+    let mut version: u64 = 0;
+    let mut pending: BTreeMap<(usize, u32), Stashed> = BTreeMap::new();
+    'session: loop {
+        let mut live: Vec<usize> = loop {
+            match rx.recv() {
+                Ok(ToLearner::Wave { tasks }) => break tasks,
+                Ok(ToLearner::Shutdown) | Err(_) => break 'session,
+                Ok(other) => stash(&mut pending, other),
+            }
+        };
+        let mut seq: u32 = 0;
+        while !live.is_empty() {
+            let mut survivors = Vec::with_capacity(live.len());
+            for &ord in &live {
+                let entry = loop {
+                    if let Some(e) = pending.remove(&(ord, seq)) {
+                        break e;
+                    }
+                    match rx.recv() {
+                        Ok(ToLearner::Wave { .. }) => {
+                            cell.poison();
+                            anyhow::bail!("learner: wave started before the previous drained");
+                        }
+                        Ok(ToLearner::Shutdown) | Err(_) => {
+                            cell.poison();
+                            anyhow::bail!("learner: shut down mid-wave");
+                        }
+                        Ok(other) => stash(&mut pending, other),
+                    }
+                };
+                if let Some((batch, mut shuffle_rng)) = entry {
+                    if let Err(e) = learner.absorb(batch, &mut shuffle_rng) {
+                        cell.poison();
+                        return Err(e);
+                    }
+                    survivors.push(ord);
+                }
+            }
+            live = survivors;
+            version += 1;
+            cell.publish(version, learner.snapshot_params());
+            seq += 1;
+        }
+        let _ = wave_done.send(version);
+    }
+    Ok(learner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::RustBackend;
+
+    fn learner() -> Learner {
+        let backend = Arc::new(RustBackend { pred_batch: 8, train_batch: 8 });
+        let model = CostModel::new(backend, &mut Rng::new(1));
+        Learner::new(
+            LearnerConfig { lr: 1e-3, epochs_per_round: 1, replay_cap: 4 },
+            model,
+            None,
+        )
+    }
+
+    fn sample(ord: usize, gflops: f64) -> Sample {
+        Sample { task_ord: ord, feats: [0.1; N_FEATURES], gflops }
+    }
+
+    #[test]
+    fn absorb_tracks_best_and_caps_replay() {
+        let mut l = learner();
+        let mut rng = Rng::new(2);
+        let batch = LearnBatch {
+            task_ord: 3,
+            seq: 0,
+            samples: vec![sample(3, 5.0), sample(3, 2.0), sample(3, 9.0)],
+            train: None,
+        };
+        l.absorb(batch, &mut rng).unwrap();
+        assert_eq!(l.task_count(), 4);
+        assert_eq!(l.best_gflops_per_task[3], 9.0);
+        // The cap keeps the most recent rows only.
+        let more = LearnBatch {
+            task_ord: 3,
+            seq: 1,
+            samples: vec![sample(3, 1.0), sample(3, 1.0), sample(3, 1.0)],
+            train: None,
+        };
+        l.absorb(more, &mut rng).unwrap();
+        assert_eq!(l.replay.len(), 4);
+    }
+
+    #[test]
+    fn absorb_trains_and_charges_the_task_clock() {
+        let mut l = learner();
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..2 * N_FEATURES).map(|_| rng.normal() as f32).collect();
+        let batch = LearnBatch {
+            task_ord: 0,
+            seq: 1,
+            samples: vec![sample(0, 4.0), sample(0, 6.0)],
+            train: Some(TrainBatch { x, y_raw: vec![4.0, 6.0] }),
+        };
+        let before = l.snapshot_params();
+        l.absorb(batch, &mut rng).unwrap();
+        assert_ne!(before, l.snapshot_params(), "training must move the parameters");
+        assert!(l.task_clock(0).model_updates() > 0);
+        assert_eq!(l.task_clock(1).model_updates(), 0);
+        l.reset_task_clocks();
+        assert_eq!(l.task_clock(0).model_updates(), 0);
+    }
+
+    #[test]
+    fn snapshot_cell_versions_and_poison() {
+        let cell = Arc::new(SnapshotCell::new(vec![1.0]));
+        assert_eq!(cell.wait_for(0).unwrap()[0], 1.0);
+        let c2 = cell.clone();
+        let h = std::thread::spawn(move || c2.wait_for(2).map(|p| p[0]));
+        cell.publish(1, vec![2.0]);
+        cell.publish(2, vec![3.0]);
+        assert_eq!(h.join().unwrap(), Some(3.0));
+        let c3 = cell.clone();
+        let h = std::thread::spawn(move || c3.wait_for(99));
+        cell.poison();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_learning() {
+        let mut l = learner();
+        let mut rng = Rng::new(4);
+        let batch = LearnBatch {
+            task_ord: 1,
+            seq: 0,
+            samples: vec![sample(1, 7.0)],
+            train: None,
+        };
+        l.absorb(batch, &mut rng).unwrap();
+        let state = l.into_state();
+        let backend = Arc::new(RustBackend { pred_batch: 8, train_batch: 8 });
+        let l2 = Learner::from_state(
+            LearnerConfig { lr: 1e-3, epochs_per_round: 1, replay_cap: 4 },
+            backend,
+            state,
+        );
+        assert_eq!(l2.task_count(), 2);
+        assert_eq!(l2.best_gflops_per_task[1], 7.0);
+        assert_eq!(l2.replay.len(), 1);
+    }
+}

@@ -13,7 +13,17 @@
 //!    prediction-only;
 //! 5. the best configuration is returned with its TRUE latency and the
 //!    total virtual search time.
+//!
+//! Since the staged-pipeline refactor these responsibilities live in
+//! three layers: [`pipeline`] (per-task stages: warm-start → propose →
+//! measure → learn-batch emission → finalize), [`learner`] (the shared
+//! learning plane: cost model, replay buffer, Moses adapter, snapshot
+//! publication), and [`tuner`] (the driver — sequential inline at
+//! `--jobs 1`, wave-parallel worker threads plus a learner actor at
+//! `--jobs N`).
 
+mod learner;
+mod pipeline;
 mod session;
 mod tuner;
 

@@ -42,8 +42,14 @@ pub struct Session {
     pub device: String,
     pub strategy: String,
     pub tasks: Vec<TaskResult>,
-    /// Total virtual search time (measurements + model queries/updates).
+    /// Total virtual search time (measurements + model queries/updates),
+    /// summed over every task pipeline — the device bill.
     pub clock: VirtualClock,
+    /// Critical-path virtual seconds: with `--jobs N`, tasks tune in
+    /// concurrent waves, so the session *elapses* the per-wave maximum
+    /// while still *spending* the sum.  Equals `clock.seconds()` for
+    /// sequential (`--jobs 1`) sessions.
+    pub wall_s: f64,
     /// Tune-cache counter snapshot at session end (None when tuning
     /// without a cache).
     pub cache: Option<CacheStats>,
@@ -73,9 +79,15 @@ impl Session {
         self.total_default_latency_ms() / self.total_best_latency_ms()
     }
 
-    /// Total virtual search time in seconds.
+    /// Total virtual search time in seconds (summed across workers).
     pub fn search_time_s(&self) -> f64 {
         self.clock.seconds()
+    }
+
+    /// Critical-path virtual search time: what a wall clock would show
+    /// with `--jobs` tasks tuning concurrently.
+    pub fn wall_time_s(&self) -> f64 {
+        self.wall_s
     }
 
     /// Total on-device measurements.
@@ -130,6 +142,7 @@ mod tests {
             strategy: "moses".into(),
             tasks: vec![mk_task(1e-3, 2e-3, 1), mk_task(2e-3, 6e-3, 2)],
             clock: VirtualClock::new(),
+            wall_s: 0.0,
             cache: None,
         };
         assert!((s.total_best_latency_ms() - (1.0 + 4.0)).abs() < 1e-9);

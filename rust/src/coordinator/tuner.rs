@@ -1,20 +1,38 @@
-//! The AutoTuner: per-task tuning loop + session orchestration.
+//! The AutoTuner: session orchestration over the staged task pipeline.
+//!
+//! Per-task tuning state lives in [`super::pipeline::TaskPipeline`];
+//! everything that learns lives in [`super::learner::Learner`].  The
+//! tuner is the driver tying them together, in one of two modes:
+//!
+//! * `jobs == 1` — **inline**: tasks run one after another on the
+//!   calling thread, the learner absorbs each stage's batch
+//!   synchronously, and predictions read the live model.  This is
+//!   exactly the classic sequential tuning loop.
+//! * `jobs > 1` — **parallel**: tasks run in sequential *waves* of
+//!   `jobs` worker threads driving one learner actor.  Workers overlap
+//!   their search + measurement work; the learner applies each round's
+//!   batches in ascending task order and publishes versioned parameter
+//!   snapshots that workers pin their next predictions to.  The
+//!   schedule is a deterministic function of `(seed, jobs, tasks)`, so
+//!   parallel sessions are exactly reproducible.
 
 use std::path::PathBuf;
+use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::session::{Session, TaskResult};
-use crate::costmodel::{layout, CostModel, Mask, RustBackend, XlaBackend};
-use crate::device::{DeviceArch, DeviceSim, VirtualClock};
-use crate::program::{featurize, Schedule, Subgraph, TensorProgram, N_FEATURES};
-use crate::runtime::Engine;
-use crate::search::{EvolutionarySearch, RandomSearch, SearchPolicy};
-use crate::transfer::{self, AdaptiveController, MosesAdapter, Strategy};
-use crate::tunecache::{
-    warmstart, TuneCache, TuneRecord, WorkloadKey, DEFAULT_NN_K, DEFAULT_NN_RADIUS,
+use super::learner::{
+    run_learner_actor, Learner, LearnerConfig, LearnerState, SnapshotCell, ToLearner,
 };
+use super::pipeline::{StageOutput, TaskPipeline};
+use super::session::{Session, TaskResult};
+use crate::costmodel::{layout, Backend, CostModel, RustBackend, XlaBackend};
+use crate::device::{DeviceArch, DeviceSim, SessionTiming, VirtualClock};
+use crate::program::Subgraph;
+use crate::runtime::Engine;
+use crate::transfer::{self, MosesAdapter, Strategy};
+use crate::tunecache::{TuneCache, DEFAULT_NN_K, DEFAULT_NN_RADIUS};
 use crate::util::rng::Rng;
 
 /// Which compute backend executes the cost model.
@@ -38,11 +56,6 @@ impl BackendKind {
         }
     }
 }
-
-/// Cap on warm-start schedules (cross-device plus nearest-neighbor)
-/// injected into one task's search population (the evolutionary engine
-/// holds up to 32 seeds).
-const MAX_WARM_SEEDS: usize = 8;
 
 /// Tuning configuration (one model × one device × one strategy).
 #[derive(Debug, Clone)]
@@ -75,6 +88,14 @@ pub struct TuneConfig {
     pub nn_radius: Option<f64>,
     /// Neighbor workloads consulted per nearest-neighbor query.
     pub nn_k: usize,
+    /// Concurrent task pipelines per session (1 = the classic
+    /// sequential loop).  Requires the rust backend when > 1.
+    pub jobs: usize,
+    /// Rust-backend batch geometry (the parallel learner/worker threads
+    /// construct their own backends from these; the XLA geometry is
+    /// fixed by the AOT artifacts).
+    pub rust_pred_batch: usize,
+    pub rust_train_batch: usize,
 }
 
 impl Default for TuneConfig {
@@ -97,38 +118,50 @@ impl Default for TuneConfig {
             seed_probe: 2,
             nn_radius: Some(DEFAULT_NN_RADIUS),
             nn_k: DEFAULT_NN_K,
+            jobs: 1,
+            rust_pred_batch: 512,
+            rust_train_batch: 256,
         }
     }
 }
 
-/// Replay buffer entry: raw measurement for one schedule of one task.
-struct Sample {
-    task_ord: usize,
-    feats: [f32; N_FEATURES],
-    gflops: f64,
+impl TuneConfig {
+    fn learner_config(&self) -> LearnerConfig {
+        LearnerConfig {
+            lr: self.lr,
+            epochs_per_round: self.epochs_per_round,
+            replay_cap: self.replay_cap,
+        }
+    }
 }
 
 /// The tuner for one (device, strategy) pair.  Reusable across models;
-/// the cost model persists across `tune` calls (continual learning).
+/// the learner (cost model + replay) persists across `tune` calls
+/// (continual learning).
 pub struct AutoTuner {
     pub config: TuneConfig,
     sim: DeviceSim,
-    model: CostModel,
-    adapter: Option<MosesAdapter>,
-    replay: Vec<Sample>,
-    best_gflops_per_task: Vec<f64>,
     rng: Rng,
     /// Shared tuning-record store (check-before-search,
     /// commit-after-measure, cross-device warm start).
     cache: Option<Arc<TuneCache>>,
+    /// The learning plane.  `None` only transiently while a parallel
+    /// session owns the state on the actor thread.
+    learner: Option<Learner>,
 }
 
 impl AutoTuner {
     /// Build a tuner; loads the backend and (if required) the
     /// pre-trained checkpoint.
     pub fn from_config(config: &TuneConfig, target: DeviceArch) -> Result<AutoTuner> {
-        let backend: Arc<dyn crate::costmodel::Backend> = match config.backend {
-            BackendKind::Rust => Arc::new(RustBackend::default()),
+        let backend: Arc<dyn Backend> = match config.backend {
+            // The configured geometry, so inline (`--jobs 1`) training
+            // partitions minibatches exactly like the parallel learner
+            // actor rebuilding its backend from the same fields.
+            BackendKind::Rust => Arc::new(RustBackend {
+                pred_batch: config.rust_pred_batch,
+                train_batch: config.rust_train_batch,
+            }),
             BackendKind::Xla => {
                 let dir = Engine::default_dir();
                 Arc::new(XlaBackend { engine: Arc::new(Engine::load(&dir)?) })
@@ -146,25 +179,21 @@ impl AutoTuner {
         };
         let model =
             transfer::init_model(&config.strategy, backend, pretrained.as_deref(), &mut rng);
-        let adapter = match &config.strategy {
-            Strategy::Moses(cfg) => Some(MosesAdapter::new(*cfg)),
-            _ => None,
-        };
-        Ok(AutoTuner {
-            config: config.clone(),
-            sim: DeviceSim::new(target),
-            model,
-            adapter,
-            replay: Vec::new(),
-            best_gflops_per_task: Vec::new(),
-            rng,
-            cache: None,
-        })
+        Ok(AutoTuner::assemble(config, target, model, rng))
     }
 
     /// Build with an externally-constructed model (tests, custom
     /// checkpoints already in memory).
     pub fn with_model(config: &TuneConfig, target: DeviceArch, model: CostModel) -> AutoTuner {
+        AutoTuner::assemble(config, target, model, Rng::new(config.seed))
+    }
+
+    fn assemble(
+        config: &TuneConfig,
+        target: DeviceArch,
+        model: CostModel,
+        rng: Rng,
+    ) -> AutoTuner {
         let adapter = match &config.strategy {
             Strategy::Moses(cfg) => Some(MosesAdapter::new(*cfg)),
             _ => None,
@@ -172,12 +201,9 @@ impl AutoTuner {
         AutoTuner {
             config: config.clone(),
             sim: DeviceSim::new(target),
-            model,
-            adapter,
-            replay: Vec::new(),
-            best_gflops_per_task: Vec::new(),
-            rng: Rng::new(config.seed),
+            rng,
             cache: None,
+            learner: Some(Learner::new(config.learner_config(), model, adapter)),
         }
     }
 
@@ -191,7 +217,7 @@ impl AutoTuner {
 
     /// Access the underlying cost model (diagnostics).
     pub fn model(&self) -> &CostModel {
-        &self.model
+        self.learner.as_ref().expect("learner state present").model()
     }
 
     /// The device being tuned for.
@@ -201,394 +227,319 @@ impl AutoTuner {
 
     /// Tune a list of tasks; returns the session with aggregate metrics.
     pub fn tune(&mut self, tasks: &[Subgraph]) -> Result<Session> {
-        let mut results = Vec::with_capacity(tasks.len());
-        let mut clock = VirtualClock::new();
-        for (i, task) in tasks.iter().enumerate() {
-            let mut task_rng = self.rng.fork(i as u64);
-            let res = self.tune_task(task, &mut task_rng, &mut clock)?;
-            results.push(res);
+        let jobs = self.config.jobs.max(1).min(tasks.len().max(1));
+        if jobs <= 1 {
+            self.tune_inline(tasks)
+        } else {
+            anyhow::ensure!(
+                self.config.backend == BackendKind::Rust,
+                "--jobs {jobs} requires the rust cost-model backend: the XLA/PJRT client \
+                 is pinned to its creating thread"
+            );
+            self.tune_parallel(tasks, jobs)
         }
-        Ok(Session {
+    }
+
+    fn session(&self, tasks: Vec<TaskResult>, timing: SessionTiming) -> Session {
+        Session {
             device: self.sim.arch.name.clone(),
             strategy: self.config.strategy.name().to_string(),
-            tasks: results,
-            clock,
+            tasks,
+            wall_s: timing.wall_s(),
+            clock: timing.into_cost(),
             cache: self.cache.as_ref().map(|c| c.stats()),
-        })
-    }
-
-    /// Rebuild training arrays from the replay buffer with labels
-    /// normalized per task by its best-so-far throughput.
-    fn training_arrays(&self) -> (Vec<f32>, Vec<f32>) {
-        let mut x = Vec::with_capacity(self.replay.len() * N_FEATURES);
-        let mut y = Vec::with_capacity(self.replay.len());
-        for s in &self.replay {
-            x.extend_from_slice(&s.feats);
-            let denom = self.best_gflops_per_task[s.task_ord];
-            y.push(if denom > 0.0 { (s.gflops / denom) as f32 } else { 0.0 });
-        }
-        (x, y)
-    }
-
-    fn push_replay(&mut self, sample: Sample) {
-        self.replay.push(sample);
-        if self.replay.len() > self.config.replay_cap {
-            let drop = self.replay.len() - self.config.replay_cap;
-            self.replay.drain(..drop);
         }
     }
 
-    /// One task's tuning loop.
-    fn tune_task(
-        &mut self,
-        task: &Subgraph,
-        rng: &mut Rng,
-        clock: &mut VirtualClock,
-    ) -> Result<TaskResult> {
-        let geometry = task.geometry();
-        let default_sched = Schedule::default_for(&geometry);
-        let default_latency =
-            self.sim.true_latency(&TensorProgram::new(task.clone(), default_sched));
-
-        // Check the tune cache before searching.  An exact-device hit at
-        // a sufficient trial budget reuses the cached best schedule
-        // outright — zero measured trials; otherwise the miss may still
-        // yield this device's own records (bigger-budget re-search) and
-        // cross-device seeds below.
-        let mut warm_seeds: Vec<Schedule> = Vec::new();
-        let mut neighbor_seeds: Vec<Schedule> = Vec::new();
-        let mut local_seeds: Vec<Schedule> = Vec::new();
-        if let Some(cache) = self.cache.clone() {
-            let plan = warmstart::plan(
-                &cache,
-                task,
-                &self.sim.arch,
-                &warmstart::WarmStartOptions {
-                    max_seeds: MAX_WARM_SEEDS,
-                    requested_trials: self.config.trials_per_task,
-                    nn_k: self.config.nn_k,
-                    nn_radius: self.config.nn_radius,
-                },
+    /// The classic sequential loop: one pipeline at a time, the learner
+    /// absorbing synchronously, predictions reading the live model.
+    fn tune_inline(&mut self, tasks: &[Subgraph]) -> Result<Session> {
+        let learner = self.learner.as_mut().expect("learner state present");
+        learner.reset_task_clocks();
+        let ord_base = learner.task_count();
+        let mut results = Vec::with_capacity(tasks.len());
+        let mut timing = SessionTiming::new();
+        for (i, task) in tasks.iter().enumerate() {
+            let trng = self.rng.fork(i as u64);
+            let mut pipe = TaskPipeline::new(
+                task.clone(),
+                ord_base + i,
+                &self.config,
+                self.sim.clone(),
+                self.cache.clone(),
+                trng,
             );
-            if let Some(rec) = plan.exact {
-                let cached = rec.schedule();
-                if cached.is_valid(&geometry) {
-                    let cached_latency =
-                        self.sim.true_latency(&TensorProgram::new(task.clone(), cached));
-                    // The default fallback applies to cached choices too.
-                    let (best_latency, best_sched) =
-                        if cached_latency.is_finite() && cached_latency <= default_latency {
-                            (cached_latency, cached)
-                        } else {
-                            (default_latency, default_sched)
-                        };
-                    let rounds =
-                        (self.config.trials_per_task / self.config.measure_batch).max(1);
-                    return Ok(TaskResult {
-                        task: task.clone(),
-                        best_latency_s: best_latency,
-                        best_schedule: best_sched,
-                        default_latency_s: default_latency,
-                        measured: 0,
-                        predicted_only: 0,
-                        history: vec![best_latency; rounds],
-                        cache_hit: true,
-                        warm_seeds: 0,
-                        neighbor_seeds: 0,
-                    });
-                }
-            }
-            warm_seeds = plan.seeds.iter().map(|s| s.schedule).collect();
-            neighbor_seeds = plan.neighbor_seeds.iter().map(|s| s.schedule).collect();
-            local_seeds = plan.local_seeds;
-        }
-
-        // Non-compute tasks (tiny elementwise/pool) are barely tunable;
-        // the loop below handles them fine, they just converge instantly.
-        let rounds = (self.config.trials_per_task / self.config.measure_batch).max(1);
-        let task_ord = self.best_gflops_per_task.len();
-        self.best_gflops_per_task.push(0.0);
-
-        let mut evo = EvolutionarySearch::new(task.clone());
-        evo.population = self.config.population;
-        evo.generations = self.config.generations;
-        let mut random = RandomSearch::new(evo.generator.clone());
-
-        let mut ac = match &self.config.strategy {
-            Strategy::Moses(cfg) => {
-                Some(AdaptiveController::new(cfg.ac_cv_threshold, cfg.ac_min_batches))
-            }
-            _ => None,
-        };
-        let measured_round_budget = match &self.config.strategy {
-            Strategy::Moses(cfg) => {
-                ((rounds as f64) * cfg.train_fraction).ceil() as usize
-            }
-            _ => rounds,
-        };
-
-        let mut seen_fps: Vec<u64> = Vec::new();
-        let fp = |task: &Subgraph, s: &Schedule| {
-            TensorProgram::new(task.clone(), *s).fingerprint()
-        };
-
-        let mut best_latency = f64::INFINITY;
-        let mut best_sched = default_sched;
-        let mut measured = 0usize;
-        let mut predicted_only = 0usize;
-        let mut history = Vec::with_capacity(rounds);
-        // Best prediction-only candidate awaiting final verification.
-        let mut pending_predicted: Option<(Schedule, f32)> = None;
-        // Measured-OK (schedule, true latency) pairs for cache commit.
-        let mut cache_outcomes: Vec<(Schedule, f64)> = Vec::new();
-
-        // Re-seed from this device's own cached records (present when a
-        // bigger budget than any previous session was requested): their
-        // latencies are deterministic ground truth, so ground the best
-        // and mark them seen at zero measurement cost.
-        for s in &local_seeds {
-            let prog = TensorProgram::new(task.clone(), *s);
-            let true_lat = self.sim.true_latency(&prog);
-            if true_lat < best_latency {
-                best_latency = true_lat;
-                best_sched = *s;
-            }
-            seen_fps.push(prog.fingerprint());
-            evo.add_seed(*s);
-        }
-
-        // Warm start: verify the most promising seeds on device first
-        // (grounds the session's best immediately), then hand ALL seeds
-        // to the evolutionary engine's population.  Same-workload
-        // cross-device seeds rank ahead of similar-workload neighbor
-        // seeds in the probe order — they carry no shape mismatch.
-        let probe_order: Vec<Schedule> =
-            warm_seeds.iter().chain(neighbor_seeds.iter()).copied().collect();
-        for (i, s) in probe_order.iter().enumerate() {
-            if i < self.config.seed_probe {
-                let prog = TensorProgram::new(task.clone(), *s);
-                let m = self.sim.measure(&prog, rng);
-                clock.charge_measurement(m.cost_s);
-                measured += 1;
-                seen_fps.push(prog.fingerprint());
-                let feats = featurize(task, s);
-                let gflops = if m.ok { m.gflops } else { 0.0 };
-                if m.ok {
-                    let true_lat = self.sim.true_latency(&prog);
-                    cache_outcomes.push((*s, true_lat));
-                    if true_lat < best_latency {
-                        best_latency = true_lat;
-                        best_sched = *s;
+            let result = match pipe.warm_start()? {
+                StageOutput::Complete(r) => *r,
+                StageOutput::Learn(batch) => {
+                    learner.absorb(batch, pipe.rng_mut())?;
+                    loop {
+                        match pipe.run_round(learner.model())? {
+                            StageOutput::Learn(b) => learner.absorb(b, pipe.rng_mut())?,
+                            StageOutput::Exhausted => break,
+                            StageOutput::Complete(_) => unreachable!("rounds never complete"),
+                        }
                     }
-                    if gflops > self.best_gflops_per_task[task_ord] {
-                        self.best_gflops_per_task[task_ord] = gflops;
-                    }
+                    pipe.finalize(learner.model())?
                 }
-                self.push_replay(Sample { task_ord, feats, gflops });
-            }
-            evo.add_seed(*s);
-        }
-
-        for round in 0..rounds {
-            let seen = |s: &Schedule| seen_fps.contains(&fp(task, s));
-            let mut charge = || clock.charge_query();
-            let candidates = match &self.config.strategy {
-                Strategy::RandomSearch => random.propose(
-                    self.config.measure_batch,
-                    &self.model,
-                    &seen,
-                    rng,
-                    &mut charge,
-                ),
-                _ => evo.propose(
-                    self.config.measure_batch,
-                    &self.model,
-                    &seen,
-                    rng,
-                    &mut charge,
-                ),
+                StageOutput::Exhausted => unreachable!("warm start never exhausts"),
             };
-            if candidates.is_empty() {
-                break;
-            }
+            let mut task_clock = pipe.clock();
+            task_clock.merge(&learner.task_clock(ord_base + i));
+            timing.add_wave(std::slice::from_ref(&task_clock));
+            results.push(result);
+        }
+        Ok(self.session(results, timing))
+    }
 
-            let do_measure = match &self.config.strategy {
-                Strategy::TensetPretrain => round == 0 || round == rounds - 1,
-                Strategy::Moses(_) => {
-                    round < measured_round_budget
-                        && ac.as_ref().map(|a| a.keep_measuring()).unwrap_or(true)
-                }
-                _ => true,
+    /// Wave-parallel sessions: `jobs` worker threads drive one task
+    /// pipeline each against versioned model snapshots, while the
+    /// learner actor consumes their batches over a channel in a
+    /// deterministic order.  Waves are sequential; workers inside a
+    /// wave run concurrently (wall-clock = max over members).
+    fn tune_parallel(&mut self, tasks: &[Subgraph], jobs: usize) -> Result<Session> {
+        let lcfg = self.config.learner_config();
+        let (ord_base, backend_home, state) = {
+            let learner = self.learner.as_mut().expect("learner state present");
+            learner.reset_task_clocks();
+            let ord_base = learner.task_count();
+            let backend_home = learner.model().backend_handle();
+            let state = self.learner.take().expect("learner state present").into_state();
+            (ord_base, backend_home, state)
+        };
+        let backup = state.clone();
+        let cfg = self.config.clone();
+        let n_tasks = tasks.len();
+        let task_rngs: Vec<Rng> = (0..n_tasks).map(|i| self.rng.fork(i as u64)).collect();
+
+        let mut results: Vec<Option<TaskResult>> = Vec::with_capacity(n_tasks);
+        results.resize_with(n_tasks, || None);
+        let mut worker_clocks: Vec<VirtualClock> = vec![VirtualClock::new(); n_tasks];
+        let mut first_err: Option<anyhow::Error> = None;
+
+        let (tx, rx) = mpsc::channel::<ToLearner>();
+        let (done_tx, done_rx) = mpsc::channel::<u64>();
+        let cell = SnapshotCell::new(state.model.params.clone());
+        let cell = &cell;
+
+        let learner_state: Option<LearnerState> = std::thread::scope(|s| {
+            let actor = {
+                let pred_batch = cfg.rust_pred_batch;
+                let train_batch = cfg.rust_train_batch;
+                s.spawn(move || -> Result<LearnerState> {
+                    // Poison the snapshot cell on EVERY actor exit —
+                    // including panics, which would otherwise leave the
+                    // workers blocked in `wait_for` forever.  On a
+                    // normal exit all workers have already joined, so
+                    // the extra poison wakes nobody.
+                    struct PoisonOnExit<'a>(&'a SnapshotCell);
+                    impl Drop for PoisonOnExit<'_> {
+                        fn drop(&mut self) {
+                            self.0.poison();
+                        }
+                    }
+                    let _poison_guard = PoisonOnExit(cell);
+                    let backend: Arc<dyn Backend> =
+                        Arc::new(RustBackend { pred_batch, train_batch });
+                    let learner = Learner::from_state(lcfg, backend, state);
+                    run_learner_actor(learner, rx, cell, done_tx).map(Learner::into_state)
+                })
             };
-
-            if do_measure {
-                // For pretrain: only verify the single top prediction.
-                let to_measure: &[Schedule] = match &self.config.strategy {
-                    Strategy::TensetPretrain => &candidates[..1],
-                    _ => &candidates[..],
-                };
-                let mut batch_x = Vec::with_capacity(to_measure.len() * N_FEATURES);
-                let mut batch_y = Vec::with_capacity(to_measure.len());
-                for s in to_measure {
-                    let prog = TensorProgram::new(task.clone(), *s);
-                    let m = self.sim.measure(&prog, rng);
-                    clock.charge_measurement(m.cost_s);
-                    measured += 1;
-                    seen_fps.push(prog.fingerprint());
-                    let feats = featurize(task, s);
-                    let gflops = if m.ok { m.gflops } else { 0.0 };
-                    if m.ok {
-                        let true_lat = self.sim.true_latency(&prog);
-                        cache_outcomes.push((*s, true_lat));
-                        if true_lat < best_latency {
-                            best_latency = true_lat;
-                            best_sched = *s;
-                        }
-                        evo.add_seed(*s);
-                        if gflops > self.best_gflops_per_task[task_ord] {
-                            self.best_gflops_per_task[task_ord] = gflops;
-                        }
-                    }
-                    batch_x.extend_from_slice(&feats);
-                    batch_y.push(gflops as f32);
-                    self.push_replay(Sample { task_ord, feats, gflops });
+            let mut wave_base: u64 = 0;
+            for (w, wave) in tasks.chunks(jobs).enumerate() {
+                let ords: Vec<usize> = (0..wave.len()).map(|j| ord_base + w * jobs + j).collect();
+                if tx.send(ToLearner::Wave { tasks: ords }).is_err() {
+                    set_err(&mut first_err, anyhow::anyhow!("learner actor unavailable"));
+                    break;
                 }
-
-                if self.config.strategy.trains_online() {
-                    // Mask + variant decay per strategy.
-                    let denom = self.best_gflops_per_task[task_ord].max(1e-9) as f32;
-                    let y_norm: Vec<f32> = batch_y.iter().map(|g| g / denom).collect();
-                    let (mask, wd) = if let Some(ad) = self.adapter.as_mut() {
-                        if ad.maybe_refresh(&self.model, &batch_x, &y_norm)? {
-                            clock.charge_xi();
-                        }
-                        (ad.mask().clone(), ad.weight_decay())
-                    } else {
-                        (Mask::all_ones(layout::N_PARAMS), 0.0)
-                    };
-                    let (tx, ty) = self.training_arrays();
-                    let bt = 256; // backend train batch (both backends)
-                    let steps_per_epoch = ty.len().div_ceil(bt).max(1);
-                    for _ in 0..self.config.epochs_per_round {
-                        self.model.train_epoch(&tx, &ty, &mask, self.config.lr, wd, rng)?;
-                        for _ in 0..steps_per_epoch {
-                            clock.charge_update();
-                        }
-                    }
-                }
-
-                // AC watches post-update prediction stability on the
-                // just-measured batch.
-                if let Some(a) = ac.as_mut() {
-                    let preds = self.model.predict(&batch_x, batch_y.len())?;
-                    clock.charge_query();
-                    a.observe_batch(&preds);
-                }
-            } else {
-                // Prediction-only round: trust the model's ranking for
-                // the batch, but VERIFY the top prediction with one cheap
-                // measurement (1 vs measure_batch) so the final choice is
-                // grounded — the AC saves the other 7/8ths.
-                predicted_only += candidates.len().saturating_sub(1);
-                let mut cx = Vec::with_capacity(candidates.len() * N_FEATURES);
-                for s in &candidates {
-                    cx.extend_from_slice(&featurize(task, s));
-                    seen_fps.push(fp(task, s));
-                }
-                let preds = self.model.predict(&cx, candidates.len())?;
-                clock.charge_query();
-                // Non-finite predictions must neither panic the ranking
-                // nor win it; all-NaN degrades to the first candidate.
-                let top = preds
+                let handles: Vec<_> = wave
                     .iter()
                     .enumerate()
-                    .filter(|(_, p)| p.is_finite())
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
-                let prog = TensorProgram::new(task.clone(), candidates[top]);
-                let meas = self.sim.measure(&prog, rng);
-                clock.charge_measurement(meas.cost_s);
-                measured += 1;
-                if meas.ok {
-                    let true_lat = self.sim.true_latency(&prog);
-                    cache_outcomes.push((candidates[top], true_lat));
-                    if true_lat < best_latency {
-                        best_latency = true_lat;
-                        best_sched = candidates[top];
+                    .map(|(j, task)| {
+                        let idx = w * jobs + j;
+                        let task = task.clone();
+                        let trng = task_rngs[idx].clone();
+                        let tx = tx.clone();
+                        let sim = self.sim.clone();
+                        let cache = self.cache.clone();
+                        let cfg = &cfg;
+                        s.spawn(move || {
+                            run_task_worker(
+                                task,
+                                ord_base + idx,
+                                cfg,
+                                sim,
+                                cache,
+                                tx,
+                                cell,
+                                wave_base,
+                                trng,
+                            )
+                        })
+                    })
+                    .collect();
+                for (j, h) in handles.into_iter().enumerate() {
+                    let idx = w * jobs + j;
+                    match h.join() {
+                        Ok(Ok((res, clock))) => {
+                            results[idx] = Some(res);
+                            worker_clocks[idx] = clock;
+                        }
+                        Ok(Err(e)) => set_err(&mut first_err, e),
+                        Err(_) => {
+                            set_err(&mut first_err, anyhow::anyhow!("task worker panicked"))
+                        }
                     }
-                    evo.add_seed(candidates[top]);
                 }
-                for (i, (s, &p)) in candidates.iter().zip(&preds).enumerate() {
-                    if i == top {
-                        continue;
+                // Wave barrier: the learner reports the post-wave
+                // snapshot version once every member's batches (and
+                // Finished markers) are consumed — it is idle after.
+                match done_rx.recv() {
+                    Ok(v) => wave_base = v,
+                    Err(_) => {
+                        set_err(&mut first_err, anyhow::anyhow!("learner actor exited early"));
+                        break;
                     }
-                    if pending_predicted.map(|(_, bp)| p > bp).unwrap_or(true) {
-                        pending_predicted = Some((*s, p));
-                    }
+                }
+                if first_err.is_some() {
+                    break;
                 }
             }
-            history.push(if best_latency.is_finite() { best_latency } else { default_latency });
-        }
-
-        // Verify the best prediction-only candidate with one final
-        // measurement (TVM always builds/measures the final choice).
-        if let Some((s, _)) = pending_predicted {
-            let prog = TensorProgram::new(task.clone(), s);
-            let m = self.sim.measure(&prog, rng);
-            clock.charge_measurement(m.cost_s);
-            measured += 1;
-            if m.ok {
-                let true_lat = self.sim.true_latency(&prog);
-                cache_outcomes.push((s, true_lat));
-                if true_lat < best_latency {
-                    best_latency = true_lat;
-                    best_sched = s;
+            let _ = tx.send(ToLearner::Shutdown);
+            drop(tx);
+            match actor.join() {
+                Ok(Ok(st)) => Some(st),
+                Ok(Err(e)) => {
+                    // The learner's own error is the root cause; the
+                    // workers' "no further snapshots" failures are its
+                    // side effects — report the cause, not a symptom.
+                    first_err = Some(e);
+                    None
+                }
+                Err(_) => {
+                    set_err(&mut first_err, anyhow::anyhow!("learner thread panicked"));
+                    None
                 }
             }
+        });
+
+        // Restore the learning plane (continual learning across calls);
+        // fall back to the pre-session state if the actor was lost.
+        let mut lstate = learner_state.unwrap_or(backup);
+        let learn_clocks = std::mem::take(&mut lstate.task_clocks);
+        self.learner = Some(Learner::from_state(lcfg, backend_home, lstate));
+        if let Some(e) = first_err {
+            return Err(e);
         }
 
-        // The default schedule is always available at deploy time: if the
-        // search never beat it (tiny budgets, unlucky measurements), ship
-        // the default — as TVM's fallback configuration does.
-        if !best_latency.is_finite() || best_latency > default_latency {
-            best_latency = default_latency;
-            best_sched = default_sched;
-        }
-
-        // Commit measured outcomes plus the final choice, so later
-        // sessions — on this device or others — can warm start.
-        if let Some(cache) = &self.cache {
-            let key = WorkloadKey::new(task, &self.sim.arch);
-            let desc = task.descriptor();
-            cache_outcomes.push((best_sched, best_latency));
-            for (sched, lat) in &cache_outcomes {
-                let gflops = task.flops() / lat.max(1e-12) / 1e9;
-                cache.commit(TuneRecord::new(
-                    key,
-                    desc,
-                    &self.sim.arch.name,
-                    sched,
-                    *lat,
-                    gflops,
-                    self.config.trials_per_task,
-                ));
+        let mut timing = SessionTiming::new();
+        for (w, wave) in tasks.chunks(jobs).enumerate() {
+            let mut members = Vec::with_capacity(wave.len());
+            for j in 0..wave.len() {
+                let idx = w * jobs + j;
+                let mut c = worker_clocks[idx].clone();
+                if let Some(lc) = learn_clocks.get(ord_base + idx) {
+                    c.merge(lc);
+                }
+                members.push(c);
             }
+            timing.add_wave(&members);
         }
-
-        Ok(TaskResult {
-            task: task.clone(),
-            best_latency_s: best_latency,
-            best_schedule: best_sched,
-            default_latency_s: default_latency,
-            measured,
-            predicted_only,
-            history,
-            cache_hit: false,
-            warm_seeds: warm_seeds.len(),
-            neighbor_seeds: neighbor_seeds.len(),
-        })
+        let results: Vec<TaskResult> =
+            results.into_iter().map(|r| r.expect("worker result present")).collect();
+        Ok(self.session(results, timing))
     }
+}
+
+fn set_err(slot: &mut Option<anyhow::Error>, e: anyhow::Error) {
+    if slot.is_none() {
+        *slot = Some(e);
+    }
+}
+
+/// One `--jobs` worker: drives a single task's pipeline, streaming its
+/// batches to the learner actor and pinning every prediction to the
+/// snapshot version the deterministic wave schedule dictates.
+#[allow(clippy::too_many_arguments)]
+fn run_task_worker(
+    task: Subgraph,
+    ord: usize,
+    cfg: &TuneConfig,
+    sim: DeviceSim,
+    cache: Option<Arc<TuneCache>>,
+    tx: mpsc::Sender<ToLearner>,
+    cell: &SnapshotCell,
+    wave_base: u64,
+    rng: Rng,
+) -> Result<(TaskResult, VirtualClock)> {
+    // The guard guarantees a `Finished` marker reaches the learner
+    // exactly once on every exit path (success, error, even panic) —
+    // without it the actor's round barrier would wait forever on a
+    // dead worker.
+    struct FinishGuard {
+        tx: mpsc::Sender<ToLearner>,
+        ord: usize,
+        sent: u32,
+        marked: bool,
+    }
+    impl FinishGuard {
+        fn finish(&mut self) {
+            if !self.marked {
+                self.marked = true;
+                let _ =
+                    self.tx.send(ToLearner::Finished { task_ord: self.ord, seq: self.sent });
+            }
+        }
+    }
+    impl Drop for FinishGuard {
+        fn drop(&mut self) {
+            self.finish();
+        }
+    }
+    let mut guard = FinishGuard { tx: tx.clone(), ord, sent: 0, marked: false };
+    let mut pipe = TaskPipeline::new(task, ord, cfg, sim, cache, rng);
+    match pipe.warm_start()? {
+        StageOutput::Complete(r) => return Ok((*r, pipe.clock())),
+        StageOutput::Learn(batch) => {
+            let shuffle_rng = pipe.fork_shuffle_rng();
+            let _ = tx.send(ToLearner::Batch { batch, shuffle_rng });
+            guard.sent = 1;
+        }
+        StageOutput::Exhausted => unreachable!("warm start never exhausts"),
+    }
+    let backend: Arc<dyn Backend> = Arc::new(RustBackend {
+        pred_batch: cfg.rust_pred_batch,
+        train_batch: cfg.rust_train_batch,
+    });
+    loop {
+        // Version `wave_base + sent` covers exactly the batches (ours
+        // and every wave sibling's) that this round's predictions must
+        // observe under the round-major deterministic order.
+        let Some(params) = cell.wait_for(wave_base + guard.sent as u64) else {
+            anyhow::bail!("learner failed; no further model snapshots");
+        };
+        let view = CostModel::with_params(backend.clone(), params.as_ref().clone());
+        match pipe.run_round(&view)? {
+            StageOutput::Learn(batch) => {
+                let shuffle_rng = pipe.fork_shuffle_rng();
+                let _ = tx.send(ToLearner::Batch { batch, shuffle_rng });
+                guard.sent += 1;
+            }
+            StageOutput::Exhausted => break,
+            StageOutput::Complete(_) => unreachable!("rounds never complete"),
+        }
+    }
+    let Some(params) = cell.wait_for(wave_base + guard.sent as u64) else {
+        anyhow::bail!("learner failed; no further model snapshots");
+    };
+    // No more batches will come: release the learner's round barrier
+    // NOW so wave siblings don't stall behind this task's finalize
+    // (one measurement + cache commits).  The needed snapshot is
+    // already in hand.
+    guard.finish();
+    let view = CostModel::with_params(backend, params.as_ref().clone());
+    let result = pipe.finalize(&view)?;
+    Ok((result, pipe.clock()))
 }
 
 #[cfg(test)]
@@ -650,7 +601,7 @@ mod tests {
     #[test]
     fn moses_uses_fewer_measurements_than_finetune() {
         let mut rng = Rng::new(0);
-        let backend: Arc<dyn crate::costmodel::Backend> = Arc::new(RustBackend::default());
+        let backend: Arc<dyn Backend> = Arc::new(RustBackend::default());
         let pre = layout::init_params(&mut rng);
 
         let cfg_ft = small_cfg(Strategy::TensetFinetune);
@@ -691,5 +642,48 @@ mod tests {
             tuner.tune(&tiny_tasks()).unwrap().total_best_latency_ms()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn inline_wall_clock_equals_total_cost() {
+        let cfg = small_cfg(Strategy::AnsorRandom);
+        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+        let session = tuner.tune(&tiny_tasks()).unwrap();
+        assert!((session.wall_time_s() - session.search_time_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_jobs_produce_valid_deterministic_sessions() {
+        let mut cfg = small_cfg(Strategy::AnsorRandom);
+        cfg.jobs = 2;
+        let run = || {
+            let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+            tuner.tune(&tiny_tasks()).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.tasks.len(), 2);
+        assert_eq!(a.total_best_latency_ms(), b.total_best_latency_ms());
+        assert_eq!(a.total_measurements(), b.total_measurements());
+        assert!(a.speedup() >= 1.0);
+        // Two concurrent tasks: the critical path is shorter than the
+        // summed cost, but never shorter than the slowest member.
+        assert!(a.wall_time_s() <= a.search_time_s() + 1e-9);
+        assert!(a.wall_time_s() > 0.0);
+    }
+
+    #[test]
+    fn parallel_jobs_refuse_the_xla_backend() {
+        let mut cfg = small_cfg(Strategy::RandomSearch);
+        cfg.jobs = 4;
+        cfg.backend = BackendKind::Xla;
+        // Construct via with_model so no artifacts are needed.
+        let model = CostModel::with_params(
+            Arc::new(RustBackend::default()),
+            layout::init_params(&mut Rng::new(1)),
+        );
+        let mut tuner = AutoTuner::with_model(&cfg, presets::rtx_2060(), model);
+        let err = tuner.tune(&tiny_tasks()).unwrap_err();
+        assert!(err.to_string().contains("rust cost-model backend"), "{err}");
     }
 }

@@ -201,6 +201,18 @@ pub struct CostModel {
     step: u64,
 }
 
+/// Portable learning state of a [`CostModel`]: everything except the
+/// backend handle.  Backends may be `Rc`-based and thread-pinned (see
+/// [`Backend`]), so a model crosses thread boundaries as a `ModelState`
+/// and is rebuilt against a backend constructed on the receiving thread.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
 impl CostModel {
     /// Fresh model with random init.
     pub fn new(backend: Arc<dyn Backend>, rng: &mut Rng) -> CostModel {
@@ -222,6 +234,36 @@ impl CostModel {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// A second handle to the backend this model computes on.
+    pub fn backend_handle(&self) -> Arc<dyn Backend> {
+        self.backend.clone()
+    }
+
+    /// The backend's fixed training minibatch (rows per gradient step).
+    pub fn train_batch(&self) -> usize {
+        self.backend.train_batch()
+    }
+
+    /// Detach the full learning state (parameters + Adam moments +
+    /// step), e.g. to move the model to another thread.
+    pub fn export_state(&self) -> ModelState {
+        ModelState {
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            step: self.step,
+        }
+    }
+
+    /// Rebuild a model from an exported state on a (possibly new)
+    /// backend — the inverse of [`CostModel::export_state`].
+    pub fn from_state(backend: Arc<dyn Backend>, state: ModelState) -> CostModel {
+        assert_eq!(state.params.len(), layout::N_PARAMS);
+        assert_eq!(state.m.len(), layout::N_PARAMS);
+        assert_eq!(state.v.len(), layout::N_PARAMS);
+        CostModel { backend, params: state.params, m: state.m, v: state.v, step: state.step }
     }
 
     /// Reset Adam state (used when adaptation starts on a new device).
@@ -421,6 +463,22 @@ mod tests {
         model.train_step(&x, &y, &mask, 1e-3, 0.0, /* wd=0 -> no decay */).unwrap();
         let after = model.predict(&x, 8).unwrap();
         assert_eq!(before, after);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_training_identically() {
+        let mut rng = Rng::new(6);
+        let mut a = CostModel::new(tiny_backend(), &mut rng);
+        let (x, y) = rows(&mut rng, 8);
+        let mask = Mask::all_ones(layout::N_PARAMS);
+        a.train_step(&x, &y, &mask, 1e-3, 0.0).unwrap();
+        // Rebuild on a fresh backend from the exported state: the step
+        // counter and Adam moments carry over, so one further identical
+        // update lands both models on identical parameters.
+        let mut b = CostModel::from_state(tiny_backend(), a.export_state());
+        a.train_step(&x, &y, &mask, 1e-3, 0.0).unwrap();
+        b.train_step(&x, &y, &mask, 1e-3, 0.0).unwrap();
+        assert_eq!(a.params, b.params);
     }
 
     #[test]

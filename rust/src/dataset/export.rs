@@ -1,0 +1,180 @@
+//! Export tuning history as pretraining corpora.
+//!
+//! `tunecache` records are exactly the `(task, schedule, latency)`
+//! triples the cost model pretrains on — except measured on *real*
+//! tuning trajectories instead of uniform random sampling, so the
+//! label distribution concentrates where search actually goes.  This
+//! module groups a record dump by measuring device and rebuilds one
+//! [`Dataset`] per device, ready for [`super::io`] and the standard
+//! pretraining path (`moses pretrain` / `experiments::pretrain_on`).
+//!
+//! Only records that carry their concrete task payload can be exported
+//! (the workload hash is one-way); records from a different
+//! featurizer/simulator version, or whose schedule no longer validates
+//! against the task geometry, are skipped and counted.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::program::Schedule;
+use crate::tunecache::{TuneRecord, RECORD_VERSION};
+
+use super::Dataset;
+
+/// Outcome of an export: one dataset per device plus skip accounting.
+#[derive(Debug, Default)]
+pub struct ExportReport {
+    /// One dataset per measuring device, sorted by device name.
+    pub datasets: Vec<Dataset>,
+    /// Records exported as dataset rows.
+    pub exported: usize,
+    /// Records stamped by a different featurizer/simulator version.
+    pub skipped_stale: usize,
+    /// Records without a task payload (pre-v3 log lines).
+    pub skipped_no_task: usize,
+    /// Records whose schedule/latency no longer validates.
+    pub skipped_invalid: usize,
+}
+
+/// Convert tuning records into per-device datasets.
+pub fn from_records(records: &[TuneRecord]) -> ExportReport {
+    // Tasks must be keyed by WORKLOAD, not name: `Dataset::add_task`
+    // dedups by name alone, and two models may reuse a task name for
+    // different shapes — their records must not be featurized against
+    // the first shape's geometry.  Same-named distinct workloads get a
+    // hash-suffixed unique name instead.
+    let mut by_device: BTreeMap<String, (Dataset, HashMap<u64, usize>)> = BTreeMap::new();
+    let mut report = ExportReport::default();
+    for r in records {
+        if r.version != RECORD_VERSION {
+            report.skipped_stale += 1;
+            continue;
+        }
+        let Some(task) = &r.task else {
+            report.skipped_no_task += 1;
+            continue;
+        };
+        let sched = Schedule::decode(&r.knobs);
+        if !sched.is_valid(&task.geometry()) || !r.latency_s.is_finite() || r.latency_s <= 0.0 {
+            report.skipped_invalid += 1;
+            continue;
+        }
+        let (ds, task_idx_by_workload) = by_device
+            .entry(r.device_name.clone())
+            .or_insert_with(|| (Dataset::new(&r.device_name), HashMap::new()));
+        let idx = match task_idx_by_workload.get(&r.workload) {
+            Some(&idx) => idx,
+            None => {
+                let mut unique = task.clone();
+                if ds.tasks.iter().any(|t| t.name == unique.name) {
+                    unique.name = format!("{}#{:016x}", task.name, r.workload);
+                }
+                let idx = ds.add_task(unique);
+                task_idx_by_workload.insert(r.workload, idx);
+                idx
+            }
+        };
+        ds.push(idx, &sched, r.gflops, r.latency_s);
+        report.exported += 1;
+    }
+    report.datasets = by_device.into_values().map(|(ds, _)| ds).collect();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::program::{SpaceGenerator, Subgraph, SubgraphKind};
+    use crate::tunecache::WorkloadKey;
+    use crate::util::rng::Rng;
+
+    fn task(name: &str, cout: usize) -> Subgraph {
+        Subgraph::new(
+            name,
+            SubgraphKind::Conv2d {
+                n: 1, h: 28, w: 28, cin: 64, cout, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+        )
+    }
+
+    fn rec(t: &Subgraph, device: &str, lat: f64, with_task: bool) -> TuneRecord {
+        let arch = presets::by_name(device).unwrap();
+        let key = WorkloadKey::new(t, &arch);
+        let mut rng = Rng::new(7);
+        let sched = SpaceGenerator::new(t.geometry()).sample(&mut rng);
+        let r = TuneRecord::new(key, t.descriptor(), &arch.name, &sched, lat, 10.0, 64);
+        if with_task {
+            r.with_task(t)
+        } else {
+            r
+        }
+    }
+
+    #[test]
+    fn groups_by_device_and_counts_skips() {
+        let a = task("ex.a", 64);
+        let b = task("ex.b", 96);
+        let mut records = vec![
+            rec(&a, "tx2", 1e-3, true),
+            rec(&b, "tx2", 2e-3, true),
+            rec(&a, "rtx2060", 3e-4, true),
+            rec(&a, "tx2", 1e-3, false), // pre-v3: no task payload
+        ];
+        let mut stale = rec(&b, "tx2", 2e-3, true);
+        stale.version = 0;
+        records.push(stale);
+
+        let report = from_records(&records);
+        assert_eq!(report.exported, 3);
+        assert_eq!(report.skipped_no_task, 1);
+        assert_eq!(report.skipped_stale, 1);
+        assert_eq!(report.skipped_invalid, 0);
+        assert_eq!(report.datasets.len(), 2);
+        let tx2 = report.datasets.iter().find(|d| d.device == "tx2").unwrap();
+        assert_eq!(tx2.tasks.len(), 2);
+        assert_eq!(tx2.len(), 2);
+        let r2060 = report.datasets.iter().find(|d| d.device == "rtx2060").unwrap();
+        assert_eq!(r2060.len(), 1);
+        // The rebuilt datasets are directly trainable.
+        let (x, y) = tx2.training_arrays();
+        assert_eq!(y.len(), 2);
+        assert_eq!(x.len(), 2 * crate::program::N_FEATURES);
+    }
+
+    #[test]
+    fn same_named_distinct_workloads_keep_their_own_geometry() {
+        // Two models reusing the task name "conv" for different shapes:
+        // the narrow one's records must not be featurized against the
+        // wide one's geometry.
+        let wide = task("conv", 96);
+        let narrow = task("conv", 32);
+        let report = from_records(&[
+            rec(&wide, "tx2", 1e-3, true),
+            rec(&narrow, "tx2", 2e-3, true),
+        ]);
+        assert_eq!(report.exported, 2);
+        let ds = &report.datasets[0];
+        assert_eq!(ds.tasks.len(), 2, "distinct workloads need distinct task slots");
+        assert_ne!(ds.tasks[0].kind, ds.tasks[1].kind);
+        for r in &ds.records {
+            let t = &ds.tasks[r.task_idx];
+            assert!(
+                Schedule::decode(&r.knobs).is_valid(&t.geometry()),
+                "record attributed to the wrong geometry"
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_schedules_and_latencies_are_skipped() {
+        let t = task("ex.c", 64);
+        let mut bad_lat = rec(&t, "tx2", f64::INFINITY, true);
+        bad_lat.latency_s = f64::INFINITY;
+        let mut bad_knobs = rec(&t, "tx2", 1e-3, true);
+        bad_knobs.knobs = [0; 9]; // zero tiles never validate
+        let report = from_records(&[bad_lat, bad_knobs]);
+        assert_eq!(report.exported, 0);
+        assert_eq!(report.skipped_invalid, 2);
+        assert!(report.datasets.is_empty());
+    }
+}

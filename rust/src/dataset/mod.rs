@@ -6,6 +6,7 @@
 //! for two embedded devices (TX2, Xavier); `moses dataset` reproduces
 //! that generation against the simulator (scaled — DESIGN.md §2).
 
+pub mod export;
 pub mod gen;
 pub mod io;
 

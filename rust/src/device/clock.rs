@@ -79,6 +79,50 @@ impl VirtualClock {
     }
 }
 
+/// Timing of a (possibly parallel) tuning session built from per-task
+/// clocks.  Tasks run in sequential *waves* of up to `--jobs` members:
+/// `cost` sums every member's virtual seconds (what the device bill
+/// sees), while `wall` charges each wave only its slowest member —
+/// wave members run concurrently, so the session's critical path is the
+/// sum over waves of the per-wave maximum.  With one task per wave
+/// (`--jobs 1`) wall and cost coincide, reproducing the sequential
+/// accounting.
+#[derive(Debug, Clone, Default)]
+pub struct SessionTiming {
+    cost: VirtualClock,
+    wall_s: f64,
+}
+
+impl SessionTiming {
+    pub fn new() -> SessionTiming {
+        SessionTiming::default()
+    }
+
+    /// Fold one wave of concurrently-run task clocks into the session.
+    pub fn add_wave(&mut self, members: &[VirtualClock]) {
+        let mut slowest = 0.0f64;
+        for c in members {
+            self.cost.merge(c);
+            slowest = slowest.max(c.seconds());
+        }
+        self.wall_s += slowest;
+    }
+
+    /// Total virtual cost across all workers.
+    pub fn cost(&self) -> &VirtualClock {
+        &self.cost
+    }
+
+    pub fn into_cost(self) -> VirtualClock {
+        self.cost
+    }
+
+    /// Critical-path virtual seconds (`<= cost().seconds()`).
+    pub fn wall_s(&self) -> f64 {
+        self.wall_s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +158,25 @@ mod tests {
     #[should_panic]
     fn rejects_negative_charge() {
         VirtualClock::new().charge_measurement(-1.0);
+    }
+
+    #[test]
+    fn session_timing_sums_cost_and_maxes_wall() {
+        let mk = |s: f64| {
+            let mut c = VirtualClock::new();
+            c.charge_measurement(s);
+            c
+        };
+        let mut t = SessionTiming::new();
+        t.add_wave(&[mk(1.0), mk(3.0)]);
+        t.add_wave(&[mk(2.0)]);
+        assert!((t.cost().seconds() - 6.0).abs() < 1e-12);
+        assert!((t.wall_s() - 5.0).abs() < 1e-12);
+        assert_eq!(t.cost().measurements(), 3);
+        // Waves of one degenerate to sequential accounting.
+        let mut seq = SessionTiming::new();
+        seq.add_wave(&[mk(1.0)]);
+        seq.add_wave(&[mk(2.0)]);
+        assert!((seq.wall_s() - seq.cost().seconds()).abs() < 1e-12);
     }
 }

@@ -22,5 +22,5 @@ pub mod presets;
 pub mod sim;
 
 pub use arch::{ArchFamily, DeviceArch};
-pub use clock::VirtualClock;
+pub use clock::{SessionTiming, VirtualClock};
 pub use sim::{DeviceSim, MeasureResult};

@@ -25,6 +25,19 @@
 //!   that executes the AOT artifacts ([`runtime`]) and the paper's
 //!   metrics ([`metrics`]).
 //!
+//! ## The staged tuning engine ([`coordinator`])
+//!
+//! Tuning is a staged per-task pipeline (warm-start → propose →
+//! measure → learn → finalize) over a split between the
+//! search/measurement plane and the *learning plane*: a learner owning
+//! the cost model, replay buffer and Moses adapter consumes measurement
+//! batches while search workers predict against cheap versioned
+//! parameter snapshots.  `moses tune --jobs N` runs N task pipelines
+//! concurrently in deterministic waves — sessions are bit-reproducible
+//! for a fixed `(seed, jobs)`, wall-clock search time is the per-wave
+//! maximum while device cost stays the sum (see ROADMAP.md
+//! §ARCHITECTURE).
+//!
 //! ## The tuning-record store ([`tunecache`])
 //!
 //! Sitting beside the coordinator is a sharded, persistent store of

@@ -1,12 +1,13 @@
 //! `moses` — CLI for the Moses reproduction.
 //!
 //! Subcommands:
-//!   tune      Tune a DNN on a (simulated) target device with a strategy.
-//!   pretrain  Pre-train the source-device cost model (Tenset-style).
-//!   dataset   Generate a program-performance dataset (paper §4.1).
-//!   eval      Evaluate a checkpoint's ranking quality on a device.
-//!   tables    Regenerate the paper's tables/figures (fig4|fig5|table1|fig6).
-//!   devices   List simulated device presets.
+//!   tune            Tune a DNN on a (simulated) target device with a strategy.
+//!   pretrain        Pre-train the source-device cost model (Tenset-style).
+//!   dataset         Generate a program-performance dataset (paper §4.1).
+//!   export-dataset  Convert tunecache records into pretraining corpora.
+//!   eval            Evaluate a checkpoint's ranking quality on a device.
+//!   tables          Regenerate the paper's tables/figures (fig4|fig5|table1|fig6).
+//!   devices         List simulated device presets.
 //!
 //! Python never runs here: the cost model executes through AOT-compiled
 //! HLO artifacts (`make artifacts`) on the PJRT CPU client.
@@ -58,6 +59,7 @@ fn run(args: &[String]) -> Result<()> {
         "tune" => cmd_tune(rest),
         "pretrain" => cmd_pretrain(rest),
         "dataset" => cmd_dataset(rest),
+        "export-dataset" => cmd_export_dataset(rest),
         "eval" => cmd_eval(rest),
         "tables" => cmd_tables(rest),
         "devices" => cmd_devices(),
@@ -74,12 +76,13 @@ fn print_usage() {
         "moses — cross-device cost-model adaptation for tensor program optimization\n\n\
          Usage: moses <command> [flags]\n\n\
          Commands:\n\
-         \x20 tune      Tune a DNN on a simulated target device\n\
-         \x20 pretrain  Pre-train the source-device (K80) cost model\n\
-         \x20 dataset   Generate a program-performance dataset (paper §4.1)\n\
-         \x20 eval      Evaluate a checkpoint's ranking quality\n\
-         \x20 tables    Regenerate paper tables/figures (fig4|fig5|table1|fig6|all)\n\
-         \x20 devices   List simulated device presets\n\n\
+         \x20 tune            Tune a DNN on a simulated target device\n\
+         \x20 pretrain        Pre-train the source-device (K80) cost model\n\
+         \x20 dataset         Generate a program-performance dataset (paper §4.1)\n\
+         \x20 export-dataset  Convert tunecache records into pretraining corpora\n\
+         \x20 eval            Evaluate a checkpoint's ranking quality\n\
+         \x20 tables          Regenerate paper tables/figures (fig4|fig5|table1|fig6|all)\n\
+         \x20 devices         List simulated device presets\n\n\
          Run `moses <command> --help` for flags."
     );
 }
@@ -95,6 +98,11 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         .opt("batch", "8", "measurements per round")
         .opt("seed", "0", "RNG seed")
         .opt("backend", "auto", "cost-model backend (auto|xla|rust)")
+        .opt(
+            "jobs",
+            "1",
+            "concurrent task pipelines (deterministic per (seed, jobs); rust backend only)",
+        )
         .opt("pretrained", "", "checkpoint path (default: auto-pretrain+cache)")
         .opt(
             "tune-cache",
@@ -152,15 +160,23 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         nn_radius.is_finite() && nn_radius >= 0.0,
         "--nn-radius must be a non-negative number"
     );
-    let cfg = TuneConfig {
+    let jobs = p.get_usize("jobs")?.max(1);
+    let mut cfg = TuneConfig {
         trials_per_task: p.get_usize("trials")?,
         measure_batch: p.get_usize("batch")?,
         strategy: strategy.clone(),
         seed: p.get_u64("seed")?,
         backend,
         nn_radius: if p.get_bool("no-nn") { None } else { Some(nn_radius) },
+        jobs,
         ..TuneConfig::default()
     };
+    if backend == BackendKind::Rust {
+        // Keep the parallel learner/worker backends on the same batch
+        // geometry the model was initialized with.
+        cfg.rust_pred_batch = exp.rust_pred_batch;
+        cfg.rust_train_batch = exp.rust_train_batch;
+    }
     let cost_model = moses::transfer::init_model(
         &strategy,
         exp.backend_arc()?,
@@ -216,11 +232,21 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         session.total_default_latency_ms(),
         session.speedup()
     );
-    println!(
-        "virtual search time: {:.1} s ({} measurements)",
-        session.search_time_s(),
-        session.total_measurements()
-    );
+    if jobs > 1 {
+        println!(
+            "virtual search time: {:.1} s wall at --jobs {jobs} ({:.1} s device cost, \
+             {} measurements)",
+            session.wall_time_s(),
+            session.search_time_s(),
+            session.total_measurements()
+        );
+    } else {
+        println!(
+            "virtual search time: {:.1} s ({} measurements)",
+            session.search_time_s(),
+            session.total_measurements()
+        );
+    }
     if let Some(c) = &cache {
         let s = c.stats();
         println!(
@@ -333,6 +359,66 @@ fn cmd_dataset(args: &[String]) -> Result<()> {
         let path = out_dir.join(format!("{name}.moses-ds"));
         ds_io::save(&ds, &path)?;
         println!("wrote {}: {} tasks, {} records", path.display(), ds.tasks.len(), ds.len());
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------- export-dataset ----
+
+fn cmd_export_dataset(args: &[String]) -> Result<()> {
+    let flags = Flags::new()
+        .opt(
+            "tune-cache",
+            "artifacts/tunecache.jsonl",
+            "tuning-record log to export (JSONL)",
+        )
+        .opt("out", "artifacts", "output directory for per-device .moses-ds files")
+        .opt("suffix", "tunecache", "output file suffix: <device>-<suffix>.moses-ds");
+    if args.iter().any(|a| a == "--help") {
+        print!(
+            "{}",
+            flags.help(
+                "export-dataset",
+                "Convert tunecache records into per-device pretraining corpora \
+                 (dataset::io format), so the cost model pretrains on real tuning \
+                 history instead of random sampling.",
+            )
+        );
+        return Ok(());
+    }
+    let p = flags.parse(args)?;
+    let path = PathBuf::from(p.get("tune-cache"));
+    anyhow::ensure!(path.exists(), "no tuning log at {path:?} (run `moses tune` first)");
+    let (records, malformed) = moses::tunecache::persist::load_records(&path)?;
+    let report = moses::dataset::export::from_records(&records);
+    let out_dir = PathBuf::from(p.get("out"));
+    std::fs::create_dir_all(&out_dir)?;
+    let suffix = p.get("suffix");
+    for ds in &report.datasets {
+        let out = out_dir.join(format!("{}-{}.moses-ds", ds.device, suffix));
+        ds_io::save(ds, &out)?;
+        println!(
+            "wrote {}: {} tasks, {} records",
+            out.display(),
+            ds.tasks.len(),
+            ds.len()
+        );
+    }
+    println!(
+        "exported {} of {} records ({} stale, {} without task payload, {} invalid, \
+         {} malformed lines)",
+        report.exported,
+        records.len(),
+        report.skipped_stale,
+        report.skipped_no_task,
+        report.skipped_invalid,
+        malformed
+    );
+    if report.datasets.is_empty() {
+        println!(
+            "(nothing to export — records carry task payloads only from schema v3 on; \
+             re-run `moses tune` to regenerate)"
+        );
     }
     Ok(())
 }

@@ -50,6 +50,8 @@ pub struct ExpConfig {
     /// geometry is fixed by the AOT artifacts).
     pub rust_pred_batch: usize,
     pub rust_train_batch: usize,
+    /// Concurrent task pipelines per tuning session (`--jobs`).
+    pub jobs: usize,
 }
 
 impl Default for ExpConfig {
@@ -68,6 +70,7 @@ impl Default for ExpConfig {
             checkpoint_dir: Engine::default_dir(),
             rust_pred_batch: 512,
             rust_train_batch: 256,
+            jobs: 1,
         }
     }
 }
@@ -158,6 +161,9 @@ pub fn run_session(
             format!("{model_name}/{}/{}/{trials}", target.name, strategy.name()).as_bytes(),
         ),
         backend: cfg.backend,
+        jobs: cfg.jobs,
+        rust_pred_batch: cfg.rust_pred_batch,
+        rust_train_batch: cfg.rust_train_batch,
         ..TuneConfig::default()
     };
     let backend = cfg.backend_arc()?;
@@ -460,6 +466,7 @@ mod tests {
             seed: 1,
             rust_pred_batch: 64,
             rust_train_batch: 64,
+            jobs: 1,
         }
     }
 

@@ -42,6 +42,19 @@ impl EvolutionarySearch {
         }
     }
 
+    /// Engine with explicit population/generation parameters (how the
+    /// staged task pipeline constructs its search plane).
+    pub fn with_params(
+        subgraph: Subgraph,
+        population: usize,
+        generations: usize,
+    ) -> EvolutionarySearch {
+        let mut es = EvolutionarySearch::new(subgraph);
+        es.population = population;
+        es.generations = generations;
+        es
+    }
+
     /// Feed back measured results so future rounds start from winners.
     pub fn add_seed(&mut self, s: Schedule) {
         if !self.seeds.contains(&s) {

@@ -11,6 +11,7 @@ use crate::costmodel::{layout, CostModel, Mask};
 use anyhow::Result;
 
 /// Stateful Moses adaptation controller for one tuning session.
+#[derive(Clone)]
 pub struct MosesAdapter {
     pub config: MosesConfig,
     mask: Mask,

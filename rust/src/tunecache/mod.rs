@@ -243,6 +243,12 @@ impl TuneCache {
         self.index.nearest(desc, k, radius, exclude_workload)
     }
 
+    /// Deterministic dump of the live frontier, sorted by (workload,
+    /// device, latency) — dataset export, diagnostics.
+    pub fn snapshot(&self) -> Vec<TuneRecord> {
+        self.store.snapshot()
+    }
+
     pub fn total_records(&self) -> usize {
         self.store.total_records()
     }

@@ -12,17 +12,18 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::program::DESC_DIM;
+use crate::program::{Subgraph, SubgraphKind, DESC_DIM};
 use crate::util::json::Json;
 
 use super::store::TuneRecord;
 
-/// Schema version stamped on every line (v2 added `desc`/`version`).
-const VERSION: f64 = 2.0;
+/// Schema version stamped on every line (v2 added `desc`/`version`;
+/// v3 added the optional `task_*` payload for dataset export).
+const VERSION: f64 = 3.0;
 
 /// Encode one record as a single JSONL line (no trailing newline).
 pub fn encode_line(r: &TuneRecord) -> String {
-    Json::obj(vec![
+    let mut fields = vec![
         ("v", Json::Num(VERSION)),
         ("workload", Json::Str(format!("{:016x}", r.workload))),
         ("device", Json::Str(format!("{:016x}", r.device))),
@@ -33,8 +34,36 @@ pub fn encode_line(r: &TuneRecord) -> String {
         ("trials", Json::Num(r.trials as f64)),
         ("desc", Json::Arr(r.desc.iter().map(|&d| Json::Num(d)).collect())),
         ("version", Json::Num(r.version as f64)),
-    ])
-    .to_string()
+    ];
+    if let Some(task) = &r.task {
+        let (tag, params) = task.kind.encode_tagged();
+        fields.push(("task_kind", Json::Num(tag as f64)));
+        fields.push((
+            "task_shape",
+            Json::Arr(params.iter().map(|&p| Json::Num(p as f64)).collect()),
+        ));
+        fields.push(("task_name", Json::Str(task.name.clone())));
+        fields.push(("task_repeats", Json::Num(task.repeats as f64)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Decode the optional v3 task payload.  Absent or corrupt payloads
+/// yield `None` — the record is still usable for warm starts, it just
+/// cannot be exported as a dataset row.
+fn decode_task(v: &Json) -> Option<Subgraph> {
+    let tag = v.get("task_kind")?.as_f64()? as u8;
+    let arr = v.get("task_shape").and_then(Json::as_arr)?;
+    let mut params = Vec::with_capacity(arr.len());
+    for j in arr {
+        params.push(j.as_f64()? as u32);
+    }
+    let kind = SubgraphKind::decode_tagged(tag, &params)?;
+    let name = v.get("task_name").and_then(Json::as_str).unwrap_or("tunecache.task");
+    let repeats = v.get("task_repeats").and_then(Json::as_usize).unwrap_or(1).max(1);
+    let mut task = Subgraph::new(name, kind);
+    task.repeats = repeats;
+    Some(task)
 }
 
 /// Decode one JSONL line.
@@ -105,6 +134,7 @@ pub fn decode_line(line: &str) -> Result<TuneRecord> {
         trials,
         desc,
         version,
+        task: decode_task(&v),
     })
 }
 
@@ -173,6 +203,7 @@ mod tests {
             )
             .descriptor(),
             version: RECORD_VERSION,
+            task: None,
         }
     }
 
@@ -241,6 +272,30 @@ mod tests {
         let e = short[s..].find(']').unwrap() + s;
         short.replace_range(s..e, "1,2");
         assert!(decode_line(&short).is_err());
+    }
+
+    #[test]
+    fn task_payload_roundtrips_and_tolerates_corruption() {
+        let task = Subgraph::new(
+            "rn.conv",
+            SubgraphKind::Conv2d {
+                n: 1, h: 14, w: 14, cin: 32, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            },
+        )
+        .with_repeats(2);
+        let r = sample().with_task(&task);
+        let line = encode_line(&r);
+        let back = decode_line(&line).unwrap();
+        assert_eq!(back.task.as_ref(), Some(&task));
+        assert_eq!(back, r);
+        // A corrupt task payload downgrades to None — the record stays
+        // usable for warm starts, it just cannot be exported.
+        let bad = line.replace("\"task_kind\":0", "\"task_kind\":99");
+        let b = decode_line(&bad).unwrap();
+        assert!(b.task.is_none());
+        assert_eq!(b.knobs, r.knobs);
+        // Pre-v3 lines (no task fields) keep decoding with task: None.
+        assert!(decode_line(&encode_line(&sample())).unwrap().task.is_none());
     }
 
     #[test]

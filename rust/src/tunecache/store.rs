@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 use std::sync::RwLock;
 
-use crate::program::{Schedule, DESC_DIM};
+use crate::program::{Schedule, Subgraph, DESC_DIM};
 
 use super::key::WorkloadKey;
 use super::RECORD_VERSION;
@@ -50,6 +50,12 @@ pub struct TuneRecord {
     /// Featurizer/simulator version that produced this record
     /// ([`super::RECORD_VERSION`]); stale records are dropped on load.
     pub version: u32,
+    /// The concrete task the record was measured for, when the producer
+    /// attached it ([`TuneRecord::with_task`]).  The workload hash is
+    /// one-way, so this is what lets `moses export-dataset` rebuild a
+    /// `(task, schedule, latency)` pretraining corpus from the log.
+    /// `None` on pre-v3 log lines and synthetic records.
+    pub task: Option<Subgraph>,
 }
 
 impl TuneRecord {
@@ -72,7 +78,15 @@ impl TuneRecord {
             trials,
             desc,
             version: RECORD_VERSION,
+            task: None,
         }
+    }
+
+    /// Attach the concrete task, making the record exportable as a
+    /// dataset row (`moses export-dataset`).
+    pub fn with_task(mut self, task: &Subgraph) -> TuneRecord {
+        self.task = Some(task.clone());
+        self
     }
 
     pub fn key(&self) -> WorkloadKey {
@@ -266,6 +280,7 @@ mod tests {
             trials: 64,
             desc: [0.0; DESC_DIM],
             version: RECORD_VERSION,
+            task: None,
         }
     }
 

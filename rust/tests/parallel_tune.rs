@@ -1,0 +1,211 @@
+//! Staged-pipeline concurrency: `--jobs N` sessions must be exactly
+//! reproducible for a fixed `(seed, N)`, `--jobs 1` must behave as the
+//! sequential loop (wall == cost, the classic invariants), concurrent
+//! `TuneCache` commits from parallel tasks must all land, and exact
+//! cache hits must report a truthful single-point history.
+
+use std::sync::Arc;
+
+use moses::coordinator::{AutoTuner, BackendKind, Session, TuneConfig};
+use moses::device::presets;
+use moses::program::{Subgraph, SubgraphKind};
+use moses::transfer::Strategy;
+use moses::tunecache::{TuneCache, WorkloadKey};
+
+fn tasks(n: usize) -> Vec<Subgraph> {
+    // Distinct shapes so every task is its own workload in the cache.
+    (0..n)
+        .map(|i| {
+            if i % 2 == 0 {
+                Subgraph::new(
+                    &format!("pt.conv{i}"),
+                    SubgraphKind::Conv2d {
+                        n: 1,
+                        h: 14,
+                        w: 14,
+                        cin: 32,
+                        cout: 32 + 16 * i,
+                        kh: 3,
+                        kw: 3,
+                        stride: 1,
+                        pad: 1,
+                    },
+                )
+            } else {
+                Subgraph::new(
+                    &format!("pt.dense{i}"),
+                    SubgraphKind::Dense { m: 64, n: 128 + 64 * i, k: 256 },
+                )
+            }
+        })
+        .collect()
+}
+
+fn cfg(jobs: usize, seed: u64) -> TuneConfig {
+    TuneConfig {
+        trials_per_task: 16,
+        measure_batch: 4,
+        strategy: Strategy::AnsorRandom,
+        population: 16,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed,
+        jobs,
+        ..TuneConfig::default()
+    }
+}
+
+fn run(jobs: usize, seed: u64, n_tasks: usize, cache: Option<Arc<TuneCache>>) -> Session {
+    let mut tuner = AutoTuner::from_config(&cfg(jobs, seed), presets::rtx_2060()).unwrap();
+    if let Some(c) = cache {
+        tuner.attach_cache(c);
+    }
+    tuner.tune(&tasks(n_tasks)).unwrap()
+}
+
+/// Bitwise session fingerprint: per-task outcomes + aggregate clocks.
+fn fingerprint(s: &Session) -> Vec<u64> {
+    let mut out = Vec::new();
+    for t in &s.tasks {
+        out.push(t.best_latency_s.to_bits());
+        out.push(t.measured as u64);
+        out.push(t.predicted_only as u64);
+        out.push(t.history.len() as u64);
+        for h in &t.history {
+            out.push(h.to_bits());
+        }
+    }
+    out.push(s.search_time_s().to_bits());
+    out.push(s.wall_time_s().to_bits());
+    out
+}
+
+#[test]
+fn fixed_jobs_and_seed_reproduce_bit_identical_sessions() {
+    for jobs in [2, 3] {
+        let a = run(jobs, 11, 6, None);
+        let b = run(jobs, 11, 6, None);
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "--jobs {jobs} must be deterministic for a fixed seed"
+        );
+    }
+}
+
+#[test]
+fn jobs_one_is_the_sequential_path() {
+    // Classic sequential invariants: wall time equals summed cost, and
+    // repeated runs are bit-identical.
+    let a = run(1, 5, 4, None);
+    let b = run(1, 5, 4, None);
+    assert_eq!(fingerprint(&a), fingerprint(&b));
+    assert!((a.wall_time_s() - a.search_time_s()).abs() < 1e-9);
+    assert_eq!(a.tasks.len(), 4);
+    for t in &a.tasks {
+        assert!(t.best_latency_s.is_finite());
+        assert!(t.best_latency_s <= t.default_latency_s * 1.0001);
+        for w in t.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "history not monotone: {:?}", t.history);
+        }
+    }
+}
+
+#[test]
+fn parallel_session_matches_task_set_and_interleaves_waves() {
+    // 8 tasks at --jobs 4 = two waves: results stay per-task sane, the
+    // critical path is strictly shorter than the device bill, and no
+    // result slot is lost to thread scheduling.
+    let s = run(4, 23, 8, None);
+    assert_eq!(s.tasks.len(), 8);
+    let expected = tasks(8);
+    for (i, t) in s.tasks.iter().enumerate() {
+        assert_eq!(t.task.name, expected[i].name, "results must keep task order");
+        assert!(t.best_latency_s <= t.default_latency_s * 1.0001);
+    }
+    assert!(s.speedup() >= 1.0);
+    assert!(
+        s.wall_time_s() < s.search_time_s(),
+        "concurrent tasks must overlap: wall {} vs cost {}",
+        s.wall_time_s(),
+        s.search_time_s()
+    );
+}
+
+#[test]
+fn concurrent_cache_commits_all_land() {
+    let cache = Arc::new(TuneCache::in_memory(8));
+    let s = run(4, 31, 8, Some(cache.clone()));
+    assert_eq!(s.cache_hits(), 0);
+    let arch = presets::rtx_2060();
+    // Every task's final best must be present in the store, committed
+    // concurrently from 4 worker threads without loss.
+    for t in &s.tasks {
+        let key = WorkloadKey::new(&t.task, &arch);
+        let best = cache.best(&key).unwrap_or_else(|| panic!("no record for {}", t.task.name));
+        assert!(
+            best.latency_s <= t.best_latency_s * (1.0 + 1e-9),
+            "{}: cached {} vs session best {}",
+            t.task.name,
+            best.latency_s,
+            t.best_latency_s
+        );
+        assert_eq!(best.task.as_ref().map(|x| x.name.as_str()), Some(t.task.name.as_str()));
+    }
+    assert!(cache.stats().commits >= 8);
+
+    // A repeat parallel session is served entirely from the cache.
+    let s2 = run(4, 32, 8, Some(cache.clone()));
+    assert_eq!(s2.total_measurements(), 0);
+    assert_eq!(s2.cache_hits(), 8);
+}
+
+#[test]
+fn exact_cache_hits_report_truthful_single_point_history() {
+    let cache = Arc::new(TuneCache::in_memory(8));
+    let first = run(1, 41, 2, Some(cache.clone()));
+    let rounds = 16 / 4;
+    for t in &first.tasks {
+        assert_eq!(t.history.len(), rounds, "a searched task records every round");
+    }
+    let second = run(1, 42, 2, Some(cache));
+    for t in &second.tasks {
+        assert!(t.cache_hit);
+        assert_eq!(
+            t.history.len(),
+            1,
+            "an exact hit ran zero rounds and must not fabricate {rounds} of them"
+        );
+        assert!((t.history[0] - t.best_latency_s).abs() < 1e-15);
+    }
+    // Downstream aggregates handle the short history.
+    assert!(second.speedup() >= 1.0);
+}
+
+#[test]
+fn parallel_determinism_holds_with_a_shared_cache() {
+    // Warm-started parallel sessions stay deterministic: the wave
+    // barrier pins when commits become visible to later waves.
+    let seed_cache = Arc::new(TuneCache::in_memory(8));
+    let _ = run(1, 51, 6, Some(seed_cache.clone()));
+    // Two identical parallel runs against identical cache contents
+    // (fresh clones so the first doesn't poison the second).
+    let reload = |src: &TuneCache| {
+        let c = TuneCache::in_memory(8);
+        for r in src.snapshot() {
+            c.commit(r);
+        }
+        Arc::new(c)
+    };
+    let mut big = cfg(3, 52);
+    big.trials_per_task = 32; // bigger budget: hits downgrade to re-search
+    let run_warm = |cache: Arc<TuneCache>| {
+        let mut tuner = AutoTuner::from_config(&big, presets::rtx_2060()).unwrap();
+        tuner.attach_cache(cache);
+        tuner.tune(&tasks(6)).unwrap()
+    };
+    let a = run_warm(reload(&seed_cache));
+    let b = run_warm(reload(&seed_cache));
+    assert_eq!(fingerprint(&a), fingerprint(&b));
+    assert!(a.tasks.iter().any(|t| t.warm_seeds > 0 || !t.cache_hit));
+}
