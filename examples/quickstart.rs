@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         ..TuneConfig::default()
     };
     let model = moses::costmodel::CostModel::with_params(exp.backend_arc()?, pretrained);
-    let mut tuner = AutoTuner::with_model(&cfg, presets::jetson_tx2(), model);
+    let mut tuner = AutoTuner::builder(presets::jetson_tx2()).config(&cfg).model(model).build()?;
     let session = tuner.tune(&[task])?;
 
     let r = &session.tasks[0];

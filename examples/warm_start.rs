@@ -43,8 +43,8 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     let mut run = |label: &str, device: DeviceArch, seed: u64| -> anyhow::Result<Session> {
-        let mut tuner = AutoTuner::from_config(&cfg(seed), device)?;
-        tuner.attach_cache(cache.clone());
+        let mut tuner =
+            AutoTuner::builder(device).config(&cfg(seed)).cache(cache.clone()).build()?;
         let s = tuner.tune(&tasks)?;
         table.row(vec![
             label.to_string(),
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     // seeded run additionally spends up to `seed_probe` measurements
     // per task verifying cross-device seeds — the measurement counts
     // below make that visible.)
-    let mut unseeded = AutoTuner::from_config(&cfg(3), presets::jetson_tx2())?;
+    let mut unseeded = AutoTuner::builder(presets::jetson_tx2()).config(&cfg(3)).build()?;
     let cold_tx2 = unseeded.tune(&tasks)?;
     println!(
         "\ntx2 seeded  : {:.3} ms after {:.0} virtual s ({} measurements, incl. seed probes)\n\

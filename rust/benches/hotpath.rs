@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use moses::coordinator::{AutoTuner, BackendKind, TuneConfig};
+use moses::coordinator::{AutoTuner, BackendKind, SnapshotCell, TuneConfig};
 use moses::costmodel::{layout, CostModel, Mask, RustBackend, XlaBackend};
 use moses::device::{presets, DeviceSim};
 use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
@@ -68,8 +68,31 @@ fn main() {
     let mut evo = EvolutionarySearch::new(sub.clone());
     evo.population = 64;
     evo.generations = 3;
+    let rust_view = rust_model.predictor();
     b.run("evolutionary_propose_8of64x3", || {
-        evo.propose(8, &rust_model, &|_| false, &mut rng, &mut || {})
+        evo.propose(8, &rust_view, &|_| false, &mut rng, &mut || {})
+    });
+
+    // --- snapshot publish/pin (the zero-copy prediction plane) ------------
+    // One learner publish followed by 4 worker pins + view construction,
+    // exactly the per-round round trip of a `--jobs 4` wave.  The cost
+    // is pointer swaps under a mutex — independent of the ~350k-float
+    // parameter count (contrast with the per-round deep copy this
+    // replaced, which scaled with N_PARAMS).
+    let publish_state = rust_model.shared_state();
+    let snap_cell = SnapshotCell::new(publish_state.clone());
+    let snap_backend = Arc::new(RustBackend { pred_batch: 64, train_batch: 64 });
+    let mut snap_version = 0u64;
+    b.run("snapshot_publish_pin_jobs4", || {
+        snap_version += 1;
+        snap_cell.publish(snap_version, publish_state.clone());
+        for _ in 0..4 {
+            let pinned = snap_cell.wait_for(snap_version).expect("live cell");
+            std::hint::black_box(moses::costmodel::Predictor::new(
+                snap_backend.clone(),
+                pinned,
+            ));
+        }
     });
 
     // --- tunecache (the check-before-search hot path) ---------------------
@@ -182,7 +205,10 @@ fn main() {
             jobs,
             ..TuneConfig::default()
         };
-        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).expect("tuner");
+        let mut tuner = AutoTuner::builder(presets::rtx_2060())
+            .config(&cfg)
+            .build()
+            .expect("tuner");
         tuner.tune(&session_tasks).expect("session").total_measurements()
     };
     let (r1, _) = b.run_once("tune_session_8tasks_jobs1", || tune_session(1));

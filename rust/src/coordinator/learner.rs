@@ -5,7 +5,7 @@
 //! Moses adapter (mask refresh + variant weight decay).  Search workers
 //! never touch it directly — they emit [`LearnBatch`]es (replay samples
 //! plus an optional training batch) and read back cheap versioned
-//! snapshots of the model *parameters*:
+//! [`crate::costmodel::ModelState`] snapshots:
 //!
 //! * **inline mode** (`--jobs 1`): the driver calls [`Learner::absorb`]
 //!   synchronously between pipeline stages, and stages predict against
@@ -14,10 +14,12 @@
 //!   on its own thread, consuming [`ToLearner`] messages from a channel.
 //!   Within a wave of concurrently-tuned tasks it applies each round's
 //!   batches in ascending task order (a deterministic total order
-//!   independent of thread scheduling), then publishes a new parameter
-//!   snapshot through the [`SnapshotCell`]; workers block on the version
-//!   they need before proposing the next round.  Fixed `(seed, jobs)`
-//!   therefore reproduces bit-identical sessions.
+//!   independent of thread scheduling), then publishes a new
+//!   `Arc<ModelState>` snapshot through the [`SnapshotCell`] — an O(1)
+//!   pointer swap, never a parameter copy; workers block on the version
+//!   they need, pin the snapshot (another pointer clone), and predict
+//!   through a [`crate::costmodel::Predictor`] view.  Fixed
+//!   `(seed, jobs)` therefore reproduces bit-identical sessions.
 //!
 //! Virtual-time charges incurred on the learning plane (gradient steps,
 //! ξ saliency refreshes) are attributed to the *originating task's*
@@ -29,7 +31,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::costmodel::{layout, CostModel, Mask};
+use crate::costmodel::{layout, CostModel, Mask, ModelState, Predictor};
 use crate::device::VirtualClock;
 use crate::program::N_FEATURES;
 use crate::transfer::MosesAdapter;
@@ -81,13 +83,17 @@ pub(crate) struct Learner {
     best_gflops_per_task: Vec<f64>,
     /// Learning-plane virtual-time charges, attributed per task.
     task_clocks: Vec<VirtualClock>,
+    /// All-ones mask for adapter-less strategies, built once: handing
+    /// it to a train round is an `Arc` clone, not an N_PARAMS alloc.
+    full_mask: Mask,
 }
 
 /// Everything but the backend handle — `Send`, so a learner can be
 /// rebuilt on the actor thread (see [`crate::costmodel::ModelState`]).
+/// Cloning is cheap: the model state and mask are `Arc`-shared.
 #[derive(Clone)]
 pub(crate) struct LearnerState {
-    pub model: crate::costmodel::ModelState,
+    pub model: ModelState,
     pub adapter: Option<MosesAdapter>,
     pub replay: Vec<Sample>,
     pub best_gflops_per_task: Vec<f64>,
@@ -103,6 +109,7 @@ impl Learner {
             replay: Vec::new(),
             best_gflops_per_task: Vec::new(),
             task_clocks: Vec::new(),
+            full_mask: Mask::all_ones(layout::N_PARAMS),
         }
     }
 
@@ -118,6 +125,7 @@ impl Learner {
             replay: state.replay,
             best_gflops_per_task: state.best_gflops_per_task,
             task_clocks: state.task_clocks,
+            full_mask: Mask::all_ones(layout::N_PARAMS),
         }
     }
 
@@ -155,9 +163,17 @@ impl Learner {
         self.task_clocks.get(ord).cloned().unwrap_or_default()
     }
 
-    /// A cheap read-snapshot of the model parameters.
-    pub fn snapshot_params(&self) -> Vec<f32> {
-        self.model.params.clone()
+    /// The current model state as a shareable snapshot handle (O(1)).
+    pub fn snapshot_state(&self) -> Arc<ModelState> {
+        self.model.shared_state()
+    }
+
+    /// A read-only prediction view pinned to the CURRENT model state
+    /// (O(1)).  Inline-mode drivers take a fresh view per stage so
+    /// predictions track the live model exactly as the sequential loop
+    /// did.
+    pub fn predictor(&self) -> Predictor {
+        self.model.predictor()
     }
 
     fn ensure_task(&mut self, ord: usize) {
@@ -211,12 +227,12 @@ impl Learner {
         let denom = self.best_gflops_per_task[ord].max(1e-9) as f32;
         let y_norm: Vec<f32> = train.y_raw.iter().map(|g| g / denom).collect();
         let (mask, wd) = if let Some(ad) = self.adapter.as_mut() {
-            if ad.maybe_refresh(&self.model, &train.x, &y_norm)? {
+            if ad.maybe_refresh(&self.model.predictor(), &train.x, &y_norm)? {
                 self.task_clocks[ord].charge_xi();
             }
             (ad.mask().clone(), ad.weight_decay())
         } else {
-            (Mask::all_ones(layout::N_PARAMS), 0.0)
+            (self.full_mask.clone(), 0.0)
         };
         let (tx, ty) = self.training_arrays();
         // Bill one clock charge per actual gradient step: the backend's
@@ -239,34 +255,36 @@ impl Learner {
 
 struct SnapState {
     version: u64,
-    params: Arc<Vec<f32>>,
+    model: Arc<ModelState>,
     poisoned: bool,
 }
 
-/// Versioned read-snapshot of the learner's model parameters.  The
-/// learner publishes after every round sweep; workers block until the
-/// version covering all batches their next prediction must observe.
-pub(crate) struct SnapshotCell {
+/// Versioned read-snapshot of the learner's model state.  The learner
+/// publishes an `Arc<ModelState>` after every round sweep — an O(1)
+/// pointer swap regardless of parameter count; workers block until the
+/// version covering all batches their next prediction must observe,
+/// then pin the snapshot with another pointer clone.  This is the
+/// publish/pin primitive of the zero-copy prediction plane (the
+/// `snapshot_publish_pin` hotpath bench measures the round trip).
+pub struct SnapshotCell {
     state: Mutex<SnapState>,
     cv: Condvar,
 }
 
 impl SnapshotCell {
-    pub fn new(params: Vec<f32>) -> SnapshotCell {
+    /// A cell primed with version 0 holding `model`.
+    pub fn new(model: Arc<ModelState>) -> SnapshotCell {
         SnapshotCell {
-            state: Mutex::new(SnapState {
-                version: 0,
-                params: Arc::new(params),
-                poisoned: false,
-            }),
+            state: Mutex::new(SnapState { version: 0, model, poisoned: false }),
             cv: Condvar::new(),
         }
     }
 
-    pub fn publish(&self, version: u64, params: Vec<f32>) {
+    /// Publish `model` as snapshot `version` and wake every waiter.
+    pub fn publish(&self, version: u64, model: Arc<ModelState>) {
         let mut st = self.state.lock().expect("snapshot cell poisoned");
         st.version = version;
-        st.params = Arc::new(params);
+        st.model = model;
         drop(st);
         self.cv.notify_all();
     }
@@ -279,9 +297,10 @@ impl SnapshotCell {
         self.cv.notify_all();
     }
 
-    /// Block until the published version reaches `v`.  `None` means the
-    /// learner failed and no further snapshot will ever arrive.
-    pub fn wait_for(&self, v: u64) -> Option<Arc<Vec<f32>>> {
+    /// Block until the published version reaches `v`, then pin that
+    /// snapshot (an `Arc` clone).  `None` means the learner failed and
+    /// no further snapshot will ever arrive.
+    pub fn wait_for(&self, v: u64) -> Option<Arc<ModelState>> {
         let mut st = self.state.lock().expect("snapshot cell poisoned");
         while st.version < v && !st.poisoned {
             st = self.cv.wait(st).expect("snapshot cell poisoned");
@@ -289,7 +308,7 @@ impl SnapshotCell {
         if st.poisoned {
             None
         } else {
-            Some(st.params.clone())
+            Some(st.model.clone())
         }
     }
 }
@@ -373,7 +392,7 @@ pub(crate) fn run_learner_actor(
             }
             live = survivors;
             version += 1;
-            cell.publish(version, learner.snapshot_params());
+            cell.publish(version, learner.snapshot_state());
             seq += 1;
         }
         let _ = wave_done.send(version);
@@ -435,28 +454,50 @@ mod tests {
             samples: vec![sample(0, 4.0), sample(0, 6.0)],
             train: Some(TrainBatch { x, y_raw: vec![4.0, 6.0] }),
         };
-        let before = l.snapshot_params();
+        let before = l.model().params().to_vec();
+        let v_before = l.snapshot_state().version();
         l.absorb(batch, &mut rng).unwrap();
-        assert_ne!(before, l.snapshot_params(), "training must move the parameters");
+        assert_ne!(before, l.model().params(), "training must move the parameters");
+        assert!(l.snapshot_state().version() > v_before, "updates must bump the version");
         assert!(l.task_clock(0).model_updates() > 0);
         assert_eq!(l.task_clock(1).model_updates(), 0);
         l.reset_task_clocks();
         assert_eq!(l.task_clock(0).model_updates(), 0);
     }
 
+    fn state_of(v: f32) -> Arc<ModelState> {
+        Arc::new(ModelState::from_params(vec![v; layout::N_PARAMS]))
+    }
+
     #[test]
     fn snapshot_cell_versions_and_poison() {
-        let cell = Arc::new(SnapshotCell::new(vec![1.0]));
-        assert_eq!(cell.wait_for(0).unwrap()[0], 1.0);
+        let cell = Arc::new(SnapshotCell::new(state_of(1.0)));
+        assert_eq!(cell.wait_for(0).unwrap().params()[0], 1.0);
         let c2 = cell.clone();
-        let h = std::thread::spawn(move || c2.wait_for(2).map(|p| p[0]));
-        cell.publish(1, vec![2.0]);
-        cell.publish(2, vec![3.0]);
+        let h = std::thread::spawn(move || c2.wait_for(2).map(|p| p.params()[0]));
+        cell.publish(1, state_of(2.0));
+        cell.publish(2, state_of(3.0));
         assert_eq!(h.join().unwrap(), Some(3.0));
         let c3 = cell.clone();
         let h = std::thread::spawn(move || c3.wait_for(99));
         cell.poison();
         assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn snapshot_pin_is_pointer_identical_until_republish() {
+        let published = state_of(1.0);
+        let cell = SnapshotCell::new(published.clone());
+        // Publish/pin never copies the parameters: both pins alias the
+        // published storage exactly.
+        let a = cell.wait_for(0).unwrap();
+        let b = cell.wait_for(0).unwrap();
+        assert!(Arc::ptr_eq(&a, &published) && Arc::ptr_eq(&b, &published));
+        cell.publish(1, state_of(2.0));
+        let c = cell.wait_for(1).unwrap();
+        assert!(!Arc::ptr_eq(&c, &published));
+        // The earlier pin still reads the old parameters.
+        assert_eq!(a.params()[0], 1.0);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! cost-model adaptation per task, with virtual-time accounting — the
 //! Ansor tuning loop of paper §2.2 with Moses' §3.6 working flow:
 //!
-//! 1. initialize the model per the [`Strategy`] (random / pre-trained);
+//! 1. initialize the model per the [`crate::transfer::Strategy`]
+//!    (random / pre-trained);
 //! 2. per task and round, the evolutionary engine proposes predicted
 //!    top-k candidates;
 //! 3. measured rounds: run them on the (simulated) device, add records
@@ -15,17 +16,21 @@
 //!    total virtual search time.
 //!
 //! Since the staged-pipeline refactor these responsibilities live in
-//! three layers: [`pipeline`] (per-task stages: warm-start → propose →
-//! measure → learn-batch emission → finalize), [`learner`] (the shared
-//! learning plane: cost model, replay buffer, Moses adapter, snapshot
-//! publication), and [`tuner`] (the driver — sequential inline at
-//! `--jobs 1`, wave-parallel worker threads plus a learner actor at
-//! `--jobs N`).
+//! three layers: `pipeline` (per-task stages: warm-start → propose →
+//! measure → learn-batch emission → finalize), `learner` (the shared
+//! learning plane: cost model, replay buffer, Moses adapter, publishing
+//! [`crate::costmodel::ModelState`] snapshots through the
+//! [`SnapshotCell`]), and `tuner` (the driver — sequential inline at
+//! `--jobs 1`, wave-parallel worker threads pinning read-only
+//! [`crate::costmodel::Predictor`] views at `--jobs N`).  Sessions are
+//! configured through [`AutoTuner::builder`], which validates knob
+//! combinations at build time and serializes to [`TuneConfig`].
 
 mod learner;
 mod pipeline;
 mod session;
 mod tuner;
 
+pub use learner::SnapshotCell;
 pub use session::{Session, TaskResult};
-pub use tuner::{AutoTuner, BackendKind, TuneConfig};
+pub use tuner::{AutoTuner, AutoTunerBuilder, BackendKind, TuneConfig};

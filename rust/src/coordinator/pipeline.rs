@@ -15,7 +15,8 @@
 //!   search and the probe measurements become the stage's
 //!   [`LearnBatch`].
 //! * **propose + measure** ([`TaskPipeline::run_round`]) asks the search
-//!   engine for candidates scored against a read-only model view,
+//!   engine for candidates scored against a read-only [`Predictor`]
+//!   view pinned to a model snapshot,
 //!   measures them (or, on AC-terminated rounds, only the predicted
 //!   top), and emits the round's `LearnBatch`.
 //! * **learn** happens on the learning plane ([`super::learner`]) — the
@@ -26,8 +27,9 @@
 //!
 //! The split is what lets sessions overlap cheap cost-model work with
 //! expensive measurement across tasks: stages only communicate through
-//! `LearnBatch`es and model snapshots, so N pipelines drive one shared
-//! learner from N threads (`--jobs N`).
+//! `LearnBatch`es and `Arc`-shared model snapshots (pinning one is a
+//! pointer clone — see [`crate::costmodel::ModelState`]), so N
+//! pipelines drive one shared learner from N threads (`--jobs N`).
 
 use std::sync::Arc;
 
@@ -36,7 +38,7 @@ use anyhow::Result;
 use super::learner::{LearnBatch, Sample, TrainBatch};
 use super::session::TaskResult;
 use super::tuner::TuneConfig;
-use crate::costmodel::CostModel;
+use crate::costmodel::Predictor;
 use crate::device::{DeviceSim, VirtualClock};
 use crate::program::{featurize, Geometry, Schedule, Subgraph, TensorProgram, N_FEATURES};
 use crate::search::{EvolutionarySearch, RandomSearch, SearchPolicy};
@@ -168,6 +170,19 @@ impl TaskPipeline {
         }
     }
 
+    /// Serve the pending post-update AC observation, if one is due: the
+    /// last measured batch is re-scored under `model` (which by now
+    /// includes the learner's update for it) and handed to the AC.
+    fn flush_pending_observe(&mut self, model: &Predictor) -> Result<()> {
+        if let Some((bx, n)) = self.pending_observe.take() {
+            if let Some(a) = self.ac.as_mut() {
+                a.observe_scored(model, &bx, n)?;
+                self.clock.charge_query();
+            }
+        }
+        Ok(())
+    }
+
     /// The task's own deterministic stream (inline-mode learning draws
     /// from it so the staged path reproduces the sequential one).
     pub fn rng_mut(&mut self) -> &mut Rng {
@@ -262,7 +277,9 @@ impl TaskPipeline {
         // session's best immediately), then hand ALL seeds to the
         // evolutionary engine's population.  Same-workload cross-device
         // seeds rank ahead of similar-workload neighbor seeds in the
-        // probe order — they carry no shape mismatch.
+        // probe order — they carry no shape mismatch — and the neighbor
+        // tier arrives distance-weighted from `warmstart::plan` (closest
+        // neighbor's best record first).
         let mut samples = Vec::new();
         let probe_order: Vec<Schedule> =
             warm_seeds.iter().chain(neighbor_seeds.iter()).copied().collect();
@@ -295,17 +312,11 @@ impl TaskPipeline {
     /// predicted top (AC-terminated rounds).  Returns the round's
     /// `LearnBatch`, or `Exhausted` once the budget is spent or the
     /// schedule space ran dry.
-    pub fn run_round(&mut self, model: &CostModel) -> Result<StageOutput> {
+    pub fn run_round(&mut self, model: &Predictor) -> Result<StageOutput> {
         // The AC watches post-update prediction stability on the last
         // measured batch; the learner's update for it is visible in
         // `model` by the time this stage runs.
-        if let Some((bx, n)) = self.pending_observe.take() {
-            if let Some(a) = self.ac.as_mut() {
-                let preds = model.predict(&bx, n)?;
-                self.clock.charge_query();
-                a.observe_batch(&preds);
-            }
-        }
+        self.flush_pending_observe(model)?;
         if self.round >= self.rounds {
             return Ok(StageOutput::Exhausted);
         }
@@ -443,16 +454,10 @@ impl TaskPipeline {
     /// measurement (TVM always builds/measures the final choice), apply
     /// the default-schedule fallback, and commit measured outcomes plus
     /// the final choice to the tune cache.
-    pub fn finalize(&mut self, model: &CostModel) -> Result<TaskResult> {
+    pub fn finalize(&mut self, model: &Predictor) -> Result<TaskResult> {
         // A trailing AC observation (from the last measured round) keeps
         // the query accounting aligned with the sequential loop.
-        if let Some((bx, n)) = self.pending_observe.take() {
-            if let Some(a) = self.ac.as_mut() {
-                let preds = model.predict(&bx, n)?;
-                self.clock.charge_query();
-                a.observe_batch(&preds);
-            }
-        }
+        self.flush_pending_observe(model)?;
         if !self.pending.is_empty() {
             let mut cx = Vec::with_capacity(self.pending.len() * N_FEATURES);
             for s in &self.pending {
@@ -524,7 +529,7 @@ impl TaskPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::costmodel::RustBackend;
+    use crate::costmodel::{CostModel, RustBackend};
     use crate::device::presets;
     use crate::program::SubgraphKind;
 
@@ -540,11 +545,12 @@ mod tests {
         }
     }
 
-    fn model() -> CostModel {
+    fn model() -> Predictor {
         CostModel::new(
             Arc::new(RustBackend { pred_batch: 64, train_batch: 64 }),
             &mut Rng::new(9),
         )
+        .predictor()
     }
 
     #[test]

@@ -6,28 +6,37 @@
 //!
 //! * `jobs == 1` — **inline**: tasks run one after another on the
 //!   calling thread, the learner absorbs each stage's batch
-//!   synchronously, and predictions read the live model.  This is
-//!   exactly the classic sequential tuning loop.
+//!   synchronously, and predictions read the live model through a
+//!   fresh [`Predictor`] view per stage.  This is exactly the classic
+//!   sequential tuning loop.
 //! * `jobs > 1` — **parallel**: tasks run in sequential *waves* of
 //!   `jobs` worker threads driving one learner actor.  Workers overlap
 //!   their search + measurement work; the learner applies each round's
-//!   batches in ascending task order and publishes versioned parameter
-//!   snapshots that workers pin their next predictions to.  The
-//!   schedule is a deterministic function of `(seed, jobs, tasks)`, so
-//!   parallel sessions are exactly reproducible.
+//!   batches in ascending task order and publishes versioned
+//!   `Arc<ModelState>` snapshots that workers pin their next
+//!   predictions to — publish and pin are pointer swaps, so the hot
+//!   prediction path never copies the parameter vector.  The schedule
+//!   is a deterministic function of `(seed, jobs, tasks)`, so parallel
+//!   sessions are exactly reproducible.
+//!
+//! Tuners are constructed through [`AutoTuner::builder`], which
+//! validates incompatible knob combinations (XLA backend with worker
+//! threads, pretrain strategies without a checkpoint, empty budgets) at
+//! build time instead of deep inside a running session.  [`TuneConfig`]
+//! remains the flat serialized form the builder produces.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::learner::{
     run_learner_actor, Learner, LearnerConfig, LearnerState, SnapshotCell, ToLearner,
 };
 use super::pipeline::{StageOutput, TaskPipeline};
 use super::session::{Session, TaskResult};
-use crate::costmodel::{layout, Backend, CostModel, RustBackend, XlaBackend};
+use crate::costmodel::{layout, Backend, CostModel, Predictor, RustBackend, XlaBackend};
 use crate::device::{DeviceArch, DeviceSim, SessionTiming, VirtualClock};
 use crate::program::Subgraph;
 use crate::runtime::Engine;
@@ -58,6 +67,12 @@ impl BackendKind {
 }
 
 /// Tuning configuration (one model × one device × one strategy).
+///
+/// This is the *serialized* form of a tuner: flat, `Clone`, and stable
+/// across CLI flags and experiment grids.  Construct tuners through
+/// [`AutoTuner::builder`] (which produces and validates one of these);
+/// pass an existing config through
+/// [`AutoTunerBuilder::config`] to migrate mechanically.
 #[derive(Debug, Clone)]
 pub struct TuneConfig {
     /// Candidate budget per task (TVM's "trials").
@@ -135,9 +150,212 @@ impl TuneConfig {
     }
 }
 
+/// Builder for [`AutoTuner`]: typed knobs with build-time validation.
+///
+/// ```no_run
+/// # fn main() -> anyhow::Result<()> {
+/// use moses::coordinator::AutoTuner;
+/// use moses::device::presets;
+/// use moses::transfer::Strategy;
+///
+/// let mut tuner = AutoTuner::builder(presets::jetson_tx2())
+///     .trials(64)
+///     .strategy(Strategy::AnsorRandom)
+///     .jobs(4)
+///     .build()?;
+/// # Ok(())
+/// # }
+/// ```
+///
+/// Incompatible combinations (worker threads on the thread-pinned XLA
+/// backend, a pretrain strategy without a checkpoint or in-memory
+/// model, zero budgets, a non-finite neighbor radius) are rejected by
+/// [`AutoTunerBuilder::build`] with an error — never a panic deep
+/// inside a running session.
+#[must_use = "call .build() to construct the tuner"]
+pub struct AutoTunerBuilder {
+    target: DeviceArch,
+    cfg: TuneConfig,
+    model: Option<CostModel>,
+    cache: Option<Arc<TuneCache>>,
+}
+
+impl AutoTunerBuilder {
+    /// Start from an existing serialized [`TuneConfig`] (CLI flags,
+    /// experiment grids) instead of the defaults.  This REPLACES the
+    /// builder's whole config, so call it first: typed setters invoked
+    /// before it are discarded, setters invoked after it override
+    /// individual fields of `cfg`.
+    pub fn config(mut self, cfg: &TuneConfig) -> Self {
+        self.cfg = cfg.clone();
+        self
+    }
+
+    /// Candidate budget per task (TVM's "trials").
+    pub fn trials(mut self, trials: usize) -> Self {
+        self.cfg.trials_per_task = trials;
+        self
+    }
+
+    /// Candidates measured per round (TVM measure batch).
+    pub fn measure_batch(mut self, batch: usize) -> Self {
+        self.cfg.measure_batch = batch;
+        self
+    }
+
+    /// Cost-model initialization/update strategy.
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.cfg.strategy = strategy;
+        self
+    }
+
+    /// RNG seed; sessions are bit-reproducible per `(seed, jobs)`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Compute backend for the cost model.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Concurrent task pipelines per session (rust backend only for
+    /// `jobs > 1` — validated at build time).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.cfg.jobs = jobs;
+        self
+    }
+
+    /// Evolutionary engine population/generation parameters.
+    pub fn search_params(mut self, population: usize, generations: usize) -> Self {
+        self.cfg.population = population;
+        self.cfg.generations = generations;
+        self
+    }
+
+    /// Nearest-neighbor warm-start radius (`None` disables the tier).
+    pub fn nn(mut self, radius: Option<f64>) -> Self {
+        self.cfg.nn_radius = radius;
+        self
+    }
+
+    /// Neighbor workloads consulted per nearest-neighbor query.
+    pub fn nn_k(mut self, k: usize) -> Self {
+        self.cfg.nn_k = k;
+        self
+    }
+
+    /// Pre-trained source checkpoint to load at build time (required by
+    /// pretrain strategies unless an in-memory [`AutoTunerBuilder::model`]
+    /// is supplied).
+    pub fn pretrained(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.pretrained_path = Some(path.into());
+        self
+    }
+
+    /// Rust-backend batch geometry (predict rows, train rows).
+    pub fn rust_batches(mut self, pred: usize, train: usize) -> Self {
+        self.cfg.rust_pred_batch = pred;
+        self.cfg.rust_train_batch = train;
+        self
+    }
+
+    /// Use an externally-constructed cost model (tests, checkpoints
+    /// already in memory) instead of initializing one per the strategy.
+    pub fn model(mut self, model: CostModel) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    /// Attach a shared tuning-record store: tasks are checked against it
+    /// before searching (an exact hit costs zero measured trials), every
+    /// measured outcome is committed back, and on a miss records from
+    /// other devices seed the evolutionary population.
+    pub fn cache(mut self, cache: Arc<TuneCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Validate the configuration and construct the tuner.
+    pub fn build(self) -> Result<AutoTuner> {
+        let cfg = &self.cfg;
+        anyhow::ensure!(cfg.trials_per_task >= 1, "trials_per_task must be at least 1");
+        anyhow::ensure!(cfg.measure_batch >= 1, "measure_batch must be at least 1");
+        anyhow::ensure!(
+            cfg.population >= 2,
+            "evolutionary population must hold at least 2 members (got {})",
+            cfg.population
+        );
+        anyhow::ensure!(cfg.jobs >= 1, "jobs must be at least 1");
+        anyhow::ensure!(
+            cfg.jobs == 1 || cfg.backend == BackendKind::Rust,
+            "--jobs {} requires the rust cost-model backend: the XLA/PJRT client \
+             is pinned to its creating thread",
+            cfg.jobs
+        );
+        if let Some(r) = cfg.nn_radius {
+            anyhow::ensure!(
+                r.is_finite() && r >= 0.0,
+                "nearest-neighbor radius must be a non-negative finite number (got {r})"
+            );
+        }
+        anyhow::ensure!(
+            cfg.rust_pred_batch >= 1 && cfg.rust_train_batch >= 1,
+            "rust backend batch geometry must be non-zero"
+        );
+
+        let mut rng = Rng::new(cfg.seed);
+        let model = match self.model {
+            Some(model) => model,
+            None => {
+                let backend: Arc<dyn Backend> = match cfg.backend {
+                    // The configured geometry, so inline (`--jobs 1`)
+                    // training partitions minibatches exactly like the
+                    // parallel learner actor rebuilding its backend from
+                    // the same fields.
+                    BackendKind::Rust => Arc::new(RustBackend {
+                        pred_batch: cfg.rust_pred_batch,
+                        train_batch: cfg.rust_train_batch,
+                    }),
+                    BackendKind::Xla => {
+                        let dir = Engine::default_dir();
+                        Arc::new(XlaBackend { engine: Arc::new(Engine::load(&dir)?) })
+                    }
+                };
+                let pretrained: Option<Vec<f32>> = if cfg.strategy.uses_pretrained() {
+                    let Some(path) = cfg.pretrained_path.as_ref() else {
+                        anyhow::bail!(
+                            "strategy '{}' requires a pre-trained checkpoint: supply \
+                             .pretrained(path) or an in-memory .model(..)",
+                            cfg.strategy.name()
+                        );
+                    };
+                    Some(layout::load_checkpoint(path)?)
+                } else {
+                    None
+                };
+                transfer::init_model(&cfg.strategy, backend, pretrained.as_deref(), &mut rng)
+            }
+        };
+        let adapter = match &cfg.strategy {
+            Strategy::Moses(c) => Some(MosesAdapter::new(*c)),
+            _ => None,
+        };
+        Ok(AutoTuner {
+            config: self.cfg.clone(),
+            sim: DeviceSim::new(self.target),
+            rng,
+            cache: self.cache,
+            learner: Some(Learner::new(self.cfg.learner_config(), model, adapter)),
+        })
+    }
+}
+
 /// The tuner for one (device, strategy) pair.  Reusable across models;
 /// the learner (cost model + replay) persists across `tune` calls
-/// (continual learning).
+/// (continual learning).  Construct via [`AutoTuner::builder`].
 pub struct AutoTuner {
     pub config: TuneConfig,
     sim: DeviceSim,
@@ -151,68 +369,14 @@ pub struct AutoTuner {
 }
 
 impl AutoTuner {
-    /// Build a tuner; loads the backend and (if required) the
-    /// pre-trained checkpoint.
-    pub fn from_config(config: &TuneConfig, target: DeviceArch) -> Result<AutoTuner> {
-        let backend: Arc<dyn Backend> = match config.backend {
-            // The configured geometry, so inline (`--jobs 1`) training
-            // partitions minibatches exactly like the parallel learner
-            // actor rebuilding its backend from the same fields.
-            BackendKind::Rust => Arc::new(RustBackend {
-                pred_batch: config.rust_pred_batch,
-                train_batch: config.rust_train_batch,
-            }),
-            BackendKind::Xla => {
-                let dir = Engine::default_dir();
-                Arc::new(XlaBackend { engine: Arc::new(Engine::load(&dir)?) })
-            }
-        };
-        let mut rng = Rng::new(config.seed);
-        let pretrained: Option<Vec<f32>> = if config.strategy.uses_pretrained() {
-            let path = config
-                .pretrained_path
-                .as_ref()
-                .context("strategy requires --pretrained checkpoint")?;
-            Some(layout::load_checkpoint(path)?)
-        } else {
-            None
-        };
-        let model =
-            transfer::init_model(&config.strategy, backend, pretrained.as_deref(), &mut rng);
-        Ok(AutoTuner::assemble(config, target, model, rng))
-    }
-
-    /// Build with an externally-constructed model (tests, custom
-    /// checkpoints already in memory).
-    pub fn with_model(config: &TuneConfig, target: DeviceArch, model: CostModel) -> AutoTuner {
-        AutoTuner::assemble(config, target, model, Rng::new(config.seed))
-    }
-
-    fn assemble(
-        config: &TuneConfig,
-        target: DeviceArch,
-        model: CostModel,
-        rng: Rng,
-    ) -> AutoTuner {
-        let adapter = match &config.strategy {
-            Strategy::Moses(cfg) => Some(MosesAdapter::new(*cfg)),
-            _ => None,
-        };
-        AutoTuner {
-            config: config.clone(),
-            sim: DeviceSim::new(target),
-            rng,
+    /// Start building a tuner for `target` with default knobs.
+    pub fn builder(target: DeviceArch) -> AutoTunerBuilder {
+        AutoTunerBuilder {
+            target,
+            cfg: TuneConfig::default(),
+            model: None,
             cache: None,
-            learner: Some(Learner::new(config.learner_config(), model, adapter)),
         }
-    }
-
-    /// Attach a shared tuning-record store: tasks are checked against it
-    /// before searching (an exact hit costs zero measured trials), every
-    /// measured outcome is committed back, and on a miss records from
-    /// other devices seed the evolutionary population.
-    pub fn attach_cache(&mut self, cache: Arc<TuneCache>) {
-        self.cache = Some(cache);
     }
 
     /// Access the underlying cost model (diagnostics).
@@ -231,6 +395,8 @@ impl AutoTuner {
         if jobs <= 1 {
             self.tune_inline(tasks)
         } else {
+            // Backstop for configs mutated after build(): the builder
+            // already rejects this combination.
             anyhow::ensure!(
                 self.config.backend == BackendKind::Rust,
                 "--jobs {jobs} requires the rust cost-model backend: the XLA/PJRT client \
@@ -252,7 +418,8 @@ impl AutoTuner {
     }
 
     /// The classic sequential loop: one pipeline at a time, the learner
-    /// absorbing synchronously, predictions reading the live model.
+    /// absorbing synchronously, every stage predicting through a fresh
+    /// view of the live model.
     fn tune_inline(&mut self, tasks: &[Subgraph]) -> Result<Session> {
         let learner = self.learner.as_mut().expect("learner state present");
         learner.reset_task_clocks();
@@ -274,13 +441,16 @@ impl AutoTuner {
                 StageOutput::Learn(batch) => {
                     learner.absorb(batch, pipe.rng_mut())?;
                     loop {
-                        match pipe.run_round(learner.model())? {
+                        // A fresh O(1) view per round: inline predictions
+                        // track the live model exactly as the sequential
+                        // loop did.
+                        match pipe.run_round(&learner.predictor())? {
                             StageOutput::Learn(b) => learner.absorb(b, pipe.rng_mut())?,
                             StageOutput::Exhausted => break,
                             StageOutput::Complete(_) => unreachable!("rounds never complete"),
                         }
                     }
-                    pipe.finalize(learner.model())?
+                    pipe.finalize(&learner.predictor())?
                 }
                 StageOutput::Exhausted => unreachable!("warm start never exhausts"),
             };
@@ -319,7 +489,8 @@ impl AutoTuner {
 
         let (tx, rx) = mpsc::channel::<ToLearner>();
         let (done_tx, done_rx) = mpsc::channel::<u64>();
-        let cell = SnapshotCell::new(state.model.params.clone());
+        // Version 0: the pre-session state, shared by pointer.
+        let cell = SnapshotCell::new(Arc::new(state.model.clone()));
         let cell = &cell;
 
         let learner_state: Option<LearnerState> = std::thread::scope(|s| {
@@ -459,7 +630,9 @@ fn set_err(slot: &mut Option<anyhow::Error>, e: anyhow::Error) {
 
 /// One `--jobs` worker: drives a single task's pipeline, streaming its
 /// batches to the learner actor and pinning every prediction to the
-/// snapshot version the deterministic wave schedule dictates.
+/// snapshot version the deterministic wave schedule dictates.  Pinning
+/// builds a [`Predictor`] from the published `Arc<ModelState>` — two
+/// pointer clones, independent of the parameter count.
 #[allow(clippy::too_many_arguments)]
 fn run_task_worker(
     task: Subgraph,
@@ -515,10 +688,10 @@ fn run_task_worker(
         // Version `wave_base + sent` covers exactly the batches (ours
         // and every wave sibling's) that this round's predictions must
         // observe under the round-major deterministic order.
-        let Some(params) = cell.wait_for(wave_base + guard.sent as u64) else {
+        let Some(snapshot) = cell.wait_for(wave_base + guard.sent as u64) else {
             anyhow::bail!("learner failed; no further model snapshots");
         };
-        let view = CostModel::with_params(backend.clone(), params.as_ref().clone());
+        let view = Predictor::new(backend.clone(), snapshot);
         match pipe.run_round(&view)? {
             StageOutput::Learn(batch) => {
                 let shuffle_rng = pipe.fork_shuffle_rng();
@@ -529,7 +702,7 @@ fn run_task_worker(
             StageOutput::Complete(_) => unreachable!("rounds never complete"),
         }
     }
-    let Some(params) = cell.wait_for(wave_base + guard.sent as u64) else {
+    let Some(snapshot) = cell.wait_for(wave_base + guard.sent as u64) else {
         anyhow::bail!("learner failed; no further model snapshots");
     };
     // No more batches will come: release the learner's round barrier
@@ -537,7 +710,7 @@ fn run_task_worker(
     // (one measurement + cache commits).  The needed snapshot is
     // already in hand.
     guard.finish();
-    let view = CostModel::with_params(backend, params.as_ref().clone());
+    let view = Predictor::new(backend, snapshot);
     let result = pipe.finalize(&view)?;
     Ok((result, pipe.clock()))
 }
@@ -577,7 +750,8 @@ mod tests {
     #[test]
     fn ansor_random_improves_over_default() {
         let cfg = small_cfg(Strategy::AnsorRandom);
-        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+        let mut tuner =
+            AutoTuner::builder(presets::rtx_2060()).config(&cfg).build().unwrap();
         let session = tuner.tune(&tiny_tasks()).unwrap();
         assert_eq!(session.tasks.len(), 2);
         assert!(
@@ -592,7 +766,8 @@ mod tests {
     #[test]
     fn random_search_also_works() {
         let cfg = small_cfg(Strategy::RandomSearch);
-        let mut tuner = AutoTuner::from_config(&cfg, presets::jetson_tx2()).unwrap();
+        let mut tuner =
+            AutoTuner::builder(presets::jetson_tx2()).config(&cfg).build().unwrap();
         let session = tuner.tune(&tiny_tasks()[..1]).unwrap();
         assert!(session.tasks[0].best_latency_s.is_finite());
         assert!(session.tasks[0].best_latency_s <= session.tasks[0].default_latency_s * 1.01);
@@ -606,12 +781,20 @@ mod tests {
 
         let cfg_ft = small_cfg(Strategy::TensetFinetune);
         let model_ft = CostModel::with_params(backend.clone(), pre.clone());
-        let mut t_ft = AutoTuner::with_model(&cfg_ft, presets::jetson_tx2(), model_ft);
+        let mut t_ft = AutoTuner::builder(presets::jetson_tx2())
+            .config(&cfg_ft)
+            .model(model_ft)
+            .build()
+            .unwrap();
         let s_ft = t_ft.tune(&tiny_tasks()).unwrap();
 
         let cfg_mo = small_cfg(Strategy::Moses(transfer::MosesConfig::default()));
         let model_mo = CostModel::with_params(backend, pre);
-        let mut t_mo = AutoTuner::with_model(&cfg_mo, presets::jetson_tx2(), model_mo);
+        let mut t_mo = AutoTuner::builder(presets::jetson_tx2())
+            .config(&cfg_mo)
+            .model(model_mo)
+            .build()
+            .unwrap();
         let s_mo = t_mo.tune(&tiny_tasks()).unwrap();
 
         assert!(
@@ -626,7 +809,8 @@ mod tests {
     #[test]
     fn history_is_monotone_nonincreasing() {
         let cfg = small_cfg(Strategy::AnsorRandom);
-        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2080()).unwrap();
+        let mut tuner =
+            AutoTuner::builder(presets::rtx_2080()).config(&cfg).build().unwrap();
         let session = tuner.tune(&tiny_tasks()[..1]).unwrap();
         let h = &session.tasks[0].history;
         for w in h.windows(2) {
@@ -638,7 +822,8 @@ mod tests {
     fn deterministic_given_seed() {
         let cfg = small_cfg(Strategy::AnsorRandom);
         let run = || {
-            let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+            let mut tuner =
+                AutoTuner::builder(presets::rtx_2060()).config(&cfg).build().unwrap();
             tuner.tune(&tiny_tasks()).unwrap().total_best_latency_ms()
         };
         assert_eq!(run(), run());
@@ -647,7 +832,8 @@ mod tests {
     #[test]
     fn inline_wall_clock_equals_total_cost() {
         let cfg = small_cfg(Strategy::AnsorRandom);
-        let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+        let mut tuner =
+            AutoTuner::builder(presets::rtx_2060()).config(&cfg).build().unwrap();
         let session = tuner.tune(&tiny_tasks()).unwrap();
         assert!((session.wall_time_s() - session.search_time_s()).abs() < 1e-9);
     }
@@ -657,7 +843,8 @@ mod tests {
         let mut cfg = small_cfg(Strategy::AnsorRandom);
         cfg.jobs = 2;
         let run = || {
-            let mut tuner = AutoTuner::from_config(&cfg, presets::rtx_2060()).unwrap();
+            let mut tuner =
+                AutoTuner::builder(presets::rtx_2060()).config(&cfg).build().unwrap();
             tuner.tune(&tiny_tasks()).unwrap()
         };
         let a = run();
@@ -673,17 +860,13 @@ mod tests {
     }
 
     #[test]
-    fn parallel_jobs_refuse_the_xla_backend() {
-        let mut cfg = small_cfg(Strategy::RandomSearch);
-        cfg.jobs = 4;
-        cfg.backend = BackendKind::Xla;
-        // Construct via with_model so no artifacts are needed.
-        let model = CostModel::with_params(
-            Arc::new(RustBackend::default()),
-            layout::init_params(&mut Rng::new(1)),
-        );
-        let mut tuner = AutoTuner::with_model(&cfg, presets::rtx_2060(), model);
-        let err = tuner.tune(&tiny_tasks()).unwrap_err();
+    fn builder_refuses_jobs_on_the_xla_backend() {
+        let err = AutoTuner::builder(presets::rtx_2060())
+            .strategy(Strategy::RandomSearch)
+            .backend(BackendKind::Xla)
+            .jobs(4)
+            .build()
+            .unwrap_err();
         assert!(err.to_string().contains("rust cost-model backend"), "{err}");
     }
 }

@@ -5,24 +5,38 @@
 //! zero).  Masks are derived from the ξ = |w · ∇w| saliency either by an
 //! absolute threshold ϑ or by ranking to a user-set transferable ratio
 //! (the paper exposes both; the ratio form drives the Fig. 6 ablation).
+//!
+//! Like [`crate::costmodel::ModelState`], a mask sits on the learning
+//! hot path (one per gradient round), so its storage is shared
+//! `Arc<[f32]>`: cloning a mask is a pointer copy, never an
+//! N_PARAMS-float copy.  Masks are immutable once built — every
+//! derivation returns a fresh mask.
+
+use std::sync::Arc;
 
 use crate::costmodel::layout;
 
-/// A 0/1 mask over the flat parameter vector.
+/// A 0/1 mask over the flat parameter vector (immutable, cheap to
+/// clone — the values are `Arc`-shared).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mask {
-    pub values: Vec<f32>,
+    pub values: Arc<[f32]>,
 }
 
 impl Mask {
     /// All-ones mask (vanilla fine-tuning trains every parameter).
     pub fn all_ones(n: usize) -> Mask {
-        Mask { values: vec![1.0; n] }
+        Mask { values: vec![1.0; n].into() }
     }
 
     /// All-zeros mask (frozen model).
     pub fn all_zeros(n: usize) -> Mask {
-        Mask { values: vec![0.0; n] }
+        Mask { values: vec![0.0; n].into() }
+    }
+
+    /// Mask over explicit values (tests, custom boundaries).
+    pub fn from_values(values: Vec<f32>) -> Mask {
+        Mask { values: values.into() }
     }
 
     /// Threshold form: transferable iff ξ(i) > ϑ (paper's default
@@ -62,7 +76,7 @@ impl Mask {
         for &i in &idx[..keep] {
             values[i as usize] = 1.0;
         }
-        Mask { values }
+        Mask::from_values(values)
     }
 
     /// Number of transferable parameters.
@@ -100,7 +114,7 @@ impl Mask {
             values: self
                 .values
                 .iter()
-                .zip(&other.values)
+                .zip(other.values.iter())
                 .map(|(&a, &b)| if a == 1.0 || b == 1.0 { 1.0 } else { 0.0 })
                 .collect(),
         }
@@ -112,7 +126,7 @@ impl Mask {
     /// "iteratively update the boundary").
     pub fn ema_refresh(history: &Mask, fresh: &Mask, keep_prob: f64) -> Mask {
         assert_eq!(history.values.len(), fresh.values.len());
-        let mut values = fresh.values.clone();
+        let mut values = fresh.values.to_vec();
         for i in 0..values.len() {
             if history.values[i] == 1.0 && fresh.values[i] == 0.0 {
                 // Previously-transferable param: retain with probability
@@ -123,7 +137,7 @@ impl Mask {
                 }
             }
         }
-        Mask { values }
+        Mask::from_values(values)
     }
 }
 
@@ -151,14 +165,14 @@ mod tests {
     fn ratio_mask_keeps_highest_xi() {
         let xi = vec![0.1, 0.9, 0.5, 0.7, 0.2];
         let m = Mask::from_xi_ratio(&xi, 0.4); // keep 2
-        assert_eq!(m.values, vec![0.0, 1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(&m.values[..], &[0.0, 1.0, 0.0, 1.0, 0.0]);
     }
 
     #[test]
     fn threshold_mask_normalizes() {
         let xi = vec![0.0, 10.0, 4.0, 6.0];
         let m = Mask::from_xi_threshold(&xi, 0.5);
-        assert_eq!(m.values, vec![0.0, 1.0, 0.0, 1.0]);
+        assert_eq!(&m.values[..], &[0.0, 1.0, 0.0, 1.0]);
     }
 
     #[test]
@@ -175,17 +189,17 @@ mod tests {
 
     #[test]
     fn union_is_or() {
-        let a = Mask { values: vec![1.0, 0.0, 0.0] };
-        let b = Mask { values: vec![0.0, 1.0, 0.0] };
-        assert_eq!(a.union(&b).values, vec![1.0, 1.0, 0.0]);
+        let a = Mask::from_values(vec![1.0, 0.0, 0.0]);
+        let b = Mask::from_values(vec![0.0, 1.0, 0.0]);
+        assert_eq!(&a.union(&b).values[..], &[1.0, 1.0, 0.0]);
     }
 
     #[test]
     fn ema_refresh_keeps_all_with_prob_one() {
-        let hist = Mask { values: vec![1.0, 1.0, 0.0, 0.0] };
-        let fresh = Mask { values: vec![0.0, 1.0, 1.0, 0.0] };
+        let hist = Mask::from_values(vec![1.0, 1.0, 0.0, 0.0]);
+        let fresh = Mask::from_values(vec![0.0, 1.0, 1.0, 0.0]);
         let m = Mask::ema_refresh(&hist, &fresh, 1.0);
-        assert_eq!(m.values, vec![1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(&m.values[..], &[1.0, 1.0, 1.0, 0.0]);
         let m0 = Mask::ema_refresh(&hist, &fresh, 0.0);
         assert_eq!(m0.values, fresh.values);
     }

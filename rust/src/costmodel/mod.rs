@@ -1,12 +1,27 @@
-//! The learned cost model C() ~ Perf() (paper Eq. 2).
+//! The learned cost model C() ~ Perf() (paper Eq. 2), split into a
+//! **mutation plane** and a **zero-copy prediction plane**:
 //!
 //! * [`layout`] — flat-parameter geometry shared with the Python side.
 //! * [`rust_mlp`] — pure-Rust mirror of the MLP / loss / update math.
 //! * [`mask`] — lottery-ticket masks over the parameter vector.
-//! * [`CostModel`] — stateful model (params + Adam moments) over a
-//!   pluggable [`Backend`]: the XLA/PJRT engine executing the AOT Pallas
-//!   artifacts (production path) or the pure-Rust mirror (tests,
-//!   artifact-less fallback).
+//! * [`ModelState`] — an *immutable, versioned* snapshot of everything
+//!   that learns (parameters + Adam moments + step counter) behind
+//!   `Arc<[f32]>` shared storage.  Cloning or publishing a state is a
+//!   pointer copy, never a parameter copy.
+//! * [`Predictor`] — the read-only view the search plane consumes:
+//!   `predict`/`xi`/`loss` over a pinned `Arc<ModelState>` and a
+//!   pluggable [`Backend`].  A pinned predictor is unaffected by any
+//!   later training — workers rank thousands of candidates per round
+//!   against it without ever copying the ~350k-float parameter vector.
+//! * [`CostModel`] — the single owner with mutating access.  Updates
+//!   are copy-on-write: a train step detaches fresh parameter/moment
+//!   vectors from the backend, wraps them in a new [`ModelState`] with
+//!   a bumped version, and republishes; existing predictors keep their
+//!   old snapshot untouched.
+//!
+//! The [`Backend`] executing the math is either the XLA/PJRT engine
+//! running the AOT Pallas artifacts (production path) or the pure-Rust
+//! mirror (tests, artifact-less fallback).
 
 pub mod layout;
 pub mod mask;
@@ -189,47 +204,197 @@ impl Backend for RustBackend {
     }
 }
 
-/// Stateful cost model: parameters + Adam moments + step counter over a
-/// backend.  Accepts arbitrary row counts; pads/chunks to the backend's
-/// fixed batch geometry internally (padding rows get weight 0 so they
-/// never affect the ranking loss).
-pub struct CostModel {
-    backend: Arc<dyn Backend>,
-    pub params: Vec<f32>,
-    m: Vec<f32>,
-    v: Vec<f32>,
-    step: u64,
-}
-
-/// Portable learning state of a [`CostModel`]: everything except the
-/// backend handle.  Backends may be `Rc`-based and thread-pinned (see
+/// Immutable, versioned learning state: parameters + Adam moments +
+/// step counter behind `Arc<[f32]>` shared storage.
+///
+/// Cloning a `ModelState` clones three `Arc` pointers — it never copies
+/// the ~350k floats.  Backends may be `Rc`-based and thread-pinned (see
 /// [`Backend`]), so a model crosses thread boundaries as a `ModelState`
-/// and is rebuilt against a backend constructed on the receiving thread.
+/// (which is `Send + Sync`) and is rebuilt against a backend constructed
+/// on the receiving thread.
 #[derive(Debug, Clone)]
 pub struct ModelState {
-    pub params: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    pub step: u64,
+    params: Arc<[f32]>,
+    m: Arc<[f32]>,
+    v: Arc<[f32]>,
+    step: u64,
+    version: u64,
+}
+
+impl ModelState {
+    /// Fresh state with random parameter init and zeroed Adam moments.
+    pub fn init(rng: &mut Rng) -> ModelState {
+        ModelState::from_params(layout::init_params(rng))
+    }
+
+    /// State with given parameters (e.g. a pre-trained checkpoint) and
+    /// zeroed Adam moments.
+    pub fn from_params(params: Vec<f32>) -> ModelState {
+        assert_eq!(params.len(), layout::N_PARAMS);
+        ModelState {
+            params: params.into(),
+            m: vec![0.0; layout::N_PARAMS].into(),
+            v: vec![0.0; layout::N_PARAMS].into(),
+            step: 0,
+            version: 0,
+        }
+    }
+
+    /// The flat parameter vector (read-only).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Adam step counter.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Monotone state version: bumped on every mutation the owning
+    /// [`CostModel`] publishes (train steps, optimizer resets).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+/// A read-only prediction view over a pinned [`ModelState`].
+///
+/// This is what the search plane consumes: [`crate::search`] policies,
+/// the task pipeline's re-ranking, the adaptive controller, and the
+/// Moses mask refresh all take `&Predictor`.  Constructing one from a
+/// state is two `Arc` clones; it is immune to any training that happens
+/// after the pin.
+#[derive(Clone)]
+pub struct Predictor {
+    backend: Arc<dyn Backend>,
+    state: Arc<ModelState>,
+}
+
+impl Predictor {
+    /// Pin `state` for prediction on `backend` (O(1) — pointer clones).
+    pub fn new(backend: Arc<dyn Backend>, state: Arc<ModelState>) -> Predictor {
+        assert_eq!(state.params.len(), layout::N_PARAMS);
+        Predictor { backend, state }
+    }
+
+    /// The pinned state (pointer identity is observable: two predictors
+    /// pinned between updates share storage).
+    pub fn state(&self) -> &Arc<ModelState> {
+        &self.state
+    }
+
+    /// Version of the pinned state.
+    pub fn version(&self) -> u64 {
+        self.state.version
+    }
+
+    /// The pinned flat parameter vector.
+    pub fn params(&self) -> &[f32] {
+        &self.state.params
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Score `rows` feature rows (row-major, `rows * N_FEATURES` f32).
+    ///
+    /// Chunks to the backend's fixed batch shapes, preferring the small
+    /// predict variant when the remaining rows fit it (the evolutionary
+    /// search's ~64-row populations then skip the 8× padding to 512).
+    pub fn predict(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let nf = layout::N_FEATURES;
+        assert_eq!(x.len(), rows * nf);
+        let params = self.params();
+        let bp = self.backend.pred_batch();
+        let bs = self.backend.pred_batch_small();
+        let mut scores = Vec::with_capacity(rows);
+        let mut start = 0;
+        while start < rows {
+            let remaining = rows - start;
+            let use_small = bs > 0 && remaining <= bs;
+            let batch = if use_small { bs } else { bp };
+            let n = remaining.min(batch);
+            let src = &x[start * nf..(start + n) * nf];
+            let run = |data: &[f32]| {
+                if use_small {
+                    self.backend.predict_small_fixed(params, data)
+                } else {
+                    self.backend.predict_fixed(params, data)
+                }
+            };
+            if n == batch {
+                scores.extend_from_slice(&run(src)?[..n]);
+            } else {
+                let mut padded = vec![0.0f32; batch * nf];
+                padded[..n * nf].copy_from_slice(src);
+                scores.extend_from_slice(&run(&padded)?[..n]);
+            }
+            start += n;
+        }
+        Ok(scores)
+    }
+
+    /// ξ saliency on up to `train_batch` labeled rows.
+    pub fn xi(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let (px, py, pw) = pad_train(self.backend.as_ref(), x, y);
+        self.backend.xi_fixed(self.params(), &px, &py, &pw)
+    }
+
+    /// Held-out ranking loss on up to `train_batch` labeled rows.
+    pub fn loss(&self, x: &[f32], y: &[f32]) -> Result<f32> {
+        let (px, py, pw) = pad_train(self.backend.as_ref(), x, y);
+        self.backend.loss_fixed(self.params(), &px, &py, &pw)
+    }
+}
+
+fn pad_train(backend: &dyn Backend, x: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let nf = layout::N_FEATURES;
+    let bt = backend.train_batch();
+    let rows = y.len().min(bt);
+    assert!(x.len() >= rows * nf, "x shorter than y rows");
+    let mut px = vec![0.0f32; bt * nf];
+    px[..rows * nf].copy_from_slice(&x[..rows * nf]);
+    let mut py = vec![0.0f32; bt];
+    py[..rows].copy_from_slice(&y[..rows]);
+    let mut pw = vec![0.0f32; bt];
+    pw[..rows].iter_mut().for_each(|v| *v = 1.0);
+    (px, py, pw)
+}
+
+/// The stateful cost model — the only type with mutating access to a
+/// [`ModelState`].  Accepts arbitrary row counts; pads/chunks to the
+/// backend's fixed batch geometry internally (padding rows get weight 0
+/// so they never affect the ranking loss).
+///
+/// Mutation is copy-on-write: a train step computes fresh parameter and
+/// moment vectors, wraps them in a new `Arc<ModelState>` with a bumped
+/// version, and swaps the handle.  Snapshots taken earlier (via
+/// [`CostModel::predictor`] or [`CostModel::shared_state`]) keep the
+/// old storage alive and untouched.
+pub struct CostModel {
+    backend: Arc<dyn Backend>,
+    state: Arc<ModelState>,
 }
 
 impl CostModel {
     /// Fresh model with random init.
     pub fn new(backend: Arc<dyn Backend>, rng: &mut Rng) -> CostModel {
-        let params = layout::init_params(rng);
-        CostModel::with_params(backend, params)
+        CostModel { backend, state: Arc::new(ModelState::init(rng)) }
     }
 
     /// Model with given parameters (e.g. a pre-trained checkpoint).
     pub fn with_params(backend: Arc<dyn Backend>, params: Vec<f32>) -> CostModel {
-        assert_eq!(params.len(), layout::N_PARAMS);
-        CostModel {
-            backend,
-            params,
-            m: vec![0.0; layout::N_PARAMS],
-            v: vec![0.0; layout::N_PARAMS],
-            step: 0,
-        }
+        CostModel { backend, state: Arc::new(ModelState::from_params(params)) }
+    }
+
+    /// Rebuild a model from an exported state on a (possibly new)
+    /// backend — the inverse of [`CostModel::export_state`].
+    pub fn from_state(backend: Arc<dyn Backend>, state: ModelState) -> CostModel {
+        assert_eq!(state.params.len(), layout::N_PARAMS);
+        assert_eq!(state.m.len(), layout::N_PARAMS);
+        assert_eq!(state.v.len(), layout::N_PARAMS);
+        CostModel { backend, state: Arc::new(state) }
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -246,89 +411,72 @@ impl CostModel {
         self.backend.train_batch()
     }
 
-    /// Detach the full learning state (parameters + Adam moments +
-    /// step), e.g. to move the model to another thread.
-    pub fn export_state(&self) -> ModelState {
-        ModelState {
-            params: self.params.clone(),
-            m: self.m.clone(),
-            v: self.v.clone(),
-            step: self.step,
-        }
+    /// The current flat parameter vector (read-only).
+    pub fn params(&self) -> &[f32] {
+        self.state.params()
     }
 
-    /// Rebuild a model from an exported state on a (possibly new)
-    /// backend — the inverse of [`CostModel::export_state`].
-    pub fn from_state(backend: Arc<dyn Backend>, state: ModelState) -> CostModel {
-        assert_eq!(state.params.len(), layout::N_PARAMS);
-        assert_eq!(state.m.len(), layout::N_PARAMS);
-        assert_eq!(state.v.len(), layout::N_PARAMS);
-        CostModel { backend, params: state.params, m: state.m, v: state.v, step: state.step }
+    /// Detach the full learning state (parameters + Adam moments +
+    /// step), e.g. to move the model to another thread.  O(1): the
+    /// state is immutable shared storage.
+    pub fn export_state(&self) -> ModelState {
+        (*self.state).clone()
+    }
+
+    /// The current state as a shareable snapshot handle (what the
+    /// parallel tuner publishes through its snapshot cell).  O(1).
+    pub fn shared_state(&self) -> Arc<ModelState> {
+        self.state.clone()
+    }
+
+    /// A read-only prediction view pinned to the CURRENT state.  O(1);
+    /// later `train_step`s do not affect it.
+    pub fn predictor(&self) -> Predictor {
+        Predictor { backend: self.backend.clone(), state: self.state.clone() }
     }
 
     /// Reset Adam state (used when adaptation starts on a new device).
     pub fn reset_optimizer(&mut self) {
-        self.m.iter_mut().for_each(|x| *x = 0.0);
-        self.v.iter_mut().for_each(|x| *x = 0.0);
-        self.step = 0;
+        self.state = Arc::new(ModelState {
+            params: self.state.params.clone(),
+            m: vec![0.0; layout::N_PARAMS].into(),
+            v: vec![0.0; layout::N_PARAMS].into(),
+            step: 0,
+            version: self.state.version + 1,
+        });
     }
 
-    /// Score `rows` feature rows (row-major, `rows * N_FEATURES` f32).
-    ///
-    /// Chunks to the backend's fixed batch shapes, preferring the small
-    /// predict variant when the remaining rows fit it (the evolutionary
-    /// search's ~64-row populations then skip the 8× padding to 512).
+    /// Score `rows` feature rows against the current state (see
+    /// [`Predictor::predict`] for the chunking contract).
     pub fn predict(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
-        let nf = layout::N_FEATURES;
-        assert_eq!(x.len(), rows * nf);
-        let bp = self.backend.pred_batch();
-        let bs = self.backend.pred_batch_small();
-        let mut scores = Vec::with_capacity(rows);
-        let mut start = 0;
-        while start < rows {
-            let remaining = rows - start;
-            let use_small = bs > 0 && remaining <= bs;
-            let batch = if use_small { bs } else { bp };
-            let n = remaining.min(batch);
-            let src = &x[start * nf..(start + n) * nf];
-            let run = |data: &[f32]| {
-                if use_small {
-                    self.backend.predict_small_fixed(&self.params, data)
-                } else {
-                    self.backend.predict_fixed(&self.params, data)
-                }
-            };
-            if n == batch {
-                scores.extend_from_slice(&run(src)?[..n]);
-            } else {
-                let mut padded = vec![0.0f32; batch * nf];
-                padded[..n * nf].copy_from_slice(src);
-                scores.extend_from_slice(&run(&padded)?[..n]);
-            }
-            start += n;
-        }
-        Ok(scores)
+        self.predictor().predict(x, rows)
     }
 
     /// One gradient step on up to `train_batch` labeled rows (padded with
     /// zero-weight rows if fewer). Returns the batch ranking loss.
     pub fn train_step(&mut self, x: &[f32], y: &[f32], mask: &Mask, lr: f32, wd: f32) -> Result<f32> {
-        let (px, py, pw) = self.pad_train(x, y);
-        self.step += 1;
-        let hp = [lr, wd, self.step as f32, 0.0];
+        let (px, py, pw) = pad_train(self.backend.as_ref(), x, y);
+        let step = self.state.step + 1;
+        let hp = [lr, wd, step as f32, 0.0];
         let (p, m, v, loss) = self.backend.train_step_fixed(
-            &self.params,
-            &self.m,
-            &self.v,
+            &self.state.params,
+            &self.state.m,
+            &self.state.v,
             &px,
             &py,
             &pw,
             &mask.values,
             hp,
         )?;
-        self.params = p;
-        self.m = m;
-        self.v = v;
+        // Copy-on-write publish: the backend already detached fresh
+        // vectors, so pinned snapshots keep the old storage untouched.
+        self.state = Arc::new(ModelState {
+            params: p.into(),
+            m: m.into(),
+            v: v.into(),
+            step,
+            version: self.state.version + 1,
+        });
         Ok(loss)
     }
 
@@ -369,28 +517,12 @@ impl CostModel {
 
     /// ξ saliency on up to `train_batch` labeled rows.
     pub fn xi(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
-        let (px, py, pw) = self.pad_train(x, y);
-        self.backend.xi_fixed(&self.params, &px, &py, &pw)
+        self.predictor().xi(x, y)
     }
 
     /// Held-out ranking loss on up to `train_batch` labeled rows.
     pub fn loss(&self, x: &[f32], y: &[f32]) -> Result<f32> {
-        let (px, py, pw) = self.pad_train(x, y);
-        self.backend.loss_fixed(&self.params, &px, &py, &pw)
-    }
-
-    fn pad_train(&self, x: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let nf = layout::N_FEATURES;
-        let bt = self.backend.train_batch();
-        let rows = y.len().min(bt);
-        assert!(x.len() >= rows * nf, "x shorter than y rows");
-        let mut px = vec![0.0f32; bt * nf];
-        px[..rows * nf].copy_from_slice(&x[..rows * nf]);
-        let mut py = vec![0.0f32; bt];
-        py[..rows].copy_from_slice(&y[..rows]);
-        let mut pw = vec![0.0f32; bt];
-        pw[..rows].iter_mut().for_each(|v| *v = 1.0);
-        (px, py, pw)
+        self.predictor().loss(x, y)
     }
 }
 
@@ -478,7 +610,37 @@ mod tests {
         let mut b = CostModel::from_state(tiny_backend(), a.export_state());
         a.train_step(&x, &y, &mask, 1e-3, 0.0).unwrap();
         b.train_step(&x, &y, &mask, 1e-3, 0.0).unwrap();
-        assert_eq!(a.params, b.params);
+        assert_eq!(a.params(), b.params());
+    }
+
+    #[test]
+    fn pinned_predictor_is_immune_to_updates() {
+        let mut rng = Rng::new(7);
+        let mut model = CostModel::new(tiny_backend(), &mut rng);
+        let (x, y) = rows(&mut rng, 8);
+        let pinned = model.predictor();
+        let v0 = pinned.version();
+        let before = pinned.predict(&x, 8).unwrap();
+        let mask = Mask::all_ones(layout::N_PARAMS);
+        model.train_step(&x, &y, &mask, 1e-2, 0.0).unwrap();
+        // The pin still scores with the pre-update parameters, while a
+        // fresh view observes the update (new version, new storage).
+        assert_eq!(pinned.predict(&x, 8).unwrap(), before);
+        assert_eq!(pinned.version(), v0);
+        let live = model.predictor();
+        assert_eq!(live.version(), v0 + 1);
+        assert!(!Arc::ptr_eq(pinned.state(), live.state()));
+    }
+
+    #[test]
+    fn snapshots_share_storage_until_an_update() {
+        let mut rng = Rng::new(8);
+        let model = CostModel::new(tiny_backend(), &mut rng);
+        let a = model.predictor();
+        let b = model.predictor();
+        // Publish/pin is a pointer copy: no parameter duplication.
+        assert!(Arc::ptr_eq(a.state(), b.state()));
+        assert!(Arc::ptr_eq(a.state(), &model.shared_state()));
     }
 
     #[test]

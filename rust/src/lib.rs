@@ -25,18 +25,42 @@
 //!   that executes the AOT artifacts ([`runtime`]) and the paper's
 //!   metrics ([`metrics`]).
 //!
+//! ## The model API: a zero-copy prediction plane ([`costmodel`])
+//!
+//! The cost model is split into two planes.  **Mutation** lives in
+//! [`costmodel::CostModel`], the single owner of an immutable,
+//! versioned [`costmodel::ModelState`] (parameters + Adam moments
+//! behind `Arc<[f32]>` shared storage); every update is copy-on-write —
+//! detach fresh vectors, wrap, republish.  **Prediction** happens
+//! through [`costmodel::Predictor`], a read-only view pinned to a state
+//! snapshot: search policies, the task pipeline's re-ranking, the
+//! adaptive controller and the Moses mask refresh all consume
+//! `&Predictor` and can never mutate (or even observe mutation of) the
+//! model.  Publishing a snapshot to N parallel workers and pinning it
+//! there are O(1) pointer swaps — the hot prediction path that ranks
+//! thousands of candidate schedules per round never copies the
+//! ~350k-float parameter vector.
+//!
 //! ## The staged tuning engine ([`coordinator`])
 //!
 //! Tuning is a staged per-task pipeline (warm-start → propose →
 //! measure → learn → finalize) over a split between the
 //! search/measurement plane and the *learning plane*: a learner owning
 //! the cost model, replay buffer and Moses adapter consumes measurement
-//! batches while search workers predict against cheap versioned
-//! parameter snapshots.  `moses tune --jobs N` runs N task pipelines
-//! concurrently in deterministic waves — sessions are bit-reproducible
-//! for a fixed `(seed, jobs)`, wall-clock search time is the per-wave
-//! maximum while device cost stays the sum (see ROADMAP.md
-//! §ARCHITECTURE).
+//! batches while search workers predict against pinned
+//! `Arc<ModelState>` snapshots published through a versioned
+//! [`coordinator::SnapshotCell`].  `moses tune --jobs N` runs N task
+//! pipelines concurrently in deterministic waves — sessions are
+//! bit-reproducible for a fixed `(seed, jobs)`, wall-clock search time
+//! is the per-wave maximum while device cost stays the sum (see
+//! ROADMAP.md §ARCHITECTURE).
+//!
+//! Sessions are configured through the builder:
+//! [`coordinator::AutoTuner::builder`] validates knob combinations at
+//! build time (worker threads require the `Send` rust backend, pretrain
+//! strategies require a checkpoint, budgets must be non-empty) and
+//! produces the flat serialized [`coordinator::TuneConfig`] the CLI and
+//! experiment grids round-trip.
 //!
 //! ## The tuning-record store ([`tunecache`])
 //!

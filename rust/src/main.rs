@@ -183,17 +183,17 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         pretrained.as_deref(),
         &mut Rng::new(cfg.seed),
     );
-    let mut tuner = AutoTuner::with_model(&cfg, target.clone(), cost_model);
-
     let cache: Option<Arc<TuneCache>> = if p.get_bool("no-cache") {
         None
     } else {
         let path = PathBuf::from(p.get("tune-cache"));
         Some(Arc::new(TuneCache::open(&path, DEFAULT_TOPK)?))
     };
+    let mut builder = AutoTuner::builder(target.clone()).config(&cfg).model(cost_model);
     if let Some(c) = &cache {
-        tuner.attach_cache(c.clone());
+        builder = builder.cache(c.clone());
     }
+    let mut tuner = builder.build()?;
 
     println!(
         "tuning {} on {} with {} ({} trials/task, backend {})",
@@ -283,7 +283,14 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
         .opt("records", "96", "records per task")
         .opt("epochs", "8", "training epochs")
         .opt("seed", "0", "RNG seed")
-        .opt("backend", "auto", "cost-model backend (auto|xla|rust)");
+        .opt("backend", "auto", "cost-model backend (auto|xla|rust)")
+        .opt(
+            "from-tunecache",
+            "",
+            "pretrain on REAL tuning history: export this tunecache log \
+             (JSONL) and train on the source device's records instead of \
+             a random-sampled corpus",
+        );
     if args.iter().any(|a| a == "--help") {
         print!("{}", flags.help("pretrain", "Pre-train the source-device cost model."));
         return Ok(());
@@ -299,12 +306,52 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
         pretrain_epochs: p.get_usize("epochs")?,
         ..ExpConfig::default()
     };
-    println!(
-        "pre-training on {}: {} tasks x {} records, {} epochs",
-        device.name, cfg.pretrain_tasks, cfg.pretrain_records_per_task, cfg.pretrain_epochs
-    );
     let t0 = std::time::Instant::now();
-    let params = experiments::pretrain_on(&device, &cfg)?;
+    let from_cache = p.get("from-tunecache");
+    let params = if from_cache.is_empty() {
+        println!(
+            "pre-training on {}: {} tasks x {} records, {} epochs",
+            device.name, cfg.pretrain_tasks, cfg.pretrain_records_per_task, cfg.pretrain_epochs
+        );
+        experiments::pretrain_on(&device, &cfg)?
+    } else {
+        // The PR 3 export → pretrain loop in one command: group the
+        // tuning log by device and train on the source device's slice.
+        let log = PathBuf::from(from_cache);
+        anyhow::ensure!(log.exists(), "no tuning log at {log:?} (run `moses tune` first)");
+        let (records, malformed) = moses::tunecache::persist::load_records(&log)?;
+        let report = moses::dataset::export::from_records(&records);
+        let ds = report
+            .datasets
+            .iter()
+            .find(|d| d.device == device.name)
+            .with_context(|| {
+                format!(
+                    "tuning log {log:?} holds no exportable records for device '{}' \
+                     (devices present: {}; {} skipped stale, {} without task payload, \
+                     {} invalid, {malformed} malformed lines)",
+                    device.name,
+                    report
+                        .datasets
+                        .iter()
+                        .map(|d| d.device.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", "),
+                    report.skipped_stale,
+                    report.skipped_no_task,
+                    report.skipped_invalid,
+                )
+            })?;
+        println!(
+            "pre-training on {} from tuning history {}: {} tasks x {} records, {} epochs",
+            device.name,
+            log.display(),
+            ds.tasks.len(),
+            ds.len(),
+            cfg.pretrain_epochs
+        );
+        experiments::pretrain_on_dataset(ds, &cfg)?
+    };
     let out = PathBuf::from(p.get("out"));
     if let Some(parent) = out.parent() {
         std::fs::create_dir_all(parent).ok();

@@ -3,10 +3,10 @@
 //!
 //! | paper artifact | function |
 //! |----------------|----------|
-//! | Fig. 4 (inference-latency gains)  | [`run_fig4`] |
-//! | Fig. 5 (search-efficiency gains)  | [`run_fig5`] |
-//! | Table 1 (CMAT small/large trials) | [`run_table1`] |
-//! | Fig. 6 (transferable-ratio ablation) | [`run_fig6`] |
+//! | Fig. 4 (inference-latency gains)  | [`run_grid`] + [`fig4_table`] |
+//! | Fig. 5 (search-efficiency gains)  | [`run_grid`] + [`fig5_table`] |
+//! | Table 1 (CMAT small/large trials) | [`table1`] |
+//! | Fig. 6 (transferable-ratio ablation) | [`fig6_table`] |
 //!
 //! Scaling: trial counts are reduced vs the paper (200/20000/5000 →
 //! configurable, defaults 48/192) so a full regeneration runs in minutes
@@ -131,7 +131,20 @@ pub fn pretrain_on(device: &DeviceArch, cfg: &ExpConfig) -> Result<Vec<f32>> {
         TaskSource::Random { count: cfg.pretrain_tasks },
         &GenConfig { records_per_task: cfg.pretrain_records_per_task, seed: cfg.seed },
     );
+    pretrain_on_dataset(&ds, cfg)
+}
+
+/// Train a fresh cost model on an explicit dataset — the shared tail of
+/// [`pretrain_on`] and the `moses pretrain --from-tunecache` path, where
+/// the corpus is real tuning history exported from a tunecache log
+/// instead of random sampling.
+pub fn pretrain_on_dataset(ds: &crate::dataset::Dataset, cfg: &ExpConfig) -> Result<Vec<f32>> {
     let (x, y) = ds.training_arrays();
+    anyhow::ensure!(
+        !y.is_empty(),
+        "pretraining corpus for '{}' holds no records",
+        ds.device
+    );
     let backend = cfg.backend_arc()?;
     let mut rng = Rng::new(cfg.seed ^ 0x9E37);
     let mut model = CostModel::new(backend, &mut rng);
@@ -139,7 +152,7 @@ pub fn pretrain_on(device: &DeviceArch, cfg: &ExpConfig) -> Result<Vec<f32>> {
     for _ in 0..cfg.pretrain_epochs {
         model.train_epoch(&x, &y, &mask, 1e-3, 0.0, &mut rng)?;
     }
-    Ok(model.params.clone())
+    Ok(model.params().to_vec())
 }
 
 /// Run one tuning session: `model_name` on `target` with `strategy`.
@@ -174,7 +187,10 @@ pub fn run_session(
         strategy.uses_pretrained().then_some(pretrained),
         &mut rng,
     );
-    let mut tuner = AutoTuner::with_model(&tune_cfg, target.clone(), cost_model);
+    let mut tuner = AutoTuner::builder(target.clone())
+        .config(&tune_cfg)
+        .model(cost_model)
+        .build()?;
     tuner.tune(&model.tasks())
 }
 

@@ -4,7 +4,7 @@
 //! top-k for on-device measurement.
 
 use super::SearchPolicy;
-use crate::costmodel::CostModel;
+use crate::costmodel::Predictor;
 use crate::program::{featurize, Schedule, SpaceGenerator, Subgraph, N_FEATURES};
 use crate::util::rng::Rng;
 
@@ -71,7 +71,7 @@ impl EvolutionarySearch {
     fn score(
         &mut self,
         pop: &[Schedule],
-        model: &CostModel,
+        model: &Predictor,
         charge_query: &mut dyn FnMut(),
     ) -> Vec<f32> {
         self.feat_buf.clear();
@@ -106,7 +106,7 @@ impl SearchPolicy for EvolutionarySearch {
     fn propose(
         &mut self,
         k: usize,
-        model: &CostModel,
+        model: &Predictor,
         seen: &dyn Fn(&Schedule) -> bool,
         rng: &mut Rng,
         charge_query: &mut dyn FnMut(),
@@ -197,7 +197,7 @@ impl SearchPolicy for EvolutionarySearch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::costmodel::{layout, Mask, RustBackend};
+    use crate::costmodel::{layout, CostModel, Mask, RustBackend};
     use crate::program::SubgraphKind;
     use std::sync::Arc;
 
@@ -225,7 +225,7 @@ mod tests {
         let m = model(1);
         let mut rng = Rng::new(2);
         let mut queries = 0;
-        let out = es.propose(8, &m, &|_| false, &mut rng, &mut || queries += 1);
+        let out = es.propose(8, &m.predictor(), &|_| false, &mut rng, &mut || queries += 1);
         assert_eq!(out.len(), 8);
         assert!(queries >= 3, "expected >=3 scoring passes, got {queries}");
         let g = es.subgraph.geometry();
@@ -256,7 +256,7 @@ mod tests {
         for _ in 0..30 {
             m.train_epoch(&x, &y, &mask, 1e-2, 0.0, &mut rng).unwrap();
         }
-        let proposed = es.propose(8, &m, &|_| false, &mut rng, &mut || {});
+        let proposed = es.propose(8, &m.predictor(), &|_| false, &mut rng, &mut || {});
         let mean_prop: f64 = proposed.iter().map(|s| s.threads_per_block() as f64).sum::<f64>()
             / proposed.len() as f64;
         let random: Vec<Schedule> = gen.sample_distinct(&mut rng, 64);
@@ -281,7 +281,7 @@ mod tests {
             vec![f32::NAN; layout::N_PARAMS],
         );
         let mut rng = Rng::new(6);
-        let out = es.propose(4, &nan_model, &|_| false, &mut rng, &mut || {});
+        let out = es.propose(4, &nan_model.predictor(), &|_| false, &mut rng, &mut || {});
         assert_eq!(out.len(), 4);
         let g = es.subgraph.geometry();
         assert!(out.iter().all(|s| s.is_valid(&g)));
@@ -299,7 +299,7 @@ mod tests {
         es.generations = 1;
         let m = model(7);
         let mut rng = Rng::new(8);
-        let out = es.propose(4, &m, &|_| false, &mut rng, &mut || {});
+        let out = es.propose(4, &m.predictor(), &|_| false, &mut rng, &mut || {});
         assert!(!out.is_empty());
         let g = es.subgraph.geometry();
         assert!(out.iter().all(|s| s.is_valid(&g)));

@@ -8,11 +8,15 @@ pub mod random;
 pub use evolutionary::EvolutionarySearch;
 pub use random::RandomSearch;
 
-use crate::costmodel::CostModel;
+use crate::costmodel::Predictor;
 use crate::program::Schedule;
 use crate::util::rng::Rng;
 
 /// A search policy proposes the next batch of candidates for one task.
+///
+/// Policies are pure consumers of the prediction plane: they score
+/// candidates against a read-only [`Predictor`] view (a pinned model
+/// snapshot) and never observe — let alone cause — model mutation.
 pub trait SearchPolicy {
     /// Propose up to `k` candidates, guided by `model` scores, avoiding
     /// fingerprints in `seen`.  `charge_query` is invoked once per
@@ -20,7 +24,7 @@ pub trait SearchPolicy {
     fn propose(
         &mut self,
         k: usize,
-        model: &CostModel,
+        model: &Predictor,
         seen: &dyn Fn(&Schedule) -> bool,
         rng: &mut Rng,
         charge_query: &mut dyn FnMut(),

@@ -2,7 +2,7 @@
 //! (also used to seed the evolutionary population).
 
 use super::SearchPolicy;
-use crate::costmodel::CostModel;
+use crate::costmodel::Predictor;
 use crate::program::{Schedule, SpaceGenerator};
 use crate::util::rng::Rng;
 
@@ -21,7 +21,7 @@ impl SearchPolicy for RandomSearch {
     fn propose(
         &mut self,
         k: usize,
-        _model: &CostModel,
+        _model: &Predictor,
         seen: &dyn Fn(&Schedule) -> bool,
         rng: &mut Rng,
         _charge_query: &mut dyn FnMut(),
@@ -42,12 +42,13 @@ impl SearchPolicy for RandomSearch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::costmodel::{CostModel, RustBackend};
+    use crate::costmodel::{CostModel, Predictor, RustBackend};
     use crate::program::subgraph::Geometry;
     use std::sync::Arc;
 
-    fn model() -> CostModel {
+    fn model() -> Predictor {
         CostModel::new(Arc::new(RustBackend { pred_batch: 8, train_batch: 8 }), &mut Rng::new(0))
+            .predictor()
     }
 
     #[test]

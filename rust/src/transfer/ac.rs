@@ -10,6 +10,9 @@
 //! in), measurement stops early and the remaining trials run on model
 //! predictions alone — saving the expensive on-device phase.
 
+use anyhow::Result;
+
+use crate::costmodel::Predictor;
 use crate::util::stats;
 
 /// CV-based early-termination controller for one task.
@@ -31,6 +34,16 @@ impl AdaptiveController {
             batch_means: Vec::new(),
             terminated: false,
         }
+    }
+
+    /// Score one measured batch's feature rows against a pinned
+    /// [`Predictor`] view and record the batch mean — the post-update
+    /// stability observation of §3.5.  The controller, like the search
+    /// policies, only ever sees the read-only prediction plane.
+    pub fn observe_scored(&mut self, model: &Predictor, x: &[f32], rows: usize) -> Result<()> {
+        let preds = model.predict(x, rows)?;
+        self.observe_batch(&preds);
+        Ok(())
     }
 
     /// Record the model's predictions over one measured batch.

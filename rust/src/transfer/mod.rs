@@ -169,9 +169,9 @@ mod tests {
             Some(&ckpt),
             &mut Rng::new(1),
         );
-        assert_eq!(m.params[0], 0.5);
+        assert_eq!(m.params()[0], 0.5);
         let m2 = init_model(&Strategy::AnsorRandom, backend, None, &mut Rng::new(1));
-        assert_ne!(m2.params[0], 0.5);
+        assert_ne!(m2.params()[0], 0.5);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! epoch").
 
 use super::MosesConfig;
-use crate::costmodel::{layout, CostModel, Mask};
+use crate::costmodel::{layout, Mask, Predictor};
 use anyhow::Result;
 
 /// Stateful Moses adaptation controller for one tuning session.
@@ -46,11 +46,13 @@ impl MosesAdapter {
     }
 
     /// Called once per adaptation round with the newest labeled batch;
-    /// recomputes the boundary when due.  Returns true if the mask was
-    /// refreshed (costs one ξ computation on the virtual clock).
+    /// recomputes the boundary when due.  Takes the learner's read-only
+    /// [`Predictor`] view (ξ only needs the pinned parameters).  Returns
+    /// true if the mask was refreshed (costs one ξ computation on the
+    /// virtual clock).
     pub fn maybe_refresh(
         &mut self,
-        model: &CostModel,
+        model: &Predictor,
         x: &[f32],
         y: &[f32],
     ) -> Result<bool> {
@@ -83,16 +85,17 @@ impl MosesAdapter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::costmodel::RustBackend;
+    use crate::costmodel::{CostModel, RustBackend};
     use crate::program::N_FEATURES;
     use crate::util::rng::Rng;
     use std::sync::Arc;
 
-    fn model() -> CostModel {
+    fn model() -> Predictor {
         CostModel::new(
             Arc::new(RustBackend { pred_batch: 16, train_batch: 16 }),
             &mut Rng::new(7),
         )
+        .predictor()
     }
 
     fn batch(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {

@@ -146,38 +146,67 @@ pub fn plan(
     cache.counters().record_seeds(seeds.len());
 
     // Nearest-neighbor tier: fill the remaining seed budget from
-    // similar workloads' records, closest workload first.  Schedules
-    // are remapped onto this task's geometry and re-validated; even the
-    // target device's own records count here (a similar workload tuned
-    // on this very device is the best neighbor there is).
+    // similar workloads' records.  Schedules are remapped onto this
+    // task's geometry and re-validated; even the target device's own
+    // records count here (a similar workload tuned on this very device
+    // is the best neighbor there is).
+    //
+    // Candidates are ordered by a DISTANCE-WEIGHTED rank rather than
+    // exhausting the closest workload first: weight = (1 + rank within
+    // the source workload's best-first records) × (1 + distance /
+    // radius).  The tuner probes seeds in list order, so the best
+    // record of a slightly-farther neighbor outranks the k-th-best
+    // record of the closest one — descriptor distance discounts
+    // source-side quality instead of gating it.
     let mut neighbor_seeds = Vec::new();
     // Skip the index scan entirely when the cross-device tier already
     // filled the budget — this runs on the check-before-search hot path.
     if let Some(radius) = opts.nn_radius.filter(|_| seeds.len() < opts.max_seeds) {
         let desc = task.descriptor();
-        'outer: for (workload, dist) in
-            cache.neighbors(&desc, opts.nn_k, radius, key.workload)
-        {
-            for rec in cache.workload_records(workload) {
-                if seeds.len() + neighbor_seeds.len() >= opts.max_seeds {
-                    break 'outer;
-                }
-                let schedule = rec.schedule().remap_for(&geometry);
-                if !schedule.is_valid(&geometry) {
-                    continue;
-                }
-                let knobs = schedule.encode();
-                if seen.contains(&knobs) {
-                    continue;
-                }
-                seen.push(knobs);
-                neighbor_seeds.push(SeedRecord {
-                    schedule,
-                    source_device: rec.device_name.clone(),
-                    source_latency_s: rec.latency_s,
-                    distance: dist,
-                });
+        // Weigh first, materialize later: the sort key needs only
+        // (weight, distance), so the expensive per-candidate work —
+        // schedule remap + validation + the SeedRecord's String clone —
+        // is deferred to the selection loop below, which stops as soon
+        // as the seed budget fills (this runs on the
+        // check-before-search hot path).
+        let remaining = opts.max_seeds - seeds.len();
+        let mut candidates: Vec<(f64, f64, TuneRecord)> = Vec::new();
+        for (workload, dist) in cache.neighbors(&desc, opts.nn_k, radius, key.workload) {
+            let penalty = 1.0 + if radius > 0.0 { dist / radius } else { 0.0 };
+            // Per workload only the first `remaining` records can ever
+            // fill the budget (ranks beyond it lose to every earlier
+            // same-source rank), so the gather is bounded by
+            // nn_k × remaining, not the store's full record lists.
+            for (rank, rec) in
+                cache.workload_records(workload).into_iter().take(remaining).enumerate()
+            {
+                let weight = (1.0 + rank as f64) * penalty;
+                candidates.push((weight, dist, rec));
             }
+        }
+        // Stable sort on the weight (distance tiebreak): equal-weight
+        // candidates keep the deterministic closest-first order the
+        // index query produced.
+        candidates.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        for (_, dist, rec) in candidates {
+            if seeds.len() + neighbor_seeds.len() >= opts.max_seeds {
+                break;
+            }
+            let schedule = rec.schedule().remap_for(&geometry);
+            if !schedule.is_valid(&geometry) {
+                continue;
+            }
+            let knobs = schedule.encode();
+            if seen.contains(&knobs) {
+                continue;
+            }
+            seen.push(knobs);
+            neighbor_seeds.push(SeedRecord {
+                schedule,
+                source_latency_s: rec.latency_s,
+                source_device: rec.device_name,
+                distance: dist,
+            });
         }
         cache.counters().record_neighbor_seeds(neighbor_seeds.len());
     }
@@ -338,6 +367,36 @@ mod tests {
         let far = Subgraph::new("ws.far", SubgraphKind::Dense { m: 64, n: 4096, k: 4096 });
         let p = plan(&cache, &far, &presets::rtx_2060(), &opts(8, 64));
         assert!(p.neighbor_seeds.is_empty(), "dense must not borrow conv seeds");
+    }
+
+    #[test]
+    fn neighbor_probe_order_is_distance_weighted() {
+        let cache = TuneCache::in_memory(8);
+        // Two similar workloads: a 60-channel conv (close to the
+        // 64-channel target) and a 48-channel conv (farther).
+        let near = conv_task("ws.near", 60);
+        let far = conv_task("ws.far48", 48);
+        populate_task(&cache, &near, &presets::rtx_2060(), 6, 11, 64);
+        populate_task(&cache, &far, &presets::rtx_2060(), 6, 12, 64);
+
+        let p = plan(&cache, &task(), &presets::jetson_tx2(), &opts(4, 64));
+        assert!(p.exact.is_none() && p.seeds.is_empty());
+        assert_eq!(p.neighbor_seeds.len(), 4);
+        let dmin =
+            p.neighbor_seeds.iter().map(|s| s.distance).fold(f64::INFINITY, f64::min);
+        assert_eq!(
+            p.neighbor_seeds[0].distance, dmin,
+            "the closest neighbor's best record is probed first"
+        );
+        // Distance WEIGHTS rather than gates: the farther workload's
+        // best-ranked records outweigh the nearest workload's tail, so
+        // both sources land inside the cap (the old closest-first scan
+        // spent the whole budget on the nearest workload).
+        assert!(
+            p.neighbor_seeds.iter().any(|s| s.distance > dmin),
+            "farther neighbor's best record must interleave into the probe list: {:?}",
+            p.neighbor_seeds.iter().map(|s| s.distance).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! The redesigned model/session API surface: snapshot immutability on
+//! the zero-copy prediction plane (a pinned `Predictor` must be immune
+//! to later learner updates) and builder-time validation (invalid knob
+//! combinations return errors before a session exists — never a panic
+//! mid-session).
+
+use std::sync::Arc;
+
+use moses::coordinator::{AutoTuner, BackendKind, SnapshotCell, TuneConfig};
+use moses::costmodel::{layout, CostModel, Mask, ModelState, Predictor, RustBackend};
+use moses::program::{Subgraph, SubgraphKind};
+use moses::transfer::Strategy;
+use moses::util::rng::Rng;
+
+fn backend() -> Arc<RustBackend> {
+    Arc::new(RustBackend { pred_batch: 16, train_batch: 16 })
+}
+
+fn labeled_rows(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..n * layout::N_FEATURES).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+    (x, y)
+}
+
+#[test]
+fn pinned_predictor_survives_learner_updates_unchanged() {
+    let mut rng = Rng::new(1);
+    let mut model = CostModel::new(backend(), &mut rng);
+    let (x, y) = labeled_rows(&mut rng, 16);
+
+    let pinned = model.predictor();
+    let before = pinned.predict(&x, 16).unwrap();
+    let pinned_version = pinned.version();
+
+    // Several "learner" updates after the pin.
+    let mask = Mask::all_ones(layout::N_PARAMS);
+    for _ in 0..5 {
+        model.train_step(&x, &y, &mask, 1e-2, 0.0).unwrap();
+    }
+
+    // Bitwise-identical predictions from the pin; the live model moved.
+    assert_eq!(pinned.predict(&x, 16).unwrap(), before);
+    assert_eq!(pinned.version(), pinned_version);
+    let live = model.predictor();
+    assert!(live.version() > pinned_version);
+    assert_ne!(live.predict(&x, 16).unwrap(), before);
+    // Copy-on-write means the storages are distinct objects now.
+    assert!(!Arc::ptr_eq(pinned.state(), live.state()));
+}
+
+#[test]
+fn snapshot_publish_and_pin_share_storage() {
+    let mut rng = Rng::new(2);
+    let model = CostModel::new(backend(), &mut rng);
+
+    // Publish through the cell exactly as the parallel learner actor
+    // does, pin twice as two workers would: every handle aliases the
+    // same storage — the publish→pin round trip never copies params.
+    let cell = SnapshotCell::new(model.shared_state());
+    let worker_a = cell.wait_for(0).unwrap();
+    let worker_b = cell.wait_for(0).unwrap();
+    assert!(Arc::ptr_eq(&worker_a, &worker_b));
+    assert!(Arc::ptr_eq(&worker_a, &model.shared_state()));
+
+    // A pinned view built from the snapshot predicts identically to the
+    // source model.
+    let (x, _) = labeled_rows(&mut rng, 8);
+    let view = Predictor::new(backend(), worker_a);
+    assert_eq!(view.predict(&x, 8).unwrap(), model.predict(&x, 8).unwrap());
+}
+
+#[test]
+fn publishing_a_new_state_leaves_old_pins_untouched() {
+    let mut rng = Rng::new(3);
+    let mut model = CostModel::new(backend(), &mut rng);
+    let (x, y) = labeled_rows(&mut rng, 16);
+
+    let cell = SnapshotCell::new(model.shared_state());
+    let pin_v0 = cell.wait_for(0).unwrap();
+    let before = Predictor::new(backend(), pin_v0.clone()).predict(&x, 16).unwrap();
+
+    let mask = Mask::all_ones(layout::N_PARAMS);
+    model.train_step(&x, &y, &mask, 1e-2, 0.0).unwrap();
+    cell.publish(1, model.shared_state());
+
+    let pin_v1 = cell.wait_for(1).unwrap();
+    assert!(!Arc::ptr_eq(&pin_v0, &pin_v1));
+    assert_eq!(Predictor::new(backend(), pin_v0).predict(&x, 16).unwrap(), before);
+    assert_ne!(Predictor::new(backend(), pin_v1).predict(&x, 16).unwrap(), before);
+}
+
+#[test]
+fn model_state_clone_is_shallow_and_send() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ModelState>();
+
+    let state = ModelState::from_params(vec![0.25; layout::N_PARAMS]);
+    let cloned = state.clone();
+    // Shared storage: the clone's parameter slice is the same allocation.
+    assert!(std::ptr::eq(state.params().as_ptr(), cloned.params().as_ptr()));
+}
+
+// ------------------------------------------------------------ builder ----
+
+#[test]
+fn builder_rejects_jobs_on_the_xla_backend() {
+    let err = AutoTuner::builder(moses::device::presets::rtx_2060())
+        .strategy(Strategy::AnsorRandom)
+        .backend(BackendKind::Xla)
+        .jobs(2)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("rust cost-model backend"), "{err}");
+}
+
+#[test]
+fn builder_rejects_pretrain_strategy_without_a_checkpoint() {
+    // Previously this panicked (`expect`) deep inside model init; the
+    // builder must return an error instead.
+    let err = AutoTuner::builder(moses::device::presets::jetson_tx2())
+        .strategy(Strategy::TensetFinetune)
+        .build()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("pre-trained checkpoint"), "{msg}");
+}
+
+#[test]
+fn builder_rejects_degenerate_budgets_and_radii() {
+    let tx2 = moses::device::presets::jetson_tx2;
+    assert!(AutoTuner::builder(tx2())
+        .strategy(Strategy::AnsorRandom)
+        .trials(0)
+        .build()
+        .is_err());
+    assert!(AutoTuner::builder(tx2())
+        .strategy(Strategy::AnsorRandom)
+        .measure_batch(0)
+        .build()
+        .is_err());
+    assert!(AutoTuner::builder(tx2())
+        .strategy(Strategy::AnsorRandom)
+        .search_params(1, 2)
+        .build()
+        .is_err());
+    assert!(AutoTuner::builder(tx2())
+        .strategy(Strategy::AnsorRandom)
+        .jobs(0)
+        .build()
+        .is_err());
+    assert!(AutoTuner::builder(tx2())
+        .strategy(Strategy::AnsorRandom)
+        .nn(Some(f64::NAN))
+        .build()
+        .is_err());
+    assert!(AutoTuner::builder(tx2())
+        .strategy(Strategy::AnsorRandom)
+        .nn(Some(-0.5))
+        .build()
+        .is_err());
+}
+
+#[test]
+fn builder_produces_the_serialized_config_and_tunes() {
+    let mut tuner = AutoTuner::builder(moses::device::presets::rtx_2060())
+        .trials(8)
+        .measure_batch(4)
+        .strategy(Strategy::AnsorRandom)
+        .seed(5)
+        .backend(BackendKind::Rust)
+        .search_params(16, 2)
+        .nn(None)
+        .build()
+        .unwrap();
+    // The builder's output IS the serialized TuneConfig form.
+    assert_eq!(tuner.config.trials_per_task, 8);
+    assert_eq!(tuner.config.measure_batch, 4);
+    assert_eq!(tuner.config.seed, 5);
+    assert!(tuner.config.nn_radius.is_none());
+
+    let task = Subgraph::new("api.dense", SubgraphKind::Dense { m: 32, n: 128, k: 128 });
+    let session = tuner.tune(&[task]).unwrap();
+    assert_eq!(session.tasks.len(), 1);
+    assert!(session.tasks[0].best_latency_s.is_finite());
+}
+
+#[test]
+fn builder_config_roundtrip_reproduces_flag_built_sessions() {
+    // `.config(&cfg)` (the mechanical migration path) and the typed
+    // setters build identical tuners: same session bit-for-bit.
+    let cfg = TuneConfig {
+        trials_per_task: 12,
+        measure_batch: 4,
+        strategy: Strategy::AnsorRandom,
+        population: 16,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed: 9,
+        ..TuneConfig::default()
+    };
+    let task = || Subgraph::new("api.conv", SubgraphKind::Dense { m: 64, n: 128, k: 256 });
+    let a = AutoTuner::builder(moses::device::presets::rtx_2060())
+        .config(&cfg)
+        .build()
+        .unwrap()
+        .tune(&[task()])
+        .unwrap();
+    let b = AutoTuner::builder(moses::device::presets::rtx_2060())
+        .trials(12)
+        .measure_batch(4)
+        .strategy(Strategy::AnsorRandom)
+        .search_params(16, 2)
+        .backend(BackendKind::Rust)
+        .seed(9)
+        .build()
+        .unwrap()
+        .tune(&[task()])
+        .unwrap();
+    assert_eq!(a.tasks[0].best_latency_s.to_bits(), b.tasks[0].best_latency_s.to_bits());
+    assert_eq!(a.total_measurements(), b.total_measurements());
+}

@@ -47,8 +47,11 @@ fn never_cached_shape_starts_from_neighbor_schedules() {
 
     // Tune a 48-channel conv: its records populate store AND index.
     let similar = conv("nn.similar", 48);
-    let mut src = AutoTuner::from_config(&cfg(1), presets::rtx_2060()).unwrap();
-    src.attach_cache(cache.clone());
+    let mut src = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(1))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     src.tune(std::slice::from_ref(&similar)).unwrap();
     assert!(cache.total_records() > 0);
 
@@ -74,8 +77,11 @@ fn never_cached_shape_starts_from_neighbor_schedules() {
 
     // End to end: the tuner reports the neighbor seeding, and the seed
     // probe grounds round 0 at (or below) the best probed neighbor.
-    let mut warm = AutoTuner::from_config(&cfg(2), presets::rtx_2060()).unwrap();
-    warm.attach_cache(cache.clone());
+    let mut warm = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(2))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let sw = warm.tune(std::slice::from_ref(&novel)).unwrap();
     assert!(!sw.tasks[0].cache_hit);
     assert_eq!(sw.tasks[0].warm_seeds, 0);
@@ -115,14 +121,20 @@ fn empty_index_and_disabled_nn_yield_zero_neighbor_seeds() {
 
     // Populated cache but NN disabled (the --no-nn path).
     let similar = conv("nn.similar", 48);
-    let mut src = AutoTuner::from_config(&cfg(3), presets::rtx_2060()).unwrap();
-    src.attach_cache(cache.clone());
+    let mut src = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(3))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     src.tune(std::slice::from_ref(&similar)).unwrap();
 
     let mut off = cfg(4);
     off.nn_radius = None;
-    let mut tuner = AutoTuner::from_config(&off, presets::rtx_2060()).unwrap();
-    tuner.attach_cache(cache.clone());
+    let mut tuner = AutoTuner::builder(presets::rtx_2060())
+        .config(&off)
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let s = tuner.tune(std::slice::from_ref(&novel)).unwrap();
     assert_eq!(s.tasks[0].neighbor_seeds, 0);
     assert_eq!(s.neighbor_seeded_tasks(), 0);
@@ -139,8 +151,11 @@ fn stale_version_stamps_are_dropped_on_load_and_never_seed() {
     let similar = conv("nn.similar", 48);
     {
         let cache = TuneCache::open(&path, 8).unwrap();
-        let mut src = AutoTuner::from_config(&cfg(5), presets::rtx_2060()).unwrap();
-        src.attach_cache(Arc::new(cache));
+        let mut src = AutoTuner::builder(presets::rtx_2060())
+            .config(&cfg(5))
+            .cache(Arc::new(cache))
+            .build()
+            .unwrap();
         src.tune(std::slice::from_ref(&similar)).unwrap();
     }
     let (mut records, _) = persist::load_records(&path).unwrap();

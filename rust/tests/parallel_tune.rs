@@ -56,11 +56,11 @@ fn cfg(jobs: usize, seed: u64) -> TuneConfig {
 }
 
 fn run(jobs: usize, seed: u64, n_tasks: usize, cache: Option<Arc<TuneCache>>) -> Session {
-    let mut tuner = AutoTuner::from_config(&cfg(jobs, seed), presets::rtx_2060()).unwrap();
+    let mut b = AutoTuner::builder(presets::rtx_2060()).config(&cfg(jobs, seed));
     if let Some(c) = cache {
-        tuner.attach_cache(c);
+        b = b.cache(c);
     }
-    tuner.tune(&tasks(n_tasks)).unwrap()
+    b.build().unwrap().tune(&tasks(n_tasks)).unwrap()
 }
 
 /// Bitwise session fingerprint: per-task outcomes + aggregate clocks.
@@ -200,8 +200,11 @@ fn parallel_determinism_holds_with_a_shared_cache() {
     let mut big = cfg(3, 52);
     big.trials_per_task = 32; // bigger budget: hits downgrade to re-search
     let run_warm = |cache: Arc<TuneCache>| {
-        let mut tuner = AutoTuner::from_config(&big, presets::rtx_2060()).unwrap();
-        tuner.attach_cache(cache);
+        let mut tuner = AutoTuner::builder(presets::rtx_2060())
+            .config(&big)
+            .cache(cache)
+            .build()
+            .unwrap();
         tuner.tune(&tasks(6)).unwrap()
     };
     let a = run_warm(reload(&seed_cache));

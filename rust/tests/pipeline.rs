@@ -51,7 +51,7 @@ fn pretrain(seed: u64, epochs: usize) -> Vec<f32> {
     for _ in 0..epochs {
         model.train_epoch(&x, &y, &mask, 1e-3, 0.0, &mut rng).unwrap();
     }
-    model.params.clone()
+    model.params().to_vec()
 }
 
 fn cfg(strategy: Strategy, trials: usize) -> TuneConfig {
@@ -74,7 +74,11 @@ fn full_pipeline_pretrain_transfer_tune() {
 
     let run = |strategy: Strategy| {
         let model = CostModel::with_params(backend(), pre.clone());
-        let mut tuner = AutoTuner::with_model(&cfg(strategy, 24), target.clone(), model);
+        let mut tuner = AutoTuner::builder(target.clone())
+            .config(&cfg(strategy, 24))
+            .model(model)
+            .build()
+            .unwrap();
         tuner.tune(&small_tasks()).unwrap()
     };
 
@@ -125,12 +129,15 @@ fn transfer_beats_cold_start_on_quality_per_measurement() {
     let target = presets::rtx_2060();
 
     let model_pre = CostModel::with_params(backend(), pre);
-    let mut tuner_pre =
-        AutoTuner::with_model(&cfg(Strategy::TensetFinetune, 16), target.clone(), model_pre);
+    let mut tuner_pre = AutoTuner::builder(target.clone())
+        .config(&cfg(Strategy::TensetFinetune, 16))
+        .model(model_pre)
+        .build()
+        .unwrap();
     let s_pre = tuner_pre.tune(&small_tasks()).unwrap();
 
     let mut tuner_cold =
-        AutoTuner::from_config(&cfg(Strategy::AnsorRandom, 16), target).unwrap();
+        AutoTuner::builder(target).config(&cfg(Strategy::AnsorRandom, 16)).build().unwrap();
     let s_cold = tuner_cold.tune(&small_tasks()).unwrap();
 
     assert!(
@@ -163,15 +170,22 @@ fn moses_masked_training_changes_fewer_parameters() {
         Strategy::Moses(MosesConfig { ratio: Some(0.3), ..MosesConfig::default() }),
         16,
     );
-    let mut tuner_mo = AutoTuner::with_model(&mo_cfg, target.clone(), model_mo);
+    let mut tuner_mo = AutoTuner::builder(target.clone())
+        .config(&mo_cfg)
+        .model(model_mo)
+        .build()
+        .unwrap();
     tuner_mo.tune(&small_tasks()[..1]).unwrap();
-    let moses_moved = moved_frac(&tuner_mo.model().params);
+    let moses_moved = moved_frac(tuner_mo.model().params());
 
     let model_ft = CostModel::with_params(backend(), pre.clone());
-    let mut tuner_ft =
-        AutoTuner::with_model(&cfg(Strategy::TensetFinetune, 16), target, model_ft);
+    let mut tuner_ft = AutoTuner::builder(target)
+        .config(&cfg(Strategy::TensetFinetune, 16))
+        .model(model_ft)
+        .build()
+        .unwrap();
     tuner_ft.tune(&small_tasks()[..1]).unwrap();
-    let ft_moved = moved_frac(&tuner_ft.model().params);
+    let ft_moved = moved_frac(tuner_ft.model().params());
 
     // Variant params under Moses move only by weight decay (tiny but
     // non-zero), so compare Adam-scale movements instead.
@@ -183,8 +197,8 @@ fn moses_masked_training_changes_fewer_parameters() {
             .count() as f64
             / params.len() as f64
     };
-    let moses_big = big_moved(&tuner_mo.model().params);
-    let ft_big = big_moved(&tuner_ft.model().params);
+    let moses_big = big_moved(tuner_mo.model().params());
+    let ft_big = big_moved(tuner_ft.model().params());
     assert!(
         moses_big < ft_big,
         "moses moved {moses_big} (any: {moses_moved}) vs finetune {ft_big} (any: {ft_moved})"
@@ -195,11 +209,10 @@ fn moses_masked_training_changes_fewer_parameters() {
 fn tuning_a_full_zoo_model_terminates() {
     // Whole SqueezeNet (23 tasks) through the rust backend at tiny
     // budget: exercises every subgraph kind end to end.
-    let mut tuner = AutoTuner::from_config(
-        &cfg(Strategy::RandomSearch, 8),
-        presets::rtx_2080(),
-    )
-    .unwrap();
+    let mut tuner = AutoTuner::builder(presets::rtx_2080())
+        .config(&cfg(Strategy::RandomSearch, 8))
+        .build()
+        .unwrap();
     let session = tuner.tune(&zoo::squeezenet().tasks()).unwrap();
     assert_eq!(session.tasks.len(), 23);
     assert!(session.total_best_latency_ms() > 0.0);
@@ -213,7 +226,7 @@ fn virtual_clock_reflects_device_economics() {
     // efficiency gains are larger there).
     let run_on = |arch: moses::device::DeviceArch| {
         let mut tuner =
-            AutoTuner::from_config(&cfg(Strategy::RandomSearch, 8), arch).unwrap();
+            AutoTuner::builder(arch).config(&cfg(Strategy::RandomSearch, 8)).build().unwrap();
         tuner.tune(&small_tasks()[..1]).unwrap().search_time_s()
     };
     let t_2060 = run_on(presets::rtx_2060());
@@ -252,7 +265,7 @@ fn prop_session_invariants_hold_for_random_configs() {
             1 => presets::jetson_tx2(),
             _ => presets::tesla_k80(),
         };
-        let mut tuner = AutoTuner::with_model(&config, target, model);
+        let mut tuner = AutoTuner::builder(target).config(&config).model(model).build().unwrap();
         let session = tuner.tune(&small_tasks()[..1]).unwrap();
         let r = &session.tasks[0];
 

@@ -132,14 +132,20 @@ fn repeat_run_is_measurement_free() {
     ];
     let cache = Arc::new(TuneCache::in_memory(8));
 
-    let mut first = AutoTuner::from_config(&cfg(1), presets::rtx_2060()).unwrap();
-    first.attach_cache(cache.clone());
+    let mut first = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(1))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let s1 = first.tune(&tasks).unwrap();
     assert!(s1.total_measurements() > 0);
     assert_eq!(s1.cache_hits(), 0);
 
-    let mut second = AutoTuner::from_config(&cfg(2), presets::rtx_2060()).unwrap();
-    second.attach_cache(cache.clone());
+    let mut second = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(2))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let s2 = second.tune(&tasks).unwrap();
     assert_eq!(s2.total_measurements(), 0, "repeat run must be served from cache");
     assert_eq!(s2.cache_hits(), 2);
@@ -160,8 +166,11 @@ fn cross_device_records_seed_target_search() {
     let cache = Arc::new(TuneCache::in_memory(8));
 
     // A session on the source device populates the cache.
-    let mut src = AutoTuner::from_config(&cfg(5), presets::rtx_2060()).unwrap();
-    src.attach_cache(cache.clone());
+    let mut src = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(5))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     src.tune(std::slice::from_ref(&task)).unwrap();
     assert!(cache.total_records() > 0);
 
@@ -177,8 +186,11 @@ fn cross_device_records_seed_target_search() {
     assert!(plan.seeds.iter().all(|s| s.source_device == "rtx2060"));
 
     // Seeded tuning on the target injects the seeds into the search.
-    let mut warm = AutoTuner::from_config(&cfg(6), presets::jetson_tx2()).unwrap();
-    warm.attach_cache(cache.clone());
+    let mut warm = AutoTuner::builder(presets::jetson_tx2())
+        .config(&cfg(6))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let sw = warm.tune(std::slice::from_ref(&task)).unwrap();
     assert!(!sw.tasks[0].cache_hit);
     assert!(sw.tasks[0].warm_seeds > 0, "search population must be seeded");
@@ -203,7 +215,7 @@ fn cross_device_records_seed_target_search() {
         );
         // Fewer-trials claim: the warm session reaches that quality at
         // round 0; the cold session may or may not, but never earlier.
-        let mut cold = AutoTuner::from_config(&cfg(6), presets::jetson_tx2()).unwrap();
+        let mut cold = AutoTuner::builder(presets::jetson_tx2()).config(&cfg(6)).build().unwrap();
         let sc = cold.tune(std::slice::from_ref(&task)).unwrap();
         let reach = |h: &[f64]| {
             h.iter()
@@ -220,8 +232,11 @@ fn cross_device_records_seed_target_search() {
 
     // Commit-after-measure: the target device's results are now cached
     // too, so a repeat on the target is measurement-free.
-    let mut again = AutoTuner::from_config(&cfg(7), presets::jetson_tx2()).unwrap();
-    again.attach_cache(cache.clone());
+    let mut again = AutoTuner::builder(presets::jetson_tx2())
+        .config(&cfg(7))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let sa = again.tune(std::slice::from_ref(&task)).unwrap();
     assert_eq!(sa.total_measurements(), 0);
     assert_eq!(sa.cache_hits(), 1);
@@ -235,23 +250,32 @@ fn larger_budget_overrides_exact_hit_and_reuses_local_records() {
     let task = conv_task("lb.conv");
     let cache = Arc::new(TuneCache::in_memory(8));
 
-    let mut small = AutoTuner::from_config(&cfg(9), presets::rtx_2060()).unwrap();
-    small.attach_cache(cache.clone());
+    let mut small = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(9))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     small.tune(std::slice::from_ref(&task)).unwrap();
     let key = WorkloadKey::new(&task, &presets::rtx_2060());
     let cached_best = cache.best(&key).unwrap().latency_s;
 
     // Equal budget: exact hit, zero measurements.
-    let mut same = AutoTuner::from_config(&cfg(10), presets::rtx_2060()).unwrap();
-    same.attach_cache(cache.clone());
+    let mut same = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(10))
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let ss = same.tune(std::slice::from_ref(&task)).unwrap();
     assert_eq!(ss.total_measurements(), 0);
 
     // Double the budget: the hit is refused, search runs again...
     let mut big_cfg = cfg(11);
     big_cfg.trials_per_task = 32;
-    let mut big = AutoTuner::from_config(&big_cfg, presets::rtx_2060()).unwrap();
-    big.attach_cache(cache.clone());
+    let mut big = AutoTuner::builder(presets::rtx_2060())
+        .config(&big_cfg)
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let sb = big.tune(std::slice::from_ref(&task)).unwrap();
     assert!(!sb.tasks[0].cache_hit);
     assert!(sb.total_measurements() > 0);
@@ -267,8 +291,11 @@ fn larger_budget_overrides_exact_hit_and_reuses_local_records() {
     // is measurement-free again.
     let mut big2_cfg = cfg(12);
     big2_cfg.trials_per_task = 32;
-    let mut big2 = AutoTuner::from_config(&big2_cfg, presets::rtx_2060()).unwrap();
-    big2.attach_cache(cache.clone());
+    let mut big2 = AutoTuner::builder(presets::rtx_2060())
+        .config(&big2_cfg)
+        .cache(cache.clone())
+        .build()
+        .unwrap();
     let sb2 = big2.tune(std::slice::from_ref(&task)).unwrap();
     assert_eq!(sb2.total_measurements(), 0);
 }

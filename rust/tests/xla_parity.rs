@@ -149,7 +149,7 @@ fn xi_parity() {
     let agree = ma
         .values
         .iter()
-        .zip(&mb.values)
+        .zip(mb.values.iter())
         .filter(|(x, y)| x == y)
         .count() as f64
         / layout::N_PARAMS as f64;
