@@ -15,6 +15,7 @@ use moses::runtime::Engine;
 use moses::util::bench::Bencher;
 
 fn main() {
+    moses::util::log::init_from_env(false);
     if let Some(reason) = Engine::xla_skip_reason() {
         println!("fig4: SKIPPED ({reason})");
         return;

@@ -12,6 +12,7 @@ use moses::runtime::Engine;
 use moses::util::bench::Bencher;
 
 fn main() {
+    moses::util::log::init_from_env(false);
     if let Some(reason) = Engine::xla_skip_reason() {
         println!("fig5: SKIPPED ({reason})");
         return;

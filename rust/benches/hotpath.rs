@@ -9,6 +9,7 @@ use std::sync::Arc;
 use moses::coordinator::{AutoTuner, BackendKind, SnapshotCell, TuneConfig};
 use moses::costmodel::{layout, CostModel, Mask, RustBackend, XlaBackend};
 use moses::device::{presets, DeviceSim};
+use moses::obs::{Lane, Recorder, TraceScope};
 use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
 use moses::runtime::Engine;
 use moses::search::{EvolutionarySearch, SearchPolicy};
@@ -27,6 +28,7 @@ fn task() -> Subgraph {
 }
 
 fn main() {
+    moses::util::log::init_from_env(false);
     let b = Bencher::default();
     let sub = task();
     let gen = SpaceGenerator::new(sub.geometry());
@@ -44,6 +46,34 @@ fn main() {
 
     let xi: Vec<f32> = (0..layout::N_PARAMS).map(|_| rng.uniform() as f32).collect();
     b.run("mask_from_xi_ratio", || Mask::from_xi_ratio(&xi, 0.5));
+
+    // --- trace recording (the obs plane) ----------------------------------
+    // Disabled is what every un-traced session pays per pipeline stage
+    // (budget: < 2% regression with tracing off — EXPERIMENTS.md §Perf);
+    // enabled is the marginal cost of recording one stage span.
+    let mut off_scope = TraceScope::disabled();
+    let mut off_vt = 0.0f64;
+    b.run("obs_span_disabled", || {
+        off_vt += 1e-3;
+        let t = off_scope.begin(off_vt);
+        off_scope.end(t, 0, "round", off_vt + 5e-4, &[("round", 1.0)], &[]);
+    });
+    let on_rec = Recorder::enabled();
+    let mut on_scope = on_rec.scope(Lane::Task(0), "bench");
+    let mut on_vt = 0.0f64;
+    let mut on_i = 0usize;
+    b.run("obs_span_enabled", || {
+        // Drain periodically so warmup iterations don't accumulate an
+        // unbounded sink (amortized cost ~0).
+        on_i += 1;
+        if on_i % 1024 == 0 {
+            std::hint::black_box(on_rec.drain());
+        }
+        on_vt += 1e-3;
+        let t = on_scope.begin(on_vt);
+        on_scope.end(t, 0, "round", on_vt + 5e-4, &[("round", 1.0)], &[]);
+    });
+    std::hint::black_box(on_rec.drain());
 
     // --- batched scoring (the inner search loop) ------------------------
     let pop: Vec<_> = gen.sample_distinct(&mut rng, 64);
@@ -250,5 +280,15 @@ fn main() {
             "bench xla_*: SKIPPED ({})",
             Engine::xla_skip_reason().unwrap_or("unknown")
         );
+    }
+
+    // Perf-pass artifact: `MOSES_BENCH_DIR=out cargo bench --bench
+    // hotpath` drops a dated BENCH_<date>.json for EXPERIMENTS.md §Perf
+    // and the CI upload.
+    if let Ok(dir) = std::env::var("MOSES_BENCH_DIR") {
+        match b.write_json(std::path::Path::new(&dir)) {
+            Ok(p) => println!("bench results written to {}", p.display()),
+            Err(e) => moses::warn!("bench: writing results to {dir:?} failed: {e}"),
+        }
     }
 }

@@ -33,6 +33,7 @@ use anyhow::Result;
 
 use crate::costmodel::{layout, CostModel, Mask, ModelState, Predictor};
 use crate::device::VirtualClock;
+use crate::obs::TraceScope;
 use crate::program::N_FEATURES;
 use crate::transfer::MosesAdapter;
 use crate::util::rng::Rng;
@@ -86,6 +87,9 @@ pub(crate) struct Learner {
     /// All-ones mask for adapter-less strategies, built once: handing
     /// it to a train round is an `Arc` clone, not an N_PARAMS alloc.
     full_mask: Mask,
+    /// The learning plane's trace emitter (not part of
+    /// [`LearnerState`]: a scope is bound to one session's recorder).
+    scope: TraceScope,
 }
 
 /// Everything but the backend handle — `Send`, so a learner can be
@@ -110,6 +114,7 @@ impl Learner {
             best_gflops_per_task: Vec::new(),
             task_clocks: Vec::new(),
             full_mask: Mask::all_ones(layout::N_PARAMS),
+            scope: TraceScope::disabled(),
         }
     }
 
@@ -126,7 +131,14 @@ impl Learner {
             best_gflops_per_task: state.best_gflops_per_task,
             task_clocks: state.task_clocks,
             full_mask: Mask::all_ones(layout::N_PARAMS),
+            scope: TraceScope::disabled(),
         }
+    }
+
+    /// Attach this learner to a session's trace (actor mode re-attaches
+    /// after [`Learner::from_state`] on the actor thread).
+    pub fn set_scope(&mut self, scope: TraceScope) {
+        self.scope = scope;
     }
 
     pub fn into_state(self) -> LearnerState {
@@ -215,6 +227,31 @@ impl Learner {
     pub fn absorb(&mut self, batch: LearnBatch, rng: &mut Rng) -> Result<()> {
         let ord = batch.task_ord;
         self.ensure_task(ord);
+        let timer = self.scope.begin(self.task_clocks[ord].seconds());
+        let samples = batch.samples.len();
+        let trained = self.absorb_inner(batch, rng)?;
+        if self.scope.enabled() {
+            self.scope.end(
+                timer,
+                0,
+                "learn",
+                self.task_clocks[ord].seconds(),
+                &[
+                    ("replay", self.replay.len() as f64),
+                    ("samples", samples as f64),
+                    ("task", ord as f64),
+                    ("trained", if trained { 1.0 } else { 0.0 }),
+                ],
+                &[],
+            );
+        }
+        Ok(())
+    }
+
+    /// [`Learner::absorb`] minus the tracing; returns whether the batch
+    /// carried labels and so trained the model.
+    fn absorb_inner(&mut self, batch: LearnBatch, rng: &mut Rng) -> Result<bool> {
+        let ord = batch.task_ord;
         for s in batch.samples {
             if s.gflops > self.best_gflops_per_task[ord] {
                 self.best_gflops_per_task[ord] = s.gflops;
@@ -222,7 +259,7 @@ impl Learner {
             self.push_replay(s);
         }
         let Some(train) = batch.train else {
-            return Ok(());
+            return Ok(false);
         };
         let denom = self.best_gflops_per_task[ord].max(1e-9) as f32;
         let y_norm: Vec<f32> = train.y_raw.iter().map(|g| g / denom).collect();
@@ -245,7 +282,21 @@ impl Learner {
                 self.task_clocks[ord].charge_update();
             }
         }
-        Ok(())
+        Ok(true)
+    }
+
+    /// Record a snapshot publication: the version is deterministic, the
+    /// stash depth (batches queued out of order) is
+    /// scheduling-dependent and lands in `diag`.  Zero virtual
+    /// duration, so session-time reconciliation is unaffected.
+    pub fn trace_publish(&mut self, version: u64, stash: usize) {
+        self.scope.instant(
+            0,
+            "publish",
+            0.0,
+            &[("version", version as f64)],
+            &[("stash", stash as f64)],
+        );
     }
 }
 
@@ -393,6 +444,7 @@ pub(crate) fn run_learner_actor(
             live = survivors;
             version += 1;
             cell.publish(version, learner.snapshot_state());
+            learner.trace_publish(version, pending.len());
             seq += 1;
         }
         let _ = wave_done.send(version);

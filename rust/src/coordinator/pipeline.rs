@@ -40,6 +40,7 @@ use super::session::TaskResult;
 use super::tuner::TuneConfig;
 use crate::costmodel::Predictor;
 use crate::device::{DeviceSim, VirtualClock};
+use crate::obs::{SpanTimer, TraceScope};
 use crate::program::{featurize, Geometry, Schedule, Subgraph, TensorProgram, N_FEATURES};
 use crate::search::{EvolutionarySearch, RandomSearch, SearchPolicy};
 use crate::transfer::{AdaptiveController, Strategy};
@@ -112,6 +113,9 @@ pub(crate) struct TaskPipeline {
     /// Last measured batch awaiting the AC's post-update stability
     /// observation (consumed by the next stage that sees the model).
     pending_observe: Option<(Vec<f32>, usize)>,
+    /// This task's trace emitter (disabled scopes reduce every span to
+    /// one branch).
+    scope: TraceScope,
 }
 
 impl TaskPipeline {
@@ -122,6 +126,7 @@ impl TaskPipeline {
         sim: DeviceSim,
         cache: Option<Arc<TuneCache>>,
         rng: Rng,
+        scope: TraceScope,
     ) -> TaskPipeline {
         let geometry = task.geometry();
         let default_sched = Schedule::default_for(&geometry);
@@ -167,6 +172,7 @@ impl TaskPipeline {
             warm_seeds_n: 0,
             neighbor_seeds_n: 0,
             pending_observe: None,
+            scope,
         }
     }
 
@@ -200,12 +206,59 @@ impl TaskPipeline {
         self.clock.clone()
     }
 
+    /// Open a span at the task's current virtual time (snapshot-pin
+    /// waits bracket the wait with this and [`TaskPipeline::trace_pin`]).
+    pub fn pin_timer(&self) -> SpanTimer {
+        self.scope.begin(self.clock.seconds())
+    }
+
+    /// Record a completed snapshot pin: the wave's requested version in
+    /// `args` (deterministic), the actually-pinned model version and the
+    /// wall-clock wait in `diag` (the learner may have published past
+    /// the requested version, which is scheduling-dependent).
+    pub fn trace_pin(&mut self, timer: SpanTimer, requested: u64, model_version: u64) {
+        self.scope.end(
+            timer,
+            1,
+            "pin",
+            self.clock.seconds(),
+            &[("version", requested as f64)],
+            &[("model_version", model_version as f64)],
+        );
+    }
+
     /// Stage 1: consult the tune cache.  An exact-device hit at a
     /// sufficient trial budget completes the task with zero measured
     /// trials; otherwise local records ground the best, the most
     /// promising cross-device/neighbor seeds are probed on device, and
     /// every seed joins the evolutionary population.
     pub fn warm_start(&mut self) -> Result<StageOutput> {
+        let timer = self.scope.begin(self.clock.seconds());
+        let out = self.warm_start_inner();
+        if self.scope.enabled() {
+            let (hit, probes) = match &out {
+                Ok(StageOutput::Complete(_)) => (1.0, 0.0),
+                Ok(StageOutput::Learn(b)) => (0.0, b.samples.len() as f64),
+                _ => (0.0, 0.0),
+            };
+            self.scope.end(
+                timer,
+                0,
+                "warm_start",
+                self.clock.seconds(),
+                &[
+                    ("hit", hit),
+                    ("neighbor_seeds", self.neighbor_seeds_n as f64),
+                    ("probes", probes),
+                    ("warm_seeds", self.warm_seeds_n as f64),
+                ],
+                &[],
+            );
+        }
+        out
+    }
+
+    fn warm_start_inner(&mut self) -> Result<StageOutput> {
         let mut warm_seeds: Vec<Schedule> = Vec::new();
         let mut neighbor_seeds: Vec<Schedule> = Vec::new();
         let mut local_seeds: Vec<Schedule> = Vec::new();
@@ -312,7 +365,36 @@ impl TaskPipeline {
     /// predicted top (AC-terminated rounds).  Returns the round's
     /// `LearnBatch`, or `Exhausted` once the budget is spent or the
     /// schedule space ran dry.
+    ///
+    /// Every call — including the terminal `Exhausted` one — records a
+    /// "round" span: the exhausted path still charges the virtual clock
+    /// (a trailing AC observation), and stage spans must cover every
+    /// charge for the trace's virtual time to reconcile with the
+    /// session total.
     pub fn run_round(&mut self, model: &Predictor) -> Result<StageOutput> {
+        let timer = self.scope.begin(self.clock.seconds());
+        let round = self.round;
+        let measured_before = self.measured;
+        let out = self.run_round_inner(model);
+        if self.scope.enabled() {
+            let exhausted = matches!(out, Ok(StageOutput::Exhausted));
+            self.scope.end(
+                timer,
+                0,
+                "round",
+                self.clock.seconds(),
+                &[
+                    ("exhausted", if exhausted { 1.0 } else { 0.0 }),
+                    ("measured", (self.measured - measured_before) as f64),
+                    ("round", round as f64),
+                ],
+                &[],
+            );
+        }
+        out
+    }
+
+    fn run_round_inner(&mut self, model: &Predictor) -> Result<StageOutput> {
         // The AC watches post-update prediction stability on the last
         // measured batch; the learner's update for it is visible in
         // `model` by the time this stage runs.
@@ -321,6 +403,7 @@ impl TaskPipeline {
             return Ok(StageOutput::Exhausted);
         }
         let round = self.round;
+        let propose_timer = self.scope.begin(self.clock.seconds());
         let candidates = {
             let task = &self.task;
             let seen_fps = &self.seen_fps;
@@ -344,6 +427,14 @@ impl TaskPipeline {
                 ),
             }
         };
+        self.scope.end(
+            propose_timer,
+            1,
+            "propose",
+            self.clock.seconds(),
+            &[("candidates", candidates.len() as f64), ("round", round as f64)],
+            &[],
+        );
         if candidates.is_empty() {
             return Ok(StageOutput::Exhausted);
         }
@@ -363,6 +454,7 @@ impl TaskPipeline {
                 Strategy::TensetPretrain => &candidates[..1],
                 _ => &candidates[..],
             };
+            let measure_timer = self.scope.begin(self.clock.seconds());
             let mut batch_x = Vec::with_capacity(to_measure.len() * N_FEATURES);
             let mut batch_y = Vec::with_capacity(to_measure.len());
             let mut samples = Vec::with_capacity(to_measure.len());
@@ -387,6 +479,14 @@ impl TaskPipeline {
                 batch_y.push(gflops as f32);
                 samples.push(Sample { task_ord: self.ord, feats, gflops });
             }
+            self.scope.end(
+                measure_timer,
+                1,
+                "measure",
+                self.clock.seconds(),
+                &[("measured", to_measure.len() as f64), ("round", round as f64)],
+                &[],
+            );
             let train = if self.cfg.strategy.trains_online() {
                 Some(TrainBatch { x: batch_x.clone(), y_raw: batch_y })
             } else {
@@ -414,6 +514,7 @@ impl TaskPipeline {
             self.clock.charge_query();
             let top = top_prediction(&preds);
             let prog = TensorProgram::new(self.task.clone(), candidates[top]);
+            let measure_timer = self.scope.begin(self.clock.seconds());
             let meas = self.sim.measure(&prog, &mut self.rng);
             self.clock.charge_measurement(meas.cost_s);
             self.measured += 1;
@@ -426,6 +527,14 @@ impl TaskPipeline {
                 }
                 self.evo.add_seed(candidates[top]);
             }
+            self.scope.end(
+                measure_timer,
+                1,
+                "measure",
+                self.clock.seconds(),
+                &[("measured", 1.0), ("round", round as f64)],
+                &[],
+            );
             // The rest survive for the finalize re-rank under the final
             // model — not a running argmax under stale scores.
             for (i, s) in candidates.iter().enumerate() {
@@ -455,6 +564,30 @@ impl TaskPipeline {
     /// the default-schedule fallback, and commit measured outcomes plus
     /// the final choice to the tune cache.
     pub fn finalize(&mut self, model: &Predictor) -> Result<TaskResult> {
+        let timer = self.scope.begin(self.clock.seconds());
+        let out = self.finalize_inner(model);
+        if self.scope.enabled() {
+            let (measured, predicted_only) = match &out {
+                Ok(r) => (r.measured as f64, r.predicted_only as f64),
+                Err(_) => (0.0, 0.0),
+            };
+            self.scope.end(
+                timer,
+                0,
+                "finalize",
+                self.clock.seconds(),
+                &[
+                    ("commits", self.cache_outcomes.len() as f64),
+                    ("measured", measured),
+                    ("predicted_only", predicted_only),
+                ],
+                &[],
+            );
+        }
+        out
+    }
+
+    fn finalize_inner(&mut self, model: &Predictor) -> Result<TaskResult> {
         // A trailing AC observation (from the last measured round) keeps
         // the query accounting aligned with the sequential loop.
         self.flush_pending_observe(model)?;
@@ -531,6 +664,7 @@ mod tests {
     use super::*;
     use crate::costmodel::{CostModel, RustBackend};
     use crate::device::presets;
+    use crate::obs::{Lane, Recorder};
     use crate::program::SubgraphKind;
 
     fn cfg() -> TuneConfig {
@@ -566,6 +700,7 @@ mod tests {
             DeviceSim::new(presets::rtx_2060()),
             None,
             Rng::new(5),
+            TraceScope::disabled(),
         );
         let m = model();
         match pipe.warm_start().unwrap() {
@@ -595,6 +730,40 @@ mod tests {
             assert!(w[1] <= w[0] + 1e-12);
         }
         assert!(pipe.clock().seconds() > 0.0);
+    }
+
+    #[test]
+    fn traced_stages_cover_the_whole_virtual_clock() {
+        let task = Subgraph::new("pp.dense2", SubgraphKind::Dense { m: 64, n: 128, k: 256 });
+        let c = cfg();
+        let rec = Recorder::enabled();
+        let mut pipe = TaskPipeline::new(
+            task,
+            0,
+            &c,
+            DeviceSim::new(presets::rtx_2060()),
+            None,
+            Rng::new(5),
+            rec.scope(Lane::Task(0), "pp.dense2"),
+        );
+        let m = model();
+        pipe.warm_start().unwrap();
+        while !matches!(pipe.run_round(&m).unwrap(), StageOutput::Exhausted) {}
+        pipe.finalize(&m).unwrap();
+
+        let evs = rec.drain();
+        let stage_names: Vec<&str> =
+            evs.iter().filter(|e| e.depth == 0).map(|e| e.name.as_str()).collect();
+        assert_eq!(stage_names.first(), Some(&"warm_start"));
+        assert_eq!(stage_names.last(), Some(&"finalize"));
+        assert!(stage_names[1..stage_names.len() - 1].iter().all(|n| *n == "round"));
+        // Per-lane seqs are contiguous from 0 in drain order.
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+        }
+        // Every virtual-clock charge happened inside a stage span.
+        let vt_sum: f64 = evs.iter().filter(|e| e.depth == 0).map(|e| e.vt_dur_s).sum();
+        assert!((vt_sum - pipe.clock().seconds()).abs() < 1e-9);
     }
 
     #[test]

@@ -38,6 +38,7 @@ use super::pipeline::{StageOutput, TaskPipeline};
 use super::session::{Session, TaskResult};
 use crate::costmodel::{layout, Backend, CostModel, Predictor, RustBackend, XlaBackend};
 use crate::device::{DeviceArch, DeviceSim, SessionTiming, VirtualClock};
+use crate::obs::{Lane, Recorder, TraceScope};
 use crate::program::Subgraph;
 use crate::runtime::Engine;
 use crate::transfer::{self, MosesAdapter, Strategy};
@@ -178,6 +179,7 @@ pub struct AutoTunerBuilder {
     cfg: TuneConfig,
     model: Option<CostModel>,
     cache: Option<Arc<TuneCache>>,
+    recorder: Recorder,
 }
 
 impl AutoTunerBuilder {
@@ -278,6 +280,15 @@ impl AutoTunerBuilder {
         self
     }
 
+    /// Record sessions into `recorder` (see [`crate::obs`]): pipeline
+    /// stages, learner batches and snapshot publish/pin events become
+    /// trace spans.  The default is a disabled recorder, whose
+    /// instrumentation cost is one branch per span.
+    pub fn trace(mut self, recorder: Recorder) -> Self {
+        self.recorder = recorder;
+        self
+    }
+
     /// Validate the configuration and construct the tuner.
     pub fn build(self) -> Result<AutoTuner> {
         let cfg = &self.cfg;
@@ -349,6 +360,7 @@ impl AutoTunerBuilder {
             rng,
             cache: self.cache,
             learner: Some(Learner::new(self.cfg.learner_config(), model, adapter)),
+            recorder: self.recorder,
         })
     }
 }
@@ -366,6 +378,8 @@ pub struct AutoTuner {
     /// The learning plane.  `None` only transiently while a parallel
     /// session owns the state on the actor thread.
     learner: Option<Learner>,
+    /// Session trace sink (disabled by default).
+    recorder: Recorder,
 }
 
 impl AutoTuner {
@@ -376,6 +390,7 @@ impl AutoTuner {
             cfg: TuneConfig::default(),
             model: None,
             cache: None,
+            recorder: Recorder::default(),
         }
     }
 
@@ -423,6 +438,7 @@ impl AutoTuner {
     fn tune_inline(&mut self, tasks: &[Subgraph]) -> Result<Session> {
         let learner = self.learner.as_mut().expect("learner state present");
         learner.reset_task_clocks();
+        learner.set_scope(self.recorder.scope(Lane::Learner, "learner"));
         let ord_base = learner.task_count();
         let mut results = Vec::with_capacity(tasks.len());
         let mut timing = SessionTiming::new();
@@ -435,6 +451,7 @@ impl AutoTuner {
                 self.sim.clone(),
                 self.cache.clone(),
                 trng,
+                self.recorder.scope(Lane::Task(ord_base + i), &task.name),
             );
             let result = match pipe.warm_start()? {
                 StageOutput::Complete(r) => *r,
@@ -497,6 +514,7 @@ impl AutoTuner {
             let actor = {
                 let pred_batch = cfg.rust_pred_batch;
                 let train_batch = cfg.rust_train_batch;
+                let actor_rec = self.recorder.clone();
                 s.spawn(move || -> Result<LearnerState> {
                     // Poison the snapshot cell on EVERY actor exit —
                     // including panics, which would otherwise leave the
@@ -512,7 +530,8 @@ impl AutoTuner {
                     let _poison_guard = PoisonOnExit(cell);
                     let backend: Arc<dyn Backend> =
                         Arc::new(RustBackend { pred_batch, train_batch });
-                    let learner = Learner::from_state(lcfg, backend, state);
+                    let mut learner = Learner::from_state(lcfg, backend, state);
+                    learner.set_scope(actor_rec.scope(Lane::Learner, "learner"));
                     run_learner_actor(learner, rx, cell, done_tx).map(Learner::into_state)
                 })
             };
@@ -533,6 +552,8 @@ impl AutoTuner {
                         let tx = tx.clone();
                         let sim = self.sim.clone();
                         let cache = self.cache.clone();
+                        let scope =
+                            self.recorder.scope(Lane::Task(ord_base + idx), &task.name);
                         let cfg = &cfg;
                         s.spawn(move || {
                             run_task_worker(
@@ -545,6 +566,7 @@ impl AutoTuner {
                                 cell,
                                 wave_base,
                                 trng,
+                                scope,
                             )
                         })
                     })
@@ -644,6 +666,7 @@ fn run_task_worker(
     cell: &SnapshotCell,
     wave_base: u64,
     rng: Rng,
+    scope: TraceScope,
 ) -> Result<(TaskResult, VirtualClock)> {
     // The guard guarantees a `Finished` marker reaches the learner
     // exactly once on every exit path (success, error, even panic) —
@@ -670,7 +693,7 @@ fn run_task_worker(
         }
     }
     let mut guard = FinishGuard { tx: tx.clone(), ord, sent: 0, marked: false };
-    let mut pipe = TaskPipeline::new(task, ord, cfg, sim, cache, rng);
+    let mut pipe = TaskPipeline::new(task, ord, cfg, sim, cache, rng, scope);
     match pipe.warm_start()? {
         StageOutput::Complete(r) => return Ok((*r, pipe.clock())),
         StageOutput::Learn(batch) => {
@@ -688,9 +711,12 @@ fn run_task_worker(
         // Version `wave_base + sent` covers exactly the batches (ours
         // and every wave sibling's) that this round's predictions must
         // observe under the round-major deterministic order.
-        let Some(snapshot) = cell.wait_for(wave_base + guard.sent as u64) else {
+        let requested = wave_base + guard.sent as u64;
+        let pin_timer = pipe.pin_timer();
+        let Some(snapshot) = cell.wait_for(requested) else {
             anyhow::bail!("learner failed; no further model snapshots");
         };
+        pipe.trace_pin(pin_timer, requested, snapshot.version());
         let view = Predictor::new(backend.clone(), snapshot);
         match pipe.run_round(&view)? {
             StageOutput::Learn(batch) => {
@@ -702,9 +728,12 @@ fn run_task_worker(
             StageOutput::Complete(_) => unreachable!("rounds never complete"),
         }
     }
-    let Some(snapshot) = cell.wait_for(wave_base + guard.sent as u64) else {
+    let requested = wave_base + guard.sent as u64;
+    let pin_timer = pipe.pin_timer();
+    let Some(snapshot) = cell.wait_for(requested) else {
         anyhow::bail!("learner failed; no further model snapshots");
     };
+    pipe.trace_pin(pin_timer, requested, snapshot.version());
     // No more batches will come: release the learner's round barrier
     // NOW so wave siblings don't stall behind this task's finalize
     // (one measurement + cache commits).  The needed snapshot is

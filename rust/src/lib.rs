@@ -79,6 +79,19 @@
 //! persist as a JSONL append log with compaction, so tuning knowledge
 //! accumulates across sessions and hosts; hit/miss/seed counters live
 //! in [`metrics::cache`].
+//!
+//! ## The observability plane ([`obs`])
+//!
+//! A span/event recorder threads through all three planes of the
+//! engine — pipeline stages, the learner actor, the tunecache — and
+//! records each stage against *both* clocks: the deterministic virtual
+//! device clock and the harness wall clock.  `moses tune --trace`
+//! writes a versioned JSONL trace; `moses trace report` breaks the
+//! session down per task and per stage; `moses trace chrome` exports a
+//! flame view.  Tracing is deterministic in event content (the
+//! `(seed, jobs)` reproducibility guarantee extends to traces modulo
+//! wall-clock fields) and free when disabled — see the [`obs`] module
+//! docs for the two-clock duality and the determinism contract.
 
 pub mod coordinator;
 pub mod costmodel;
@@ -86,6 +99,7 @@ pub mod dataset;
 pub mod device;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod program;
 pub mod runtime;
 pub mod search;

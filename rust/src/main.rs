@@ -7,6 +7,7 @@
 //!   export-dataset  Convert tunecache records into pretraining corpora.
 //!   eval            Evaluate a checkpoint's ranking quality on a device.
 //!   tables          Regenerate the paper's tables/figures (fig4|fig5|table1|fig6).
+//!   trace           Inspect a session trace (report | chrome export).
 //!   devices         List simulated device presets.
 //!
 //! Python never runs here: the cost model executes through AOT-compiled
@@ -24,6 +25,7 @@ use moses::dataset::io as ds_io;
 use moses::device::presets;
 use moses::metrics::experiments::{self, ExpConfig};
 use moses::models::zoo;
+use moses::obs::{chrome, Recorder, Trace, TraceHeader, TRACE_VERSION};
 use moses::program::{featurize, SpaceGenerator, TensorProgram, N_FEATURES};
 use moses::transfer::Strategy;
 use moses::tunecache::{DEFAULT_TOPK, TuneCache};
@@ -42,6 +44,9 @@ fn backend_kind(name: &str) -> Result<BackendKind> {
 }
 
 fn main() {
+    // Default verbosity until a subcommand re-initializes from its own
+    // flags (`RUST_LOG` always wins — see `util::log`).
+    moses::util::log::init_from_env(false);
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&args) {
         eprintln!("error: {e:#}");
@@ -62,6 +67,7 @@ fn run(args: &[String]) -> Result<()> {
         "export-dataset" => cmd_export_dataset(rest),
         "eval" => cmd_eval(rest),
         "tables" => cmd_tables(rest),
+        "trace" => cmd_trace(rest),
         "devices" => cmd_devices(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -82,6 +88,7 @@ fn print_usage() {
          \x20 export-dataset  Convert tunecache records into pretraining corpora\n\
          \x20 eval            Evaluate a checkpoint's ranking quality\n\
          \x20 tables          Regenerate paper tables/figures (fig4|fig5|table1|fig6|all)\n\
+         \x20 trace           Inspect a session trace (report | chrome export)\n\
          \x20 devices         List simulated device presets\n\n\
          Run `moses <command> --help` for flags."
     );
@@ -117,12 +124,15 @@ fn cmd_tune(args: &[String]) -> Result<()> {
              (empty = built-in default)",
         )
         .switch("no-nn", "disable nearest-neighbor warm start (exact cache hits only)")
+        .opt("tasks", "0", "tune only the first N tasks of the model (0 = all)")
+        .opt("trace", "", "write a JSONL session trace to this path (see `moses trace`)")
         .switch("verbose", "per-task output");
     if args.iter().any(|a| a == "--help") {
         print!("{}", flags.help("tune", "Tune a DNN on a simulated target device."));
         return Ok(());
     }
     let p = flags.parse(args)?;
+    moses::util::log::init_from_env(p.get_bool("verbose"));
 
     let target = presets::by_name(p.get("target"))
         .with_context(|| format!("unknown device '{}' — see `moses devices`", p.get("target")))?;
@@ -140,7 +150,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
     let pretrained: Option<Vec<f32>> = if strategy.uses_pretrained() {
         let path = p.get("pretrained");
         Some(if path.is_empty() {
-            println!("(pre-training source cost model on simulated K80 — cached)");
+            moses::info!("pre-training source cost model on simulated K80 (cached)");
             experiments::pretrained_source_checkpoint(&exp)?
         } else {
             layout::load_checkpoint(&PathBuf::from(path))?
@@ -183,19 +193,31 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         pretrained.as_deref(),
         &mut Rng::new(cfg.seed),
     );
+    let trace_path = p.get("trace").to_string();
+    let recorder = if trace_path.is_empty() { Recorder::disabled() } else { Recorder::enabled() };
     let cache: Option<Arc<TuneCache>> = if p.get_bool("no-cache") {
         None
     } else {
         let path = PathBuf::from(p.get("tune-cache"));
-        Some(Arc::new(TuneCache::open(&path, DEFAULT_TOPK)?))
+        let mut tc = TuneCache::open(&path, DEFAULT_TOPK)?;
+        tc.attach_recorder(&recorder);
+        Some(Arc::new(tc))
     };
-    let mut builder = AutoTuner::builder(target.clone()).config(&cfg).model(cost_model);
+    let mut builder = AutoTuner::builder(target.clone())
+        .config(&cfg)
+        .model(cost_model)
+        .trace(recorder.clone());
     if let Some(c) = &cache {
         builder = builder.cache(c.clone());
     }
     let mut tuner = builder.build()?;
 
-    println!(
+    let mut tasks = model.tasks();
+    let task_limit = p.get_usize("tasks")?;
+    if task_limit > 0 && task_limit < tasks.len() {
+        tasks.truncate(task_limit);
+    }
+    moses::info!(
         "tuning {} on {} with {} ({} trials/task, backend {})",
         model.name,
         target.name,
@@ -204,13 +226,13 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         p.get("backend"),
     );
     let t0 = std::time::Instant::now();
-    let session = tuner.tune(&model.tasks())?;
+    let session = tuner.tune(&tasks)?;
     let wall = t0.elapsed().as_secs_f64();
 
     if p.get_bool("verbose") {
         let mut t = Table::new(
             "Per-task results",
-            &["task", "default ms", "tuned ms", "speedup", "measured", "pred-only", "seeds"],
+            &["task", "default ms", "tuned ms", "speedup", "measured", "pred-only", "seeds", "cache"],
         );
         for r in &session.tasks {
             t.row(vec![
@@ -221,6 +243,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
                 r.measured.to_string(),
                 r.predicted_only.to_string(),
                 format!("{}+{}nn", r.warm_seeds, r.neighbor_seeds),
+                if r.cache_hit { "hit" } else { "miss" }.to_string(),
             ]);
         }
         t.print();
@@ -251,12 +274,13 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         let s = c.stats();
         println!(
             "tune cache         : {} hit / {} miss ({:.0}% hit rate), {} cross-device seeds, \
-             {} neighbor seeds, {} records over {} workloads at {}",
+             {} neighbor seeds, {} stale-dropped, {} records over {} workloads at {}",
             s.hits,
             s.misses,
             100.0 * s.hit_rate(),
             s.cross_device_seeds,
             s.neighbor_seeds,
+            s.stale_dropped,
             c.total_records(),
             c.num_workloads(),
             c.path().map(|p| p.display().to_string()).unwrap_or_else(|| "<memory>".into()),
@@ -270,6 +294,94 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         }
     }
     println!("harness wall time  : {wall:.1} s");
+    if !trace_path.is_empty() {
+        let trace = Trace {
+            header: TraceHeader {
+                version: TRACE_VERSION,
+                device: target.name.clone(),
+                strategy: strategy.name().to_string(),
+                model: model.name.clone(),
+                jobs,
+                seed: cfg.seed,
+            },
+            events: recorder.drain(),
+            metrics: recorder.metrics_snapshot(),
+        };
+        let path = PathBuf::from(&trace_path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {parent:?}"))?;
+            }
+        }
+        let n_events = trace.events.len();
+        std::fs::write(&path, trace.to_jsonl())
+            .with_context(|| format!("writing trace to {path:?}"))?;
+        println!("trace              : {} ({n_events} events)", path.display());
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- trace ----
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let flags = Flags::new().opt("out", "", "chrome export path (default: <trace>.chrome.json)");
+    if args.is_empty() || args.iter().any(|a| a == "--help") {
+        print!(
+            "{}",
+            flags.help(
+                "trace <report|chrome> <trace.jsonl>",
+                "Inspect a session trace written by `moses tune --trace`.\n\
+                 \x20 report    per-task and per-stage virtual-time breakdown + counters\n\
+                 \x20 chrome    convert to Chrome trace-event JSON (chrome://tracing, Perfetto)",
+            )
+        );
+        return Ok(());
+    }
+    let p = flags.parse(args)?;
+    let action = p.positional.first().map(String::as_str).unwrap_or_default();
+    let path = p
+        .positional
+        .get(1)
+        .context("usage: moses trace <report|chrome> <trace.jsonl>")?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+    let trace = Trace::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    match action {
+        "report" => {
+            println!(
+                "trace v{}: {} on {} with {} (--jobs {}, seed {}) — {} events",
+                trace.header.version,
+                trace.header.model,
+                trace.header.device,
+                trace.header.strategy,
+                trace.header.jobs,
+                trace.header.seed,
+                trace.events.len(),
+            );
+            trace.per_task_table().print();
+            trace.per_stage_table().print();
+            println!("virtual search time in spans: {:.1} s", trace.vt_total_s());
+            if !trace.metrics.is_empty() {
+                let mut t = Table::new("Session counters", &["counter", "value"]);
+                for (k, v) in &trace.metrics {
+                    t.row(vec![k.clone(), v.to_string()]);
+                }
+                t.print();
+            }
+        }
+        "chrome" => {
+            let out = if p.get("out").is_empty() {
+                format!("{path}.chrome.json")
+            } else {
+                p.get("out").to_string()
+            };
+            std::fs::write(&out, chrome::to_chrome(&trace).to_string())
+                .with_context(|| format!("writing {out:?}"))?;
+            println!("wrote {out} ({} events)", trace.events.len());
+        }
+        other => anyhow::bail!("unknown trace action '{other}' (expected report|chrome)"),
+    }
     Ok(())
 }
 

@@ -1,72 +1,100 @@
 //! Tuning-cache observability: hit/miss/seed/commit counters and their
 //! point-in-time snapshot for session reports.
 //!
-//! Counters are atomic because one [`crate::tunecache::TuneCache`] is
-//! shared (behind an `Arc`) across every tuning session on a host; the
-//! snapshot is a plain `Copy` struct so sessions can embed it in their
-//! results without holding any reference to the live cache.
+//! The counters are named entries (`cache.hits`, `cache.misses`, …) in
+//! a private [`MetricsRegistry`], so a traced session can
+//! [`MetricsRegistry::adopt`] them into the session-wide registry and
+//! fold them into the trace footer; counter storage is shared, not
+//! copied.  They stay atomic because one
+//! [`crate::tunecache::TuneCache`] is shared (behind an `Arc`) across
+//! every tuning session on a host; the snapshot is a plain `Copy`
+//! struct so sessions can embed it in their results without holding any
+//! reference to the live cache.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::obs::{Counter, MetricsRegistry};
 
 /// Live counters owned by a tune cache.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CacheCounters {
-    hits: AtomicUsize,
-    misses: AtomicUsize,
-    cross_device_seeds: AtomicUsize,
-    neighbor_seeds: AtomicUsize,
-    commits: AtomicUsize,
-    rejects: AtomicUsize,
-    stale_dropped: AtomicUsize,
+    registry: MetricsRegistry,
+    hits: Counter,
+    misses: Counter,
+    cross_device_seeds: Counter,
+    neighbor_seeds: Counter,
+    commits: Counter,
+    rejects: Counter,
+    stale_dropped: Counter,
+}
+
+impl Default for CacheCounters {
+    fn default() -> CacheCounters {
+        let registry = MetricsRegistry::default();
+        CacheCounters {
+            hits: registry.counter("cache.hits"),
+            misses: registry.counter("cache.misses"),
+            cross_device_seeds: registry.counter("cache.cross_device_seeds"),
+            neighbor_seeds: registry.counter("cache.neighbor_seeds"),
+            commits: registry.counter("cache.commits"),
+            rejects: registry.counter("cache.rejects"),
+            stale_dropped: registry.counter("cache.stale_dropped"),
+            registry,
+        }
+    }
 }
 
 impl CacheCounters {
+    /// The registry holding these counters under their `cache.*` names
+    /// — adopt it into a session registry to surface them in traces.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
     /// An exact (workload, device) lookup was served from cache.
     pub fn record_hit(&self) {
-        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.hits.incr();
     }
 
     /// An exact (workload, device) lookup found nothing.
     pub fn record_miss(&self) {
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.misses.incr();
     }
 
     /// `n` schedules from other devices were offered as search seeds.
     pub fn record_seeds(&self, n: usize) {
-        self.cross_device_seeds.fetch_add(n, Ordering::Relaxed);
+        self.cross_device_seeds.add(n as u64);
     }
 
     /// `n` schedules from *similar* workloads (nearest-neighbor
     /// retrieval) were offered as search seeds.
     pub fn record_neighbor_seeds(&self, n: usize) {
-        self.neighbor_seeds.fetch_add(n, Ordering::Relaxed);
+        self.neighbor_seeds.add(n as u64);
     }
 
     /// `n` records were dropped on load for carrying a stale
     /// featurizer/simulator version stamp.
     pub fn record_stale(&self, n: usize) {
-        self.stale_dropped.fetch_add(n, Ordering::Relaxed);
+        self.stale_dropped.add(n as u64);
     }
 
     /// A record passed top-k admission.
     pub fn record_commit(&self) {
-        self.commits.fetch_add(1, Ordering::Relaxed);
+        self.commits.incr();
     }
 
     /// A record was refused (duplicate-no-better, evicted, non-finite).
     pub fn record_reject(&self) {
-        self.rejects.fetch_add(1, Ordering::Relaxed);
+        self.rejects.incr();
     }
 
     pub fn snapshot(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            cross_device_seeds: self.cross_device_seeds.load(Ordering::Relaxed),
-            neighbor_seeds: self.neighbor_seeds.load(Ordering::Relaxed),
-            commits: self.commits.load(Ordering::Relaxed),
-            rejects: self.rejects.load(Ordering::Relaxed),
-            stale_dropped: self.stale_dropped.load(Ordering::Relaxed),
+            hits: self.hits.get() as usize,
+            misses: self.misses.get() as usize,
+            cross_device_seeds: self.cross_device_seeds.get() as usize,
+            neighbor_seeds: self.neighbor_seeds.get() as usize,
+            commits: self.commits.get() as usize,
+            rejects: self.rejects.get() as usize,
+            stale_dropped: self.stale_dropped.get() as usize,
         }
     }
 }
@@ -124,5 +152,16 @@ mod tests {
     #[test]
     fn empty_hit_rate_is_zero() {
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn counters_surface_through_registry() {
+        let c = CacheCounters::default();
+        c.record_hit();
+        c.record_stale(4);
+        let snap = c.registry().snapshot();
+        assert_eq!(snap.get("cache.hits"), Some(&1));
+        assert_eq!(snap.get("cache.stale_dropped"), Some(&4));
+        assert_eq!(snap.len(), 7);
     }
 }

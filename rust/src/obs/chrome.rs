@@ -1,0 +1,140 @@
+//! Chrome trace-event export (`moses trace chrome`): converts a parsed
+//! [`Trace`] into the JSON array format `chrome://tracing` / Perfetto
+//! load for flame views.
+//!
+//! The export uses the *wall* clock (`diag.wall_start_us` /
+//! `diag.wall_dur_us`) — a flame view shows what actually overlapped on
+//! the machine, while the virtual-clock numbers ride along in each
+//! event's `args` for inspection.  Lanes map to threads of one process;
+//! events with no wall-clock reading (a trace stripped of `diag`) are
+//! skipped.
+
+use crate::obs::report::Trace;
+use crate::obs::span::TraceEvent;
+use crate::util::json::Json;
+
+fn diag(ev: &TraceEvent, key: &str) -> Option<f64> {
+    ev.diag.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+}
+
+fn event_args(ev: &TraceEvent) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("label", Json::Str(ev.label.clone())),
+        ("vt_start_s", Json::Num(ev.vt_start_s)),
+        ("vt_dur_s", Json::Num(ev.vt_dur_s)),
+    ];
+    for (k, v) in &ev.args {
+        pairs.push((k.as_str(), Json::Num(*v)));
+    }
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Convert a trace to a Chrome trace-event document.
+pub fn to_chrome(trace: &Trace) -> Json {
+    let mut lanes: Vec<_> = trace.events.iter().map(|e| e.lane.clone()).collect();
+    lanes.sort();
+    lanes.dedup();
+    let tid_of = |ev: &TraceEvent| -> f64 {
+        lanes.iter().position(|l| *l == ev.lane).unwrap_or(0) as f64
+    };
+
+    let mut out = Vec::new();
+    for (tid, lane) in lanes.iter().enumerate() {
+        out.push(Json::obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("thread_name".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::Str(lane.encode()))]),
+            ),
+        ]));
+    }
+    for ev in &trace.events {
+        let Some(ts) = diag(ev, "wall_start_us") else {
+            continue;
+        };
+        let dur = diag(ev, "wall_dur_us").unwrap_or(0.0);
+        let instant = dur == 0.0 && ev.vt_dur_s == 0.0;
+        let mut pairs = vec![
+            ("ph", Json::Str(if instant { "i" } else { "X" }.to_string())),
+            ("name", Json::Str(ev.name.clone())),
+            ("cat", Json::Str(format!("depth{}", ev.depth))),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid_of(ev))),
+            ("ts", Json::Num(ts)),
+            ("args", event_args(ev)),
+        ];
+        if instant {
+            pairs.push(("s", Json::Str("t".to_string())));
+        } else {
+            pairs.push(("dur", Json::Num(dur)));
+        }
+        out.push(Json::obj(pairs));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::report::TraceHeader;
+    use crate::obs::span::Lane;
+    use crate::obs::TRACE_VERSION;
+    use std::collections::BTreeMap;
+
+    fn ev(lane: Lane, seq: u64, name: &str, wall: Option<(f64, f64)>, vt_dur: f64) -> TraceEvent {
+        let diag = wall
+            .map(|(s, d)| {
+                vec![("wall_dur_us".to_string(), d), ("wall_start_us".to_string(), s)]
+            })
+            .unwrap_or_default();
+        TraceEvent {
+            lane,
+            seq,
+            depth: 0,
+            name: name.to_string(),
+            label: "t".to_string(),
+            vt_start_s: 0.0,
+            vt_dur_s: vt_dur,
+            args: vec![("round".to_string(), 1.0)],
+            diag,
+        }
+    }
+
+    #[test]
+    fn exports_durations_instants_and_thread_names() {
+        let trace = Trace {
+            header: TraceHeader {
+                version: TRACE_VERSION,
+                device: "d".to_string(),
+                strategy: "s".to_string(),
+                model: "m".to_string(),
+                jobs: 1,
+                seed: 0,
+            },
+            events: vec![
+                ev(Lane::Learner, 0, "publish", Some((5.0, 0.0)), 0.0),
+                ev(Lane::Task(0), 0, "round", Some((10.0, 250.0)), 1.5),
+                ev(Lane::Task(0), 1, "stripped", None, 1.0),
+            ],
+            metrics: BTreeMap::new(),
+        };
+        let doc = to_chrome(&trace);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata + 1 instant + 1 duration; the
+        // diag-stripped event is skipped.
+        assert_eq!(evs.len(), 4);
+        let phs: Vec<&str> =
+            evs.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phs.iter().filter(|p| **p == "M").count(), 2);
+        assert!(phs.contains(&"i") && phs.contains(&"X"));
+        let x = evs.iter().find(|e| e.get("ph").unwrap().as_str() == Some("X")).unwrap();
+        assert_eq!(x.get("dur").unwrap().as_f64(), Some(250.0));
+        assert_eq!(x.get("args").unwrap().get("vt_dur_s").unwrap().as_f64(), Some(1.5));
+    }
+}

@@ -1,0 +1,51 @@
+//! Observability plane: structured tracing and metrics for the tuning
+//! engine (`moses tune --trace`, `moses trace report|chrome`).
+//!
+//! # Two clocks
+//!
+//! The engine runs against a *virtual* device clock
+//! ([`crate::device::VirtualClock`]): every measurement, model query
+//! and update charges simulated seconds, and `(seed, jobs)` determines
+//! those charges bit-exactly.  The harness also has an ordinary *wall*
+//! clock, which depends on the machine and the thread schedule.  Every
+//! span records both: virtual start/duration as first-class fields
+//! (`vt`), wall microseconds in the `diag` payload.  Reports and the
+//! reconcile property (`Σ depth-0 vt == Session::search_time_s()`) use
+//! virtual time; the Chrome export uses wall time, because a flame view
+//! is about what actually overlapped.
+//!
+//! # Determinism contract
+//!
+//! Everything except `diag` is a pure function of `(seed, jobs,
+//! tasks)`: lane, seq, depth, name, label, virtual times, `args`.
+//! Scheduling-dependent readings (wall clock, learner stash depth) go
+//! in `diag` and nowhere else, so two traces of the same session are
+//! identical after stripping `diag`.  Event ordering is made
+//! schedule-independent by per-lane sequence counters owned by each
+//! emitter plus a `(lane, seq)` sort at drain time — there is no global
+//! event counter to race on.
+//!
+//! # Granularity
+//!
+//! Stages trace as spans; high-frequency cache lookups and commits are
+//! *counters* in the [`MetricsRegistry`] (folded into the trace
+//! footer), not spans — a per-lookup event would dominate the trace and
+//! the hot path.  A disabled [`Recorder`] (the default) reduces every
+//! instrumentation point to one branch; `benches/hotpath.rs` measures
+//! that cost.
+//!
+//! One recorder covers one tuning session: lane sequence counters
+//! restart with each session, so reuse a recorder only if its events
+//! were drained in between.
+
+pub mod chrome;
+pub mod recorder;
+pub mod report;
+pub mod span;
+
+pub use recorder::{Counter, MetricsRegistry, Recorder};
+pub use report::{Trace, TraceHeader};
+pub use span::{Lane, SpanTimer, TraceEvent, TraceScope};
+
+/// Version stamp written into (and required of) trace files.
+pub const TRACE_VERSION: u32 = 1;

@@ -1,0 +1,217 @@
+//! The trace recorder: a cheaply cloneable handle instrumented code
+//! holds, plus the session-wide metrics registry.
+//!
+//! A [`Recorder`] is either *disabled* (the default — `sink: None`, so
+//! every hot-path check is one `Option` branch on an `Arc` clone) or
+//! *enabled*, in which case all clones share one sink: an event buffer,
+//! a wall-clock epoch, and a [`MetricsRegistry`] of named counters.
+//! Enablement is decided once per session; there is no runtime toggle,
+//! which is what keeps the disabled cost near zero.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::span::{Lane, TraceEvent, TraceScope};
+
+/// A monotonically increasing named counter.  Clones share storage, so
+/// a counter handed out by [`MetricsRegistry::counter`] can be bumped
+/// lock-free from any thread.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A registry of named counters.  Subsystems register their counters
+/// here (or keep a private registry and let a recorder [`adopt`] it),
+/// and the session snapshot folds everything into the trace footer.
+///
+/// [`adopt`]: MetricsRegistry::adopt
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<BTreeMap<String, Counter>>>,
+}
+
+impl MetricsRegistry {
+    /// Get or create the counter registered under `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.inner.lock().expect("metrics registry poisoned");
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Share every counter of `other` into this registry (by handle,
+    /// not by value): future bumps through either registry are visible
+    /// in both.  Lets a subsystem with its own registry (the tunecache
+    /// counters) fold into the session-wide one.
+    pub fn adopt(&self, other: &MetricsRegistry) {
+        let theirs = other.inner.lock().expect("metrics registry poisoned").clone();
+        let mut m = self.inner.lock().expect("metrics registry poisoned");
+        for (name, c) in theirs {
+            m.insert(name, c);
+        }
+    }
+
+    /// Current value of every registered counter.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        let m = self.inner.lock().expect("metrics registry poisoned");
+        m.iter().map(|(k, c)| (k.clone(), c.get())).collect()
+    }
+}
+
+struct Sink {
+    epoch: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+    metrics: MetricsRegistry,
+}
+
+/// Handle to the (possibly absent) trace sink.  `Recorder::default()`
+/// is disabled; [`Recorder::enabled`] allocates a shared sink.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    sink: Option<Arc<Sink>>,
+}
+
+impl Recorder {
+    /// A recorder that drops everything (the no-op default).
+    pub fn disabled() -> Recorder {
+        Recorder { sink: None }
+    }
+
+    /// A live recorder; all clones feed one event buffer.
+    pub fn enabled() -> Recorder {
+        Recorder {
+            sink: Some(Arc::new(Sink {
+                epoch: Instant::now(),
+                events: Mutex::new(Vec::new()),
+                metrics: MetricsRegistry::default(),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Create the event emitter for one lane.  Each lane must have
+    /// exactly one scope per session (the scope owns the lane's `seq`
+    /// counter).
+    pub fn scope(&self, lane: Lane, label: &str) -> TraceScope {
+        TraceScope::new(self.clone(), lane, label)
+    }
+
+    pub(crate) fn push(&self, ev: TraceEvent) {
+        if let Some(sink) = &self.sink {
+            sink.events.lock().expect("trace sink poisoned").push(ev);
+        }
+    }
+
+    /// Wall-clock zero of this recording, if enabled.
+    pub(crate) fn epoch(&self) -> Option<Instant> {
+        self.sink.as_ref().map(|s| s.epoch)
+    }
+
+    /// The session metrics registry, if enabled.
+    pub fn metrics(&self) -> Option<&MetricsRegistry> {
+        self.sink.as_ref().map(|s| &s.metrics)
+    }
+
+    /// Counter values at this moment (empty when disabled).
+    pub fn metrics_snapshot(&self) -> BTreeMap<String, u64> {
+        self.metrics().map(|m| m.snapshot()).unwrap_or_default()
+    }
+
+    /// Take all recorded events, sorted into the deterministic
+    /// `(lane, seq)` order.  Buffer insertion order depends on thread
+    /// scheduling under `--jobs N`; the sort restores the
+    /// schedule-independent total order the determinism contract
+    /// promises.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let Some(sink) = &self.sink else {
+            return Vec::new();
+        };
+        let mut events =
+            std::mem::take(&mut *sink.events.lock().expect("trace sink poisoned"));
+        events.sort_by(|a, b| (&a.lane, a.seq).cmp(&(&b.lane, b.seq)));
+        events
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_swallows_everything() {
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        let mut scope = rec.scope(Lane::Task(0), "t0");
+        let t = scope.begin(0.0);
+        scope.end(t, 0, "warm_start", 1.0, &[], &[]);
+        assert!(rec.drain().is_empty());
+        assert!(rec.metrics_snapshot().is_empty());
+        assert!(rec.metrics().is_none());
+    }
+
+    #[test]
+    fn drain_sorts_by_lane_then_seq() {
+        let rec = Recorder::enabled();
+        let mut t1 = rec.scope(Lane::Task(1), "b");
+        let mut t0 = rec.scope(Lane::Task(0), "a");
+        let mut lrn = rec.scope(Lane::Learner, "learner");
+        // Interleave emissions across lanes.
+        t1.instant(0, "x", 0.0, &[], &[]);
+        t0.instant(0, "x", 0.0, &[], &[]);
+        lrn.instant(0, "x", 0.0, &[], &[]);
+        t0.instant(0, "y", 0.0, &[], &[]);
+        let evs = rec.drain();
+        let order: Vec<(Lane, u64)> = evs.iter().map(|e| (e.lane.clone(), e.seq)).collect();
+        assert_eq!(
+            order,
+            vec![(Lane::Learner, 0), (Lane::Task(0), 0), (Lane::Task(0), 1), (Lane::Task(1), 0)]
+        );
+        // Drain empties the buffer.
+        assert!(rec.drain().is_empty());
+    }
+
+    #[test]
+    fn clones_share_one_sink() {
+        let rec = Recorder::enabled();
+        let clone = rec.clone();
+        clone.scope(Lane::Cache, "tc").instant(0, "open", 0.0, &[], &[]);
+        assert_eq!(rec.drain().len(), 1);
+    }
+
+    #[test]
+    fn registry_counters_shared_and_adopted() {
+        let local = MetricsRegistry::default();
+        let hits = local.counter("cache.hits");
+        hits.add(3);
+        // Same name returns the same storage.
+        local.counter("cache.hits").incr();
+        assert_eq!(hits.get(), 4);
+
+        let rec = Recorder::enabled();
+        rec.metrics().unwrap().adopt(&local);
+        hits.incr();
+        assert_eq!(rec.metrics_snapshot().get("cache.hits"), Some(&5));
+    }
+}

@@ -1,0 +1,348 @@
+//! Versioned trace container (JSONL write/parse) and the per-task /
+//! per-stage breakdown tables behind `moses trace report`.
+//!
+//! File layout: a header line identifying the session
+//! (`{"moses_trace":1,...}`), one line per [`TraceEvent`], and a footer
+//! line with the final metrics snapshot (`{"metrics":{...}}`).  Parsing
+//! validates the version and the per-lane `seq` contiguity invariant,
+//! so a truncated or shuffled file is rejected instead of silently
+//! producing a wrong breakdown.
+
+use std::collections::BTreeMap;
+
+use crate::obs::span::{Lane, TraceEvent};
+use crate::obs::TRACE_VERSION;
+use crate::util::json::Json;
+use crate::util::table::{pct, Table};
+
+/// Session identity recorded on the first trace line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceHeader {
+    pub version: u32,
+    pub device: String,
+    pub strategy: String,
+    pub model: String,
+    pub jobs: usize,
+    pub seed: u64,
+}
+
+impl TraceHeader {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("moses_trace", Json::Num(self.version as f64)),
+            ("device", Json::Str(self.device.clone())),
+            ("strategy", Json::Str(self.strategy.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<TraceHeader, String> {
+        let num = |k: &str| {
+            v.get(k).and_then(Json::as_f64).ok_or_else(|| format!("header missing '{k}'"))
+        };
+        let s = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("header missing '{k}'"))
+        };
+        Ok(TraceHeader {
+            version: num("moses_trace")? as u32,
+            device: s("device")?,
+            strategy: s("strategy")?,
+            model: s("model")?,
+            jobs: num("jobs")? as usize,
+            seed: num("seed")? as u64,
+        })
+    }
+}
+
+/// A complete session trace: header, events, and the final metrics
+/// snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub header: TraceHeader,
+    pub events: Vec<TraceEvent>,
+    pub metrics: BTreeMap<String, u64>,
+}
+
+impl Trace {
+    /// Serialize to the versioned JSONL trace format.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.to_json().to_string());
+        out.push('\n');
+        for ev in &self.events {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        let metrics = Json::Obj(
+            self.metrics
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        out.push_str(&Json::obj(vec![("metrics", metrics)]).to_string());
+        out.push('\n');
+        out
+    }
+
+    /// Parse a trace file, validating the format version and that each
+    /// lane's `seq` values are contiguous from 0 (i.e. no events were
+    /// lost or reordered).
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let first = lines.next().ok_or("empty trace file")?;
+        let hv = Json::parse(first).map_err(|e| format!("header: {e}"))?;
+        if hv.get("moses_trace").is_none() {
+            return Err("not a moses trace (missing 'moses_trace' header)".to_string());
+        }
+        let header = TraceHeader::from_json(&hv)?;
+        if header.version != TRACE_VERSION {
+            return Err(format!(
+                "trace version {} unsupported (expected {TRACE_VERSION})",
+                header.version
+            ));
+        }
+        let mut events = Vec::new();
+        let mut metrics = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 2))?;
+            if let Some(m) = v.get("metrics") {
+                match m {
+                    Json::Obj(map) => {
+                        for (k, val) in map {
+                            let x = val
+                                .as_f64()
+                                .ok_or_else(|| format!("line {}: bad metric '{k}'", i + 2))?;
+                            metrics.insert(k.clone(), x as u64);
+                        }
+                    }
+                    _ => return Err(format!("line {}: 'metrics' must be an object", i + 2)),
+                }
+                continue;
+            }
+            events.push(
+                TraceEvent::from_json(&v).map_err(|e| format!("line {}: {e}", i + 2))?,
+            );
+        }
+        let mut next_seq: BTreeMap<Lane, u64> = BTreeMap::new();
+        for ev in &events {
+            let expect = next_seq.entry(ev.lane.clone()).or_insert(0);
+            if ev.seq != *expect {
+                return Err(format!(
+                    "lane {} seq gap: got {}, expected {}",
+                    ev.lane.encode(),
+                    ev.seq,
+                    expect
+                ));
+            }
+            *expect += 1;
+        }
+        Ok(Trace { header, events, metrics })
+    }
+
+    /// Total virtual time inside stage-level (depth-0) spans across the
+    /// working lanes.  By construction every virtual-clock charge in a
+    /// session happens inside such a span, so this reconciles with
+    /// `Session::search_time_s()`.
+    pub fn vt_total_s(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.depth == 0 && e.lane != Lane::Session)
+            .map(|e| e.vt_dur_s)
+            .sum()
+    }
+
+    fn task_lanes(&self) -> Vec<usize> {
+        let mut ords: Vec<usize> = self
+            .events
+            .iter()
+            .filter_map(|e| match e.lane {
+                Lane::Task(ord) => Some(ord),
+                _ => None,
+            })
+            .collect();
+        ords.sort_unstable();
+        ords.dedup();
+        ords
+    }
+
+    fn learn_vt_for(&self, ord: usize) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| {
+                e.lane == Lane::Learner
+                    && e.name == "learn"
+                    && e.args.iter().any(|(k, v)| k == "task" && *v == ord as f64)
+            })
+            .map(|e| e.vt_dur_s)
+            .sum()
+    }
+
+    /// Per-task breakdown: where each task's virtual search time went.
+    pub fn per_task_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-task virtual time (s)",
+            &["task", "label", "warm", "rounds", "propose", "measure", "learn", "final", "total"],
+        );
+        for ord in self.task_lanes() {
+            let lane = Lane::Task(ord);
+            let sum = |depth: u8, name: &str| -> f64 {
+                self.events
+                    .iter()
+                    .filter(|e| e.lane == lane && e.depth == depth && e.name == name)
+                    .map(|e| e.vt_dur_s)
+                    .sum()
+            };
+            let rounds = self
+                .events
+                .iter()
+                .filter(|e| e.lane == lane && e.depth == 0 && e.name == "round")
+                .count();
+            let label = self
+                .events
+                .iter()
+                .find(|e| e.lane == lane)
+                .map(|e| e.label.clone())
+                .unwrap_or_default();
+            let learn = self.learn_vt_for(ord);
+            let total = sum(0, "warm_start") + sum(0, "round") + sum(0, "finalize") + learn;
+            t.row(vec![
+                ord.to_string(),
+                label,
+                format!("{:.3}", sum(0, "warm_start")),
+                rounds.to_string(),
+                format!("{:.3}", sum(1, "propose")),
+                format!("{:.3}", sum(1, "measure")),
+                format!("{learn:.3}"),
+                format!("{:.3}", sum(0, "finalize")),
+                format!("{total:.3}"),
+            ]);
+        }
+        t
+    }
+
+    /// Per-stage breakdown across all tasks: which pipeline stage the
+    /// session's virtual time went to.
+    pub fn per_stage_table(&self) -> Table {
+        let sum_named = |depth: u8, name: &str| -> f64 {
+            self.events
+                .iter()
+                .filter(|e| {
+                    matches!(e.lane, Lane::Task(_)) && e.depth == depth && e.name == name
+                })
+                .map(|e| e.vt_dur_s)
+                .sum()
+        };
+        let warm = sum_named(0, "warm_start");
+        let round = sum_named(0, "round");
+        let propose = sum_named(1, "propose");
+        let measure = sum_named(1, "measure");
+        let finalize = sum_named(0, "finalize");
+        let learn: f64 = self
+            .events
+            .iter()
+            .filter(|e| e.lane == Lane::Learner && e.depth == 0 && e.name == "learn")
+            .map(|e| e.vt_dur_s)
+            .sum();
+        let round_other = (round - propose - measure).max(0.0);
+        let total = warm + round + finalize + learn;
+        let mut t = Table::new("Per-stage virtual time (s)", &["stage", "vt_s", "share_%"]);
+        let share = |x: f64| if total > 0.0 { pct(x / total) } else { pct(0.0) };
+        for (name, vt) in [
+            ("warm_start", warm),
+            ("propose", propose),
+            ("measure", measure),
+            ("round (other)", round_other),
+            ("finalize", finalize),
+            ("learn", learn),
+        ] {
+            t.row(vec![name.to_string(), format!("{vt:.3}"), share(vt)]);
+        }
+        t.row(vec!["total".to_string(), format!("{total:.3}"), share(total)]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(lane: Lane, seq: u64, depth: u8, name: &str, vt: (f64, f64)) -> TraceEvent {
+        TraceEvent {
+            lane,
+            seq,
+            depth,
+            name: name.to_string(),
+            label: "t".to_string(),
+            vt_start_s: vt.0,
+            vt_dur_s: vt.1,
+            args: Vec::new(),
+            diag: Vec::new(),
+        }
+    }
+
+    fn sample() -> Trace {
+        Trace {
+            header: TraceHeader {
+                version: TRACE_VERSION,
+                device: "rtx-2060".to_string(),
+                strategy: "ansor-random".to_string(),
+                model: "squeezenet".to_string(),
+                jobs: 2,
+                seed: 42,
+            },
+            events: vec![
+                ev(Lane::Learner, 0, 0, "learn", (0.0, 0.5)),
+                ev(Lane::Task(0), 0, 0, "warm_start", (0.0, 1.0)),
+                ev(Lane::Task(0), 1, 1, "propose", (1.0, 0.25)),
+                ev(Lane::Task(0), 2, 1, "measure", (1.25, 0.5)),
+                ev(Lane::Task(0), 3, 0, "round", (1.0, 1.0)),
+                ev(Lane::Task(0), 4, 0, "finalize", (2.0, 0.5)),
+            ],
+            metrics: BTreeMap::from([("cache.hits".to_string(), 3u64)]),
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrips() {
+        let trace = sample();
+        let text = trace.to_jsonl();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_seq_gaps() {
+        let mut trace = sample();
+        trace.header.version = 99;
+        assert!(Trace::parse(&trace.to_jsonl()).unwrap_err().contains("version"));
+
+        let mut gap = sample();
+        gap.events.remove(1); // drop Task(0) seq 0 -> gap
+        assert!(Trace::parse(&gap.to_jsonl()).unwrap_err().contains("seq gap"));
+
+        assert!(Trace::parse("{\"x\":1}\n").unwrap_err().contains("moses_trace"));
+        assert!(Trace::parse("").is_err());
+    }
+
+    #[test]
+    fn vt_total_counts_stage_spans_only() {
+        // warm 1.0 + round 1.0 + finalize 0.5 + learn 0.5; depth-1
+        // propose/measure are inside the round and must not be
+        // double-counted.
+        assert!((sample().vt_total_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tables_render() {
+        let trace = sample();
+        let task_md = trace.per_task_table().to_markdown();
+        assert!(task_md.contains("warm") && task_md.contains("1.000"));
+        let stage_md = trace.per_stage_table().to_markdown();
+        assert!(stage_md.contains("round (other)") && stage_md.contains("total"));
+    }
+}

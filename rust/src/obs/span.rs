@@ -1,0 +1,338 @@
+//! Span and event primitives of the observability plane.
+//!
+//! A [`TraceEvent`] is one record in a session trace: a span (stage with
+//! a duration) or an instant (point event), pinned to a [`Lane`] (one
+//! per actor: each task pipeline, the learner, the tune cache, the
+//! session driver) and ordered inside that lane by a `seq` counter the
+//! emitting [`TraceScope`] owns.  Per-lane counters — instead of one
+//! global atomic — are what keep event *content* deterministic under
+//! `--jobs N`: cross-thread interleaving can reorder the shared buffer,
+//! but `(lane, seq)` reconstructs the schedule-independent total order
+//! (see [`crate::obs::recorder::Recorder::drain`]).
+//!
+//! Determinism contract: every field except `diag` is a pure function
+//! of `(seed, jobs, tasks)`.  Wall-clock readings, queue depths and
+//! other scheduling-dependent measurements go in `diag` and nowhere
+//! else.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::obs::recorder::Recorder;
+use crate::util::json::Json;
+
+/// The actor a trace event belongs to.  Lanes order `Session < Learner
+/// < Cache < Task(0) < Task(1) < …` — the stable sort key of a drained
+/// trace.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Lane {
+    /// The session driver (CLI / tuner).
+    Session,
+    /// The learning plane (inline learner or the actor thread).
+    Learner,
+    /// The tune cache (open / compaction events).
+    Cache,
+    /// One task pipeline, by its stable task ordinal.
+    Task(usize),
+}
+
+impl Lane {
+    /// Stable string form used in trace files (`"task:3"`, `"learner"`).
+    pub fn encode(&self) -> String {
+        match self {
+            Lane::Session => "session".to_string(),
+            Lane::Learner => "learner".to_string(),
+            Lane::Cache => "cache".to_string(),
+            Lane::Task(ord) => format!("task:{ord}"),
+        }
+    }
+
+    /// Inverse of [`Lane::encode`].
+    pub fn decode(s: &str) -> Option<Lane> {
+        match s {
+            "session" => Some(Lane::Session),
+            "learner" => Some(Lane::Learner),
+            "cache" => Some(Lane::Cache),
+            _ => {
+                let ord = s.strip_prefix("task:")?.parse().ok()?;
+                Some(Lane::Task(ord))
+            }
+        }
+    }
+}
+
+/// One span or instant in a session trace.
+///
+/// Spans carry *both* clocks of the tuning engine: `vt_start_s` /
+/// `vt_dur_s` read the session's deterministic virtual clock (the
+/// device bill [`crate::device::VirtualClock`] accounts), while the
+/// harness wall clock lands in `diag` as `wall_start_us` /
+/// `wall_dur_us` (microseconds since the recorder's epoch).  Instants
+/// are spans with zero duration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub lane: Lane,
+    /// Position in the lane: contiguous from 0, assigned by the
+    /// emitter's [`TraceScope`].
+    pub seq: u64,
+    /// 0 = stage-level (these sum to the session's virtual search
+    /// time), 1 = nested detail (propose/measure inside a round, pins).
+    pub depth: u8,
+    pub name: String,
+    /// Human label for the lane (task name), repeated per event so a
+    /// trace line is self-describing.
+    pub label: String,
+    /// Virtual-clock seconds at span start.
+    pub vt_start_s: f64,
+    /// Virtual-clock seconds elapsed inside the span.
+    pub vt_dur_s: f64,
+    /// Deterministic payload (counts, versions), sorted by key.
+    pub args: Vec<(String, f64)>,
+    /// Nondeterministic payload (wall times, queue depths), sorted by
+    /// key.  Ignored by reproducibility comparisons.
+    pub diag: Vec<(String, f64)>,
+}
+
+fn pairs_to_json(pairs: &[(String, f64)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())
+}
+
+fn pairs_from_json(v: &Json) -> Result<Vec<(String, f64)>, String> {
+    match v {
+        Json::Obj(m) => m
+            .iter()
+            .map(|(k, v)| match v {
+                Json::Num(x) => Ok((k.clone(), *x)),
+                _ => Err(format!("non-numeric value under '{k}'")),
+            })
+            .collect(),
+        _ => Err("expected an object".to_string()),
+    }
+}
+
+impl TraceEvent {
+    /// Compact one-line JSON form (one trace-file line).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("lane".to_string(), Json::Str(self.lane.encode()));
+        m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        m.insert("depth".to_string(), Json::Num(self.depth as f64));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert(
+            "vt".to_string(),
+            Json::Arr(vec![Json::Num(self.vt_start_s), Json::Num(self.vt_dur_s)]),
+        );
+        if !self.args.is_empty() {
+            m.insert("args".to_string(), pairs_to_json(&self.args));
+        }
+        if !self.diag.is_empty() {
+            m.insert("diag".to_string(), pairs_to_json(&self.diag));
+        }
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`TraceEvent::to_json`].
+    pub fn from_json(v: &Json) -> Result<TraceEvent, String> {
+        let get = |k: &str| v.get(k).ok_or_else(|| format!("missing '{k}'"));
+        let lane_s = get("lane")?.as_str().ok_or("lane must be a string")?;
+        let lane = Lane::decode(lane_s).ok_or_else(|| format!("bad lane '{lane_s}'"))?;
+        let vt = get("vt")?.as_arr().ok_or("vt must be an array")?;
+        if vt.len() != 2 {
+            return Err("vt must hold [start, dur]".to_string());
+        }
+        Ok(TraceEvent {
+            lane,
+            seq: get("seq")?.as_f64().ok_or("seq must be a number")? as u64,
+            depth: get("depth")?.as_f64().ok_or("depth must be a number")? as u8,
+            name: get("name")?.as_str().ok_or("name must be a string")?.to_string(),
+            label: get("label")?.as_str().ok_or("label must be a string")?.to_string(),
+            vt_start_s: vt[0].as_f64().ok_or("vt[0] must be a number")?,
+            vt_dur_s: vt[1].as_f64().ok_or("vt[1] must be a number")?,
+            args: v.get("args").map(pairs_from_json).transpose()?.unwrap_or_default(),
+            diag: v.get("diag").map(pairs_from_json).transpose()?.unwrap_or_default(),
+        })
+    }
+}
+
+/// An open span handle: wall-clock start (captured only when recording
+/// is enabled — the disabled path never reads `Instant::now()`) plus
+/// the virtual-clock reading at [`TraceScope::begin`].
+#[derive(Debug)]
+pub struct SpanTimer {
+    wall: Option<Instant>,
+    vt_start_s: f64,
+}
+
+/// One lane's event emitter: a cheap handle every instrumented actor
+/// owns, carrying the lane identity, its label, and the lane's `seq`
+/// counter.  Exactly one scope may emit into a lane per session —
+/// ownership of the counter is what makes `(lane, seq)` collision-free
+/// without cross-thread coordination.
+#[derive(Debug)]
+pub struct TraceScope {
+    rec: Recorder,
+    lane: Lane,
+    label: String,
+    seq: u64,
+}
+
+fn sorted_pairs(pairs: &[(&str, f64)]) -> Vec<(String, f64)> {
+    let mut v: Vec<(String, f64)> =
+        pairs.iter().map(|(k, x)| (k.to_string(), *x)).collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+impl TraceScope {
+    pub(crate) fn new(rec: Recorder, lane: Lane, label: &str) -> TraceScope {
+        TraceScope { rec, lane, label: label.to_string(), seq: 0 }
+    }
+
+    /// A scope that records nothing (the default for un-traced
+    /// sessions).
+    pub fn disabled() -> TraceScope {
+        TraceScope::new(Recorder::disabled(), Lane::Session, "")
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rec.is_enabled()
+    }
+
+    /// Open a span at virtual time `vt_now_s`.  Disabled scopes return
+    /// a dummy timer without touching the wall clock — the no-op cost
+    /// is one branch.
+    pub fn begin(&self, vt_now_s: f64) -> SpanTimer {
+        if self.rec.is_enabled() {
+            SpanTimer { wall: Some(Instant::now()), vt_start_s: vt_now_s }
+        } else {
+            SpanTimer { wall: None, vt_start_s: 0.0 }
+        }
+    }
+
+    /// Close a span opened with [`TraceScope::begin`] and record it.
+    /// `args` must be deterministic content; anything
+    /// scheduling-dependent belongs in `diag`.
+    pub fn end(
+        &mut self,
+        timer: SpanTimer,
+        depth: u8,
+        name: &str,
+        vt_now_s: f64,
+        args: &[(&str, f64)],
+        diag: &[(&str, f64)],
+    ) {
+        let Some(wall_start) = timer.wall else {
+            return;
+        };
+        let wall_dur = wall_start.elapsed();
+        let mut d = sorted_pairs(diag);
+        if let Some(epoch) = self.rec.epoch() {
+            let start_us = wall_start.duration_since(epoch).as_secs_f64() * 1e6;
+            d.push(("wall_dur_us".to_string(), wall_dur.as_secs_f64() * 1e6));
+            d.push(("wall_start_us".to_string(), start_us));
+            d.sort_by(|a, b| a.0.cmp(&b.0));
+        }
+        let ev = TraceEvent {
+            lane: self.lane.clone(),
+            seq: self.seq,
+            depth,
+            name: name.to_string(),
+            label: self.label.clone(),
+            vt_start_s: timer.vt_start_s,
+            vt_dur_s: vt_now_s - timer.vt_start_s,
+            args: sorted_pairs(args),
+            diag: d,
+        };
+        self.seq += 1;
+        self.rec.push(ev);
+    }
+
+    /// Record a zero-duration event at virtual time `vt_now_s`.
+    pub fn instant(
+        &mut self,
+        depth: u8,
+        name: &str,
+        vt_now_s: f64,
+        args: &[(&str, f64)],
+        diag: &[(&str, f64)],
+    ) {
+        if !self.rec.is_enabled() {
+            return;
+        }
+        let timer = self.begin(vt_now_s);
+        self.end(timer, depth, name, vt_now_s, args, diag);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_encoding_roundtrips() {
+        for lane in [Lane::Session, Lane::Learner, Lane::Cache, Lane::Task(0), Lane::Task(17)] {
+            assert_eq!(Lane::decode(&lane.encode()), Some(lane));
+        }
+        assert_eq!(Lane::decode("task:x"), None);
+        assert_eq!(Lane::decode("nope"), None);
+    }
+
+    #[test]
+    fn lanes_order_session_learner_cache_tasks() {
+        let mut lanes = vec![Lane::Task(1), Lane::Cache, Lane::Task(0), Lane::Session, Lane::Learner];
+        lanes.sort();
+        assert_eq!(
+            lanes,
+            vec![Lane::Session, Lane::Learner, Lane::Cache, Lane::Task(0), Lane::Task(1)]
+        );
+    }
+
+    #[test]
+    fn event_json_roundtrips() {
+        let ev = TraceEvent {
+            lane: Lane::Task(2),
+            seq: 5,
+            depth: 1,
+            name: "measure".to_string(),
+            label: "conv1".to_string(),
+            vt_start_s: 1.25,
+            vt_dur_s: 0.5,
+            args: vec![("candidates".to_string(), 8.0), ("round".to_string(), 3.0)],
+            diag: vec![("wall_dur_us".to_string(), 42.5)],
+        };
+        let back = TraceEvent::from_json(&ev.to_json()).unwrap();
+        assert_eq!(back, ev);
+        // Empty payloads are omitted from the line entirely.
+        let bare = TraceEvent { args: Vec::new(), diag: Vec::new(), ..ev };
+        let line = bare.to_json().to_string();
+        assert!(!line.contains("args") && !line.contains("diag"));
+        assert_eq!(TraceEvent::from_json(&Json::parse(&line).unwrap()).unwrap(), bare);
+    }
+
+    #[test]
+    fn disabled_scope_records_nothing_and_counts_nothing() {
+        let mut scope = TraceScope::disabled();
+        assert!(!scope.enabled());
+        let t = scope.begin(1.0);
+        assert!(t.wall.is_none());
+        scope.end(t, 0, "x", 2.0, &[("a", 1.0)], &[]);
+        scope.instant(0, "y", 2.0, &[], &[]);
+        assert_eq!(scope.seq, 0);
+    }
+
+    #[test]
+    fn scope_payloads_are_key_sorted() {
+        let rec = Recorder::enabled();
+        let mut scope = rec.scope(Lane::Task(0), "t");
+        let t = scope.begin(0.0);
+        scope.end(t, 0, "s", 1.0, &[("z", 1.0), ("a", 2.0)], &[("q", 3.0)]);
+        let evs = rec.drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].args[0].0, "a");
+        assert_eq!(evs[0].args[1].0, "z");
+        let keys: Vec<&str> = evs[0].diag.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["q", "wall_dur_us", "wall_start_us"]);
+        assert!((evs[0].vt_dur_s - 1.0).abs() < 1e-12);
+    }
+}

@@ -53,6 +53,7 @@ use std::sync::Mutex;
 use anyhow::{Context, Result};
 
 use crate::metrics::cache::{CacheCounters, CacheStats};
+use crate::obs::{Lane, Recorder, TraceScope};
 
 /// Default top-k records kept per (workload, device).
 pub const DEFAULT_TOPK: usize = 8;
@@ -69,6 +70,11 @@ pub struct TuneCache {
     counters: CacheCounters,
     /// Lines appended since open/compaction (compaction debt).
     appended: AtomicUsize,
+    /// Trace emitter for open/compaction events (disabled unless
+    /// [`TuneCache::attach_recorder`] ran).  Mutex'd because commits —
+    /// and thus debt-triggered compactions — happen from worker
+    /// threads.
+    scope: Mutex<TraceScope>,
 }
 
 impl TuneCache {
@@ -85,7 +91,7 @@ impl TuneCache {
         if path.exists() {
             let (records, skipped) = persist::load_records(path)?;
             if skipped > 0 {
-                eprintln!("tunecache: skipped {skipped} malformed line(s) in {path:?}");
+                crate::warn!("tunecache: skipped {skipped} malformed line(s) in {path:?}");
             }
             let mut stale = 0usize;
             for r in &records {
@@ -99,7 +105,7 @@ impl TuneCache {
             }
             if stale > 0 {
                 counters.record_stale(stale);
-                eprintln!(
+                crate::warn!(
                     "tunecache: dropped {stale} stale record(s) in {path:?} \
                      (featurizer/simulator version != {RECORD_VERSION})"
                 );
@@ -123,6 +129,7 @@ impl TuneCache {
             file: Mutex::new(Some(file)),
             counters,
             appended: AtomicUsize::new(0),
+            scope: Mutex::new(TraceScope::disabled()),
         };
         // Purge dropped (stale/malformed) lines from disk once, here:
         // the debt-triggered compaction in commit() never fires for
@@ -130,7 +137,7 @@ impl TuneCache {
         // re-warn about the same dead lines forever.
         if dropped > 0 {
             if let Err(e) = cache.compact() {
-                eprintln!("tunecache: open-time compaction failed: {e:#}");
+                crate::warn!("tunecache: open-time compaction failed: {e:#}");
             }
         }
         Ok(cache)
@@ -145,7 +152,32 @@ impl TuneCache {
             file: Mutex::new(None),
             counters: CacheCounters::default(),
             appended: AtomicUsize::new(0),
+            scope: Mutex::new(TraceScope::disabled()),
         }
+    }
+
+    /// Surface this cache in a session trace: its `cache.*` counters
+    /// join the recorder's metrics registry (shared storage, so every
+    /// later bump is visible there), and open/compaction events are
+    /// recorded on the cache lane.  High-frequency lookups/commits stay
+    /// counters-only by design — see [`crate::obs`].
+    pub fn attach_recorder(&mut self, rec: &Recorder) {
+        if let Some(m) = rec.metrics() {
+            m.adopt(self.counters.registry());
+        }
+        let mut scope = rec.scope(Lane::Cache, "tunecache");
+        scope.instant(
+            0,
+            "open",
+            0.0,
+            &[],
+            &[
+                ("records", self.total_records() as f64),
+                ("stale_dropped", self.stats().stale_dropped as f64),
+                ("workloads", self.num_workloads() as f64),
+            ],
+        );
+        *self.scope.lock().expect("tunecache scope poisoned") = scope;
     }
 
     /// Backing file, if any.
@@ -178,7 +210,7 @@ impl TuneCache {
                 if let Some(f) = guard.as_mut() {
                     let line = persist::encode_line(&rec);
                     if writeln!(f, "{line}").is_err() {
-                        eprintln!("tunecache: append failed; record kept in memory only");
+                        crate::warn!("tunecache: append failed; record kept in memory only");
                     }
                 }
             }
@@ -187,7 +219,7 @@ impl TuneCache {
             // commit path until real append debt has built up.
             if appended > 64 && appended > 4 * self.store.total_records() {
                 if let Err(e) = self.compact() {
-                    eprintln!("tunecache: compaction failed: {e:#}");
+                    crate::warn!("tunecache: compaction failed: {e:#}");
                 }
             }
         }
@@ -208,6 +240,13 @@ impl TuneCache {
                 .with_context(|| format!("reopening {path:?}"))?,
         );
         self.appended.store(0, Ordering::Relaxed);
+        self.scope.lock().expect("tunecache scope poisoned").instant(
+            0,
+            "compact",
+            0.0,
+            &[],
+            &[("records", self.store.total_records() as f64)],
+        );
         Ok(())
     }
 

@@ -2,9 +2,17 @@
 //! the offline crate cache).  Used by the `rust/benches/*` binaries:
 //! warmup, timed iterations, robust stats, and a stable one-line report
 //! format so bench output diffs cleanly across the perf pass.
+//!
+//! Results accumulate on the [`Bencher`] and can be serialized to a
+//! dated `BENCH_<date>.json` via [`Bencher::write_json`] — the artifact
+//! EXPERIMENTS.md §Perf and the CI perf upload are fed from.
 
-use std::time::{Duration, Instant};
+use std::cell::RefCell;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One benchmark's collected timings.
@@ -40,6 +48,18 @@ impl BenchResult {
             self.samples_ns.len()
         )
     }
+
+    /// Summary-statistics JSON object (samples are not serialized —
+    /// medians are what the perf pass compares).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("median_ns", Json::Num(self.median_ns())),
+            ("p05_ns", Json::Num(self.p05_ns())),
+            ("p95_ns", Json::Num(self.p95_ns())),
+            ("samples", Json::Num(self.samples_ns.len() as f64)),
+        ])
+    }
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -62,6 +82,9 @@ pub struct Bencher {
     pub warmup_time: Duration,
     /// Cap on sample count (to bound memory / long iterations).
     pub max_samples: usize,
+    /// Every result produced by this bencher, in run order (for
+    /// [`Bencher::write_json`]).
+    collected: RefCell<Vec<BenchResult>>,
 }
 
 impl Default for Bencher {
@@ -72,6 +95,7 @@ impl Default for Bencher {
             measure_time: Duration::from_millis(800),
             warmup_time: Duration::from_millis(200),
             max_samples: 200,
+            collected: RefCell::new(Vec::new()),
         }
     }
 }
@@ -101,7 +125,8 @@ impl Bencher {
             samples.push(t0.elapsed().as_nanos() as f64);
         }
         let res = BenchResult { name: name.to_string(), samples_ns: samples };
-        println!("{}", res.report());
+        crate::info!("{}", res.report());
+        self.collected.borrow_mut().push(res.clone());
         res
     }
 
@@ -112,9 +137,54 @@ impl Bencher {
         let out = f();
         let ns = t0.elapsed().as_nanos() as f64;
         let res = BenchResult { name: name.to_string(), samples_ns: vec![ns] };
-        println!("{}", res.report());
+        crate::info!("{}", res.report());
+        self.collected.borrow_mut().push(res.clone());
         (res, out)
     }
+
+    /// Every result run on this bencher so far, in run order.
+    pub fn collected(&self) -> Vec<BenchResult> {
+        self.collected.borrow().clone()
+    }
+
+    /// Serialize all collected results to `<dir>/BENCH_<yyyy-mm-dd>.json`
+    /// (UTC date) and return the path written.
+    pub fn write_json(&self, dir: &Path) -> io::Result<PathBuf> {
+        let unix_secs = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map_err(|e| io::Error::other(e.to_string()))?
+            .as_secs();
+        let (y, m, d) = civil_from_unix(unix_secs as i64);
+        let date = format!("{y:04}-{m:02}-{d:02}");
+        let doc = Json::obj(vec![
+            ("date", Json::Str(date.clone())),
+            ("unix_secs", Json::Num(unix_secs as f64)),
+            (
+                "results",
+                Json::Arr(self.collected.borrow().iter().map(BenchResult::to_json).collect()),
+            ),
+        ]);
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{date}.json"));
+        std::fs::write(&path, doc.to_string())?;
+        Ok(path)
+    }
+}
+
+/// Unix seconds → (year, month, day) in UTC, via Howard Hinnant's
+/// `civil_from_days` algorithm (chrono is not in the offline crate
+/// cache).
+fn civil_from_unix(unix_secs: i64) -> (i64, u32, u32) {
+    let z = unix_secs.div_euclid(86_400) + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
 }
 
 #[cfg(test)]
@@ -127,11 +197,13 @@ mod tests {
             measure_time: Duration::from_millis(20),
             warmup_time: Duration::from_millis(2),
             max_samples: 50,
+            ..Bencher::default()
         };
         let r = b.run("spin", || (0..100).sum::<u64>());
         assert!(!r.samples_ns.is_empty());
         assert!(r.median_ns() > 0.0);
         assert!(r.report().contains("spin"));
+        assert_eq!(b.collected().len(), 1);
     }
 
     #[test]
@@ -148,5 +220,36 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("µs"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(12_000_000_000.0).ends_with("s"));
+    }
+
+    #[test]
+    fn civil_dates() {
+        assert_eq!(civil_from_unix(0), (1970, 1, 1));
+        assert_eq!(civil_from_unix(86_399), (1970, 1, 1));
+        assert_eq!(civil_from_unix(86_400), (1970, 1, 2));
+        // 2024-01-01T00:00:00Z.
+        assert_eq!(civil_from_unix(1_704_067_200), (2024, 1, 1));
+        // Leap day: 2024-02-29T12:00:00Z.
+        assert_eq!(civil_from_unix(1_709_208_000), (2024, 2, 29));
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(5),
+            warmup_time: Duration::from_millis(1),
+            max_samples: 8,
+            ..Bencher::default()
+        };
+        b.run("spin", || (0..100).sum::<u64>());
+        let dir = std::env::temp_dir().join(format!("moses_bench_{}", std::process::id()));
+        let path = b.write_json(&dir).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let results = doc.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").and_then(Json::as_str), Some("spin"));
+        assert!(results[0].get("median_ns").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(doc.get("date").and_then(Json::as_str).unwrap().len() == 10);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

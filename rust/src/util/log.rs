@@ -1,0 +1,149 @@
+//! Minimal leveled logging facade (the `log`/`env_logger` crates are
+//! not in the offline crate cache).  Library code logs through the
+//! [`crate::error!`]/[`crate::warn!`]/[`crate::info!`]/[`crate::debug!`]
+//! macros instead of writing to stderr directly; binaries pick the
+//! verbosity once at startup via [`init_from_env`] (`RUST_LOG` wins,
+//! else a `--verbose` switch).
+//!
+//! Until a binary initializes the logger, the level defaults to
+//! [`Level::Warn`] so library warnings stay visible in tests and
+//! benches without any setup.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    /// Parse an `RUST_LOG`-style level name (`trace` maps to `Debug`,
+    /// the finest level this facade has).
+    pub fn parse(s: &str) -> Option<Option<Level>> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(None),
+            "error" => Some(Some(Level::Error)),
+            "warn" | "warning" => Some(Some(Level::Warn)),
+            "info" => Some(Some(Level::Info)),
+            "debug" | "trace" => Some(Some(Level::Debug)),
+            _ => None,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Warn as usize);
+
+/// Set the global maximum level (`None` silences everything).
+pub fn set_max_level(level: Option<Level>) {
+    MAX_LEVEL.store(level.map_or(0, |l| l as usize), Ordering::Relaxed);
+}
+
+/// Would a record at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    level as usize <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialize from the environment: `RUST_LOG` is authoritative when
+/// set to a recognized level; otherwise `verbose` selects `Debug` over
+/// the CLI default `Info`.
+pub fn init_from_env(verbose: bool) {
+    let from_env = std::env::var("RUST_LOG").ok().and_then(|v| Level::parse(&v));
+    let level = from_env
+        .unwrap_or(Some(if verbose { Level::Debug } else { Level::Info }));
+    set_max_level(level);
+}
+
+/// Emit one record (the macros call this; prefer them).
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    eprintln!("[{:<5} {}] {}", level.as_str(), target, args);
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::util::log::log(
+            $crate::util::log::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log(
+            $crate::util::log::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log(
+            $crate::util::log::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log(
+            $crate::util::log::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_accepts_env_logger_names() {
+        assert_eq!(Level::parse("off"), Some(None));
+        assert_eq!(Level::parse("ERROR"), Some(Some(Level::Error)));
+        assert_eq!(Level::parse("warn"), Some(Some(Level::Warn)));
+        assert_eq!(Level::parse("trace"), Some(Some(Level::Debug)));
+        assert_eq!(Level::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn enabled_respects_global_level() {
+        let saved = MAX_LEVEL.load(Ordering::Relaxed);
+        set_max_level(Some(Level::Warn));
+        assert!(enabled(Level::Error) && enabled(Level::Warn));
+        assert!(!enabled(Level::Info) && !enabled(Level::Debug));
+        set_max_level(None);
+        assert!(!enabled(Level::Error));
+        MAX_LEVEL.store(saved, Ordering::Relaxed);
+    }
+}

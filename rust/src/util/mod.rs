@@ -1,11 +1,12 @@
 //! Shared utilities: deterministic RNG, statistics, and the offline
 //! stand-ins for crates that are not available in this image's crate
 //! cache (clap → [`cli`], serde_json → [`json`], criterion → [`bench`],
-//! proptest → [`prop`]).
+//! proptest → [`prop`], log/env_logger → [`log`]).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,246 @@
+//! Observability-plane integration: a traced session round-trips
+//! through the JSONL trace format, span nesting matches the pipeline's
+//! stage order, event content is deterministic per `(seed, jobs)`
+//! (scheduling-dependent readings live in `diag` only), a disabled
+//! recorder emits nothing and perturbs nothing, and the stage spans'
+//! virtual time reconciles with `Session::search_time_s()`.
+
+use std::sync::Arc;
+
+use moses::coordinator::{AutoTuner, BackendKind, Session, TuneConfig};
+use moses::device::presets;
+use moses::obs::{Lane, Recorder, Trace, TraceEvent, TraceHeader, TRACE_VERSION};
+use moses::program::{Subgraph, SubgraphKind};
+use moses::transfer::Strategy;
+use moses::tunecache::TuneCache;
+
+fn tasks(n: usize) -> Vec<Subgraph> {
+    (0..n)
+        .map(|i| {
+            if i % 2 == 0 {
+                Subgraph::new(
+                    &format!("ot.conv{i}"),
+                    SubgraphKind::Conv2d {
+                        n: 1,
+                        h: 14,
+                        w: 14,
+                        cin: 32,
+                        cout: 32 + 16 * i,
+                        kh: 3,
+                        kw: 3,
+                        stride: 1,
+                        pad: 1,
+                    },
+                )
+            } else {
+                Subgraph::new(
+                    &format!("ot.dense{i}"),
+                    SubgraphKind::Dense { m: 64, n: 128 + 64 * i, k: 256 },
+                )
+            }
+        })
+        .collect()
+}
+
+fn cfg(jobs: usize, seed: u64) -> TuneConfig {
+    TuneConfig {
+        trials_per_task: 24,
+        measure_batch: 4,
+        strategy: Strategy::AnsorRandom,
+        population: 24,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed,
+        jobs,
+        ..TuneConfig::default()
+    }
+}
+
+fn traced_session(
+    jobs: usize,
+    seed: u64,
+    n_tasks: usize,
+    rec: &Recorder,
+    cache: Option<Arc<TuneCache>>,
+) -> Session {
+    let mut b = AutoTuner::builder(presets::rtx_2060())
+        .config(&cfg(jobs, seed))
+        .trace(rec.clone());
+    if let Some(c) = cache {
+        b = b.cache(c);
+    }
+    b.build().unwrap().tune(&tasks(n_tasks)).unwrap()
+}
+
+fn trace_from(rec: &Recorder, jobs: usize, seed: u64) -> Trace {
+    Trace {
+        header: TraceHeader {
+            version: TRACE_VERSION,
+            device: "rtx-2060".to_string(),
+            strategy: "ansor-random".to_string(),
+            model: "obs-test".to_string(),
+            jobs,
+            seed,
+        },
+        events: rec.drain(),
+        metrics: rec.metrics_snapshot(),
+    }
+}
+
+/// Session outcome fingerprint (same shape as the parallel_tune one):
+/// tracing must never change what the tuner computes.
+fn fingerprint(s: &Session) -> Vec<u64> {
+    let mut out = Vec::new();
+    for t in &s.tasks {
+        out.push(t.best_latency_s.to_bits());
+        out.push(t.measured as u64);
+        out.push(t.predicted_only as u64);
+        for h in &t.history {
+            out.push(h.to_bits());
+        }
+    }
+    out.push(s.search_time_s().to_bits());
+    out
+}
+
+/// Strip the scheduling-dependent payload; everything left must be a
+/// pure function of `(seed, jobs, tasks)`.
+fn deterministic_view(events: &[TraceEvent]) -> Vec<TraceEvent> {
+    events
+        .iter()
+        .map(|e| TraceEvent { diag: Vec::new(), ..e.clone() })
+        .collect()
+}
+
+#[test]
+fn trace_roundtrips_through_the_report_parser() {
+    let rec = Recorder::enabled();
+    let cache = {
+        let mut tc = TuneCache::in_memory(8);
+        tc.attach_recorder(&rec);
+        Arc::new(tc)
+    };
+    traced_session(2, 9, 4, &rec, Some(cache));
+    let trace = trace_from(&rec, 2, 9);
+    assert!(!trace.events.is_empty());
+
+    let back = Trace::parse(&trace.to_jsonl()).expect("written trace must parse");
+    assert_eq!(back, trace);
+
+    // The attached cache surfaces its lane and its counters.
+    assert!(trace.events.iter().any(|e| e.lane == Lane::Cache && e.name == "open"));
+    assert!(trace.metrics.keys().any(|k| k.starts_with("cache.")));
+
+    // Reports render from the parsed trace, labelled with task names.
+    let task_md = trace.per_task_table().to_markdown();
+    let stage_md = trace.per_stage_table().to_markdown();
+    assert!(task_md.contains("ot.conv0") && task_md.contains("ot.dense1"));
+    assert!(stage_md.contains("measure") && stage_md.contains("total"));
+    assert!(trace.vt_total_s() > 0.0);
+}
+
+#[test]
+fn span_nesting_matches_pipeline_stage_order() {
+    let rec = Recorder::enabled();
+    traced_session(1, 13, 2, &rec, None);
+    let events = rec.drain();
+
+    for ord in 0..2usize {
+        let lane: Vec<&TraceEvent> =
+            events.iter().filter(|e| e.lane == Lane::Task(ord)).collect();
+        assert!(!lane.is_empty(), "task {ord} must have a lane");
+
+        // Per-lane seqs are contiguous from 0 in drain order.
+        for (i, e) in lane.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+        }
+
+        // Stage-level order: warm_start, round*, finalize.
+        let stages: Vec<&str> =
+            lane.iter().filter(|e| e.depth == 0).map(|e| e.name.as_str()).collect();
+        assert_eq!(stages.first(), Some(&"warm_start"));
+        assert_eq!(stages.last(), Some(&"finalize"));
+        assert!(stages[1..stages.len() - 1].iter().all(|n| *n == "round"));
+
+        // Depth-1 detail nests inside a round's virtual interval.
+        let rounds: Vec<(f64, f64)> = lane
+            .iter()
+            .filter(|e| e.depth == 0 && e.name == "round")
+            .map(|e| (e.vt_start_s, e.vt_start_s + e.vt_dur_s))
+            .collect();
+        for e in lane.iter().filter(|e| e.depth == 1) {
+            assert!(
+                matches!(e.name.as_str(), "propose" | "measure" | "pin"),
+                "unexpected depth-1 event '{}'",
+                e.name
+            );
+            let (s, t) = (e.vt_start_s, e.vt_start_s + e.vt_dur_s);
+            assert!(
+                rounds.iter().any(|(rs, rt)| *rs - 1e-9 <= s && t <= *rt + 1e-9),
+                "depth-1 '{}' [{s}, {t}] outside every round {rounds:?}",
+                e.name
+            );
+        }
+    }
+
+    // The learner lane recorded one learn span per absorbed batch, each
+    // tagged with its task ordinal.
+    let learns: Vec<&TraceEvent> = events
+        .iter()
+        .filter(|e| e.lane == Lane::Learner && e.name == "learn")
+        .collect();
+    assert!(!learns.is_empty());
+    for e in &learns {
+        assert!(e.args.iter().any(|(k, v)| k == "task" && (*v == 0.0 || *v == 1.0)));
+    }
+}
+
+#[test]
+fn event_content_is_deterministic_per_seed_and_jobs() {
+    let run = || {
+        let rec = Recorder::enabled();
+        let session = traced_session(2, 21, 4, &rec, None);
+        (deterministic_view(&rec.drain()), rec.metrics_snapshot(), fingerprint(&session))
+    };
+    let (ev_a, m_a, fp_a) = run();
+    let (ev_b, m_b, fp_b) = run();
+    assert_eq!(fp_a, fp_b, "session itself must be reproducible");
+    assert_eq!(m_a, m_b, "metrics must be reproducible");
+    assert_eq!(ev_a.len(), ev_b.len());
+    for (a, b) in ev_a.iter().zip(&ev_b) {
+        assert_eq!(a, b, "event content must not depend on thread scheduling");
+    }
+}
+
+#[test]
+fn disabled_recorder_emits_nothing_and_changes_nothing() {
+    let off = Recorder::disabled();
+    let s_off = traced_session(2, 33, 4, &off, None);
+    assert!(off.drain().is_empty());
+    assert!(off.metrics_snapshot().is_empty());
+
+    let on = Recorder::enabled();
+    let s_on = traced_session(2, 33, 4, &on, None);
+    assert!(!on.drain().is_empty());
+    assert_eq!(
+        fingerprint(&s_off),
+        fingerprint(&s_on),
+        "recording must not perturb tuning results"
+    );
+}
+
+#[test]
+fn stage_spans_reconcile_with_session_search_time() {
+    let rec = Recorder::enabled();
+    let session = traced_session(4, 7, 8, &rec, None);
+    let trace = trace_from(&rec, 4, 7);
+    let vt = trace.vt_total_s();
+    let engine = session.search_time_s();
+    assert!(engine > 0.0);
+    let rel = (vt - engine).abs() / engine;
+    assert!(
+        rel < 0.01,
+        "stage spans must account for the virtual search time: \
+         spans {vt} vs session {engine} (rel err {rel})"
+    );
+}
