@@ -14,7 +14,7 @@ use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorPr
 use moses::runtime::Engine;
 use moses::search::{EvolutionarySearch, SearchPolicy};
 use moses::transfer::Strategy;
-use moses::tunecache::{TuneRecord, TuneStore, WorkloadIndex, WorkloadKey, RECORD_VERSION};
+use moses::tunecache::{TuneCache, TuneRecord, TuneStore, WorkloadIndex, WorkloadKey, RECORD_VERSION};
 use moses::util::bench::Bencher;
 use moses::util::rng::Rng;
 
@@ -105,7 +105,7 @@ fn main() {
 
     // --- snapshot publish/pin (the zero-copy prediction plane) ------------
     // One learner publish followed by 4 worker pins + view construction,
-    // exactly the per-round round trip of a `--jobs 4` wave.  The cost
+    // the per-round round trip of a `--jobs 4` session.  The cost
     // is pointer swaps under a mutex — independent of the ~350k-float
     // parameter count (contrast with the per-round deep copy this
     // replaced, which scaled with N_PARAMS).
@@ -194,8 +194,8 @@ fn main() {
     });
     b.run("nn_workload_records", || store.workload_records(hit_key.workload));
 
-    // --- staged pipeline: multi-task session throughput --------------------
-    // 8 tasks tuned end to end, sequentially vs on 4 worker pipelines
+    // --- work-stealing sessions: multi-task throughput ---------------------
+    // 8 tasks tuned end to end, sequentially vs over 4 stealing workers
     // sharing one learner actor.  Real wall time — the parallel case
     // overlaps search + measurement across cores.
     let session_tasks: Vec<Subgraph> = (0..8)
@@ -223,29 +223,79 @@ fn main() {
             }
         })
         .collect();
-    let tune_session = |jobs: usize| {
-        let cfg = TuneConfig {
-            trials_per_task: 24,
-            measure_batch: 4,
-            strategy: Strategy::AnsorRandom,
-            population: 32,
-            generations: 2,
-            backend: BackendKind::Rust,
-            seed: 7,
-            jobs,
-            ..TuneConfig::default()
-        };
-        let mut tuner = AutoTuner::builder(presets::rtx_2060())
-            .config(&cfg)
-            .build()
-            .expect("tuner");
-        tuner.tune(&session_tasks).expect("session").total_measurements()
+    let session_cfg = |jobs: usize| TuneConfig {
+        trials_per_task: 24,
+        measure_batch: 4,
+        strategy: Strategy::AnsorRandom,
+        population: 32,
+        generations: 2,
+        backend: BackendKind::Rust,
+        seed: 7,
+        jobs,
+        ..TuneConfig::default()
     };
-    let (r1, _) = b.run_once("tune_session_8tasks_jobs1", || tune_session(1));
-    let (r4, _) = b.run_once("tune_session_8tasks_jobs4", || tune_session(4));
+    let tune_session = |jobs: usize, cache: Option<Arc<TuneCache>>| {
+        let mut builder = AutoTuner::builder(presets::rtx_2060()).config(&session_cfg(jobs));
+        if let Some(c) = cache {
+            builder = builder.cache(c);
+        }
+        builder.build().expect("tuner").tune(&session_tasks).expect("session")
+    };
+    let (r1, _) =
+        b.run_once("tune_session_8tasks_jobs1", || tune_session(1, None).total_measurements());
+    let (r4, _) =
+        b.run_once("tune_session_8tasks_jobs4", || tune_session(4, None).total_measurements());
     println!(
         "bench tune_session_8tasks            jobs4 speedup {:.2}x over jobs1",
         r1.median_ns() / r4.median_ns().max(1.0)
+    );
+
+    // --- work-stealing gate: skewed budgets --------------------------------
+    // Odd tasks are seeded into a tune cache so the mixed session sees a
+    // straggler pattern: exact hits finish in near-zero virtual time
+    // while even tasks search the full budget.  Two gates: the stealing
+    // schedule must beat wave accounting on the virtual clock, and the
+    // default (deterministic) mode must reproduce bitwise across runs.
+    let shorts: Vec<Subgraph> = session_tasks.iter().skip(1).step_by(2).cloned().collect();
+    let seeded_cache = || {
+        let cache = Arc::new(TuneCache::in_memory(8));
+        AutoTuner::builder(presets::rtx_2060())
+            .config(&session_cfg(1))
+            .cache(cache.clone())
+            .build()
+            .expect("tuner")
+            .tune(&shorts)
+            .expect("seed session");
+        cache
+    };
+    let session_bits = |s: &moses::coordinator::Session| {
+        let mut out: Vec<u64> = s.tasks.iter().map(|t| t.best_latency_s.to_bits()).collect();
+        out.push(s.search_time_s().to_bits());
+        out.push(s.wall_time_s().to_bits());
+        out
+    };
+    let (_, skew_a) =
+        b.run_once("tune_session_8tasks_jobs4_skewed", || tune_session(4, Some(seeded_cache())));
+    let (_, skew_b) = b.run_once("tune_session_8tasks_jobs4_skewed_rerun", || {
+        tune_session(4, Some(seeded_cache()))
+    });
+    assert!(
+        skew_a.wall_time_s() < skew_a.wave_wall_time_s() - 1e-9,
+        "gate: stealing wall {} s must beat wave wall {} s on skewed budgets",
+        skew_a.wall_time_s(),
+        skew_a.wave_wall_time_s()
+    );
+    assert_eq!(
+        session_bits(&skew_a),
+        session_bits(&skew_b),
+        "gate: the skewed --jobs 4 session must be bit-reproducible in default mode"
+    );
+    println!(
+        "bench tune_session_8tasks_jobs4_skewed  virtual wall {:.1} s vs wave {:.1} s \
+         ({:.2}x), bit-reproducible",
+        skew_a.wall_time_s(),
+        skew_a.wave_wall_time_s(),
+        skew_a.wave_wall_time_s() / skew_a.wall_time_s().max(1e-12)
     );
 
     // --- XLA backend (skipped when unavailable) ---------------------------

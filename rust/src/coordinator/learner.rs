@@ -11,22 +11,27 @@
 //!   synchronously between pipeline stages, and stages predict against
 //!   the live model — exactly the sequential tuning loop;
 //! * **actor mode** (`--jobs N`): [`run_learner_actor`] runs the learner
-//!   on its own thread, consuming [`ToLearner`] messages from a channel.
-//!   Within a wave of concurrently-tuned tasks it applies each round's
-//!   batches in ascending task order (a deterministic total order
-//!   independent of thread scheduling), then publishes a new
-//!   `Arc<ModelState>` snapshot through the [`SnapshotCell`] — an O(1)
-//!   pointer swap, never a parameter copy; workers block on the version
-//!   they need, pin the snapshot (another pointer clone), and predict
-//!   through a [`crate::costmodel::Predictor`] view.  Fixed
-//!   `(seed, jobs)` therefore reproduces bit-identical sessions.
+//!   on its own thread, consuming [`ToLearner`] messages from a channel
+//!   while the work-stealing scheduler drives every task pipeline.  In
+//!   the default deterministic mode it applies batches in the fixed
+//!   total order `(seq, task_ord)` lexicographic — sweep-major,
+//!   ascending task ordinal — independent of arrival order
+//!   (out-of-order messages wait in a stash), and after each apply it
+//!   hands that task's post-apply `Arc<ModelState>` to the
+//!   [`SnapshotSink`] — an O(1) pointer swap, never a parameter copy.
+//!   A task's round-`r + 1` proposal pins exactly the snapshot its own
+//!   round-`r` batch produced, so results are a pure function of
+//!   `(seed, tasks)` no matter which worker runs which step.  With
+//!   `--fast-nondeterministic` the actor absorbs batches in arrival
+//!   order and publishes only a "latest" snapshot — maximum throughput,
+//!   no bit-pinning.
 //!
 //! Virtual-time charges incurred on the learning plane (gradient steps,
 //! ξ saliency refreshes) are attributed to the *originating task's*
 //! clock so per-task and session accounting stay exact in both modes.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
@@ -366,88 +371,121 @@ impl SnapshotCell {
 
 /// Messages into the learner actor.
 pub(crate) enum ToLearner {
-    /// Start a wave: the ords tuning concurrently, ascending.
-    Wave { tasks: Vec<usize> },
     /// One pipeline stage's batch, with a forked stream for the epoch
     /// shuffles (the worker's own stream cannot cross threads).
     Batch { batch: LearnBatch, shuffle_rng: Rng },
     /// The task will emit no batch at `seq` or any later sweep.
     Finished { task_ord: usize, seq: u32 },
-    /// Session over: return the learner state to the driver.
-    Shutdown,
+}
+
+/// Where the actor publishes post-apply snapshots: the scheduler's
+/// snapshot board.  In deterministic mode the board keeps one slot per
+/// task (`applied` counts that task's absorbed batches, so a worker
+/// waiting on its own batch count pins exactly the post-apply state);
+/// in fast mode the board only tracks the newest snapshot.
+pub(crate) trait SnapshotSink: Sync {
+    /// `task_ord`'s batch number `applied` (1-based count of that
+    /// task's absorbed batches) was just applied; `model` is the state
+    /// immediately after.
+    fn publish(&self, task_ord: usize, applied: u64, model: Arc<ModelState>);
+    /// The learner died: wake every waiter with failure.
+    fn poison(&self);
 }
 
 type Stashed = Option<(LearnBatch, Rng)>;
 
-fn stash(buf: &mut BTreeMap<(usize, u32), Stashed>, msg: ToLearner) {
+/// Keyed `(seq, ord)`: the deterministic total apply order is
+/// sweep-major, ascending task ordinal within a sweep.
+fn stash(buf: &mut BTreeMap<(u32, usize), Stashed>, msg: ToLearner) {
     match msg {
         ToLearner::Batch { batch, shuffle_rng } => {
-            buf.insert((batch.task_ord, batch.seq), Some((batch, shuffle_rng)));
+            buf.insert((batch.seq, batch.task_ord), Some((batch, shuffle_rng)));
         }
         ToLearner::Finished { task_ord, seq } => {
-            buf.insert((task_ord, seq), None);
+            buf.insert((seq, task_ord), None);
         }
-        // Wave/Shutdown are control-flow; callers handle them directly.
-        ToLearner::Wave { .. } | ToLearner::Shutdown => {}
     }
 }
 
-/// The learner actor: per wave, consume every live task's batch for the
-/// current sweep **in ascending task order** (deterministic regardless
-/// of arrival order — out-of-order messages wait in a stash), absorb
-/// them, publish the next snapshot version, repeat until the wave
-/// drains, then report the post-wave version on `wave_done`.
+/// The learner actor for one scheduled session over the tasks in
+/// `ords` (ascending).
+///
+/// **Deterministic mode:** absorb every live task's `(seq, ord)` batch
+/// in lexicographic order regardless of arrival order (out-of-order
+/// messages wait in a stash), publishing each task's post-apply
+/// snapshot through the sink right after its batch lands — so a task
+/// blocked on its own batch resumes without waiting for the rest of the
+/// sweep.  A `Finished` marker retires a task from the sweep.  The loop
+/// ends when every task has finished.
+///
+/// **Fast mode** (`--fast-nondeterministic`): absorb batches in arrival
+/// order and publish each as the newest snapshot; nothing is pinned and
+/// nothing waits.
 pub(crate) fn run_learner_actor(
     mut learner: Learner,
+    ords: Vec<usize>,
     rx: Receiver<ToLearner>,
-    cell: &SnapshotCell,
-    wave_done: Sender<u64>,
+    sink: &dyn SnapshotSink,
+    deterministic: bool,
 ) -> Result<Learner> {
     let mut version: u64 = 0;
-    let mut pending: BTreeMap<(usize, u32), Stashed> = BTreeMap::new();
-    'session: loop {
-        let mut live: Vec<usize> = loop {
+    if !deterministic {
+        let mut counts: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut remaining = ords.len();
+        while remaining > 0 {
             match rx.recv() {
-                Ok(ToLearner::Wave { tasks }) => break tasks,
-                Ok(ToLearner::Shutdown) | Err(_) => break 'session,
-                Ok(other) => stash(&mut pending, other),
-            }
-        };
-        let mut seq: u32 = 0;
-        while !live.is_empty() {
-            let mut survivors = Vec::with_capacity(live.len());
-            for &ord in &live {
-                let entry = loop {
-                    if let Some(e) = pending.remove(&(ord, seq)) {
-                        break e;
-                    }
-                    match rx.recv() {
-                        Ok(ToLearner::Wave { .. }) => {
-                            cell.poison();
-                            anyhow::bail!("learner: wave started before the previous drained");
-                        }
-                        Ok(ToLearner::Shutdown) | Err(_) => {
-                            cell.poison();
-                            anyhow::bail!("learner: shut down mid-wave");
-                        }
-                        Ok(other) => stash(&mut pending, other),
-                    }
-                };
-                if let Some((batch, mut shuffle_rng)) = entry {
+                Ok(ToLearner::Batch { batch, mut shuffle_rng }) => {
+                    let ord = batch.task_ord;
                     if let Err(e) = learner.absorb(batch, &mut shuffle_rng) {
-                        cell.poison();
+                        sink.poison();
                         return Err(e);
                     }
-                    survivors.push(ord);
+                    version += 1;
+                    let applied = counts.entry(ord).or_insert(0);
+                    *applied += 1;
+                    sink.publish(ord, *applied, learner.snapshot_state());
+                    learner.trace_publish(version, 0);
+                }
+                Ok(ToLearner::Finished { .. }) => remaining -= 1,
+                Err(_) => {
+                    sink.poison();
+                    anyhow::bail!("learner: workers lost mid-session");
                 }
             }
-            live = survivors;
-            version += 1;
-            cell.publish(version, learner.snapshot_state());
-            learner.trace_publish(version, pending.len());
-            seq += 1;
         }
-        let _ = wave_done.send(version);
+        return Ok(learner);
+    }
+    let mut live = ords;
+    let mut pending: BTreeMap<(u32, usize), Stashed> = BTreeMap::new();
+    let mut seq: u32 = 0;
+    while !live.is_empty() {
+        let mut survivors = Vec::with_capacity(live.len());
+        for &ord in &live {
+            let entry = loop {
+                if let Some(e) = pending.remove(&(seq, ord)) {
+                    break e;
+                }
+                match rx.recv() {
+                    Ok(msg) => stash(&mut pending, msg),
+                    Err(_) => {
+                        sink.poison();
+                        anyhow::bail!("learner: workers lost mid-session");
+                    }
+                }
+            };
+            if let Some((batch, mut shuffle_rng)) = entry {
+                if let Err(e) = learner.absorb(batch, &mut shuffle_rng) {
+                    sink.poison();
+                    return Err(e);
+                }
+                version += 1;
+                sink.publish(ord, seq as u64 + 1, learner.snapshot_state());
+                learner.trace_publish(version, pending.len());
+                survivors.push(ord);
+            }
+        }
+        live = survivors;
+        seq += 1;
     }
     Ok(learner)
 }
@@ -550,6 +588,86 @@ mod tests {
         assert!(!Arc::ptr_eq(&c, &published));
         // The earlier pin still reads the old parameters.
         assert_eq!(a.params()[0], 1.0);
+    }
+
+    /// Records every publish so tests can assert the apply order.
+    struct RecordingSink {
+        published: Mutex<Vec<(usize, u64)>>,
+        poisoned: Mutex<bool>,
+    }
+
+    impl RecordingSink {
+        fn new() -> RecordingSink {
+            RecordingSink { published: Mutex::new(Vec::new()), poisoned: Mutex::new(false) }
+        }
+    }
+
+    impl SnapshotSink for RecordingSink {
+        fn publish(&self, task_ord: usize, applied: u64, _model: Arc<ModelState>) {
+            self.published.lock().unwrap().push((task_ord, applied));
+        }
+        fn poison(&self) {
+            *self.poisoned.lock().unwrap() = true;
+        }
+    }
+
+    #[test]
+    fn actor_applies_in_seq_major_ascending_ord_order() {
+        // Feed batches deliberately OUT of the deterministic order; the
+        // actor must still apply sweep-major, ascending ord, publishing
+        // each task's post-apply snapshot as soon as its batch lands.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let send_batch = |seq: u32, ord: usize| {
+            let batch = LearnBatch { task_ord: ord, seq, samples: vec![sample(ord, 1.0)], train: None };
+            tx.send(ToLearner::Batch { batch, shuffle_rng: Rng::new(7) }).unwrap();
+        };
+        send_batch(1, 1); // task 1 a full sweep ahead of everyone
+        send_batch(0, 1); // sweep 0 arrives ord-descending
+        send_batch(0, 0);
+        send_batch(0, 2);
+        send_batch(1, 0);
+        tx.send(ToLearner::Finished { task_ord: 2, seq: 1 }).unwrap();
+        tx.send(ToLearner::Finished { task_ord: 0, seq: 2 }).unwrap();
+        tx.send(ToLearner::Finished { task_ord: 1, seq: 2 }).unwrap();
+        drop(tx);
+        let sink = RecordingSink::new();
+        let l = run_learner_actor(learner(), vec![0, 1, 2], rx, &sink, true).unwrap();
+        assert_eq!(
+            *sink.published.lock().unwrap(),
+            vec![(0, 1), (1, 1), (2, 1), (0, 2), (1, 2)],
+            "apply order must be (seq, ord)-lexicographic with 1-based per-task counts"
+        );
+        assert!(!*sink.poisoned.lock().unwrap());
+        assert_eq!(l.task_count(), 3);
+    }
+
+    #[test]
+    fn actor_fast_mode_absorbs_in_arrival_order() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let send_batch = |seq: u32, ord: usize| {
+            let batch = LearnBatch { task_ord: ord, seq, samples: vec![sample(ord, 1.0)], train: None };
+            tx.send(ToLearner::Batch { batch, shuffle_rng: Rng::new(7) }).unwrap();
+        };
+        // Arrival order IS the apply order in fast mode — even when it
+        // inverts the deterministic (seq, ord) order.
+        send_batch(1, 1);
+        send_batch(0, 0);
+        tx.send(ToLearner::Finished { task_ord: 0, seq: 1 }).unwrap();
+        tx.send(ToLearner::Finished { task_ord: 1, seq: 2 }).unwrap();
+        drop(tx);
+        let sink = RecordingSink::new();
+        run_learner_actor(learner(), vec![0, 1], rx, &sink, false).unwrap();
+        assert_eq!(*sink.published.lock().unwrap(), vec![(1, 1), (0, 1)]);
+    }
+
+    #[test]
+    fn actor_poisons_the_sink_when_workers_vanish() {
+        let (tx, rx) = std::sync::mpsc::channel::<ToLearner>();
+        drop(tx); // no Finished markers will ever arrive
+        let sink = RecordingSink::new();
+        let err = run_learner_actor(learner(), vec![0], rx, &sink, true).unwrap_err();
+        assert!(err.to_string().contains("workers lost"), "{err}");
+        assert!(*sink.poisoned.lock().unwrap());
     }
 
     #[test]

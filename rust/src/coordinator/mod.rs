@@ -16,18 +16,23 @@
 //!    total virtual search time.
 //!
 //! Since the staged-pipeline refactor these responsibilities live in
-//! three layers: `pipeline` (per-task stages: warm-start → propose →
+//! four layers: `pipeline` (per-task stages: warm-start → propose →
 //! measure → learn-batch emission → finalize), `learner` (the shared
 //! learning plane: cost model, replay buffer, Moses adapter, publishing
-//! [`crate::costmodel::ModelState`] snapshots through the
-//! [`SnapshotCell`]), and `tuner` (the driver — sequential inline at
-//! `--jobs 1`, wave-parallel worker threads pinning read-only
+//! [`crate::costmodel::ModelState`] snapshots — per task slot to the
+//! work-stealing board in scheduled sessions, or through the
+//! [`SnapshotCell`] primitive directly), `sched` (the work-stealing
+//! execution plane: tasks as stealable resumable units on per-worker
+//! deques, steal-on-idle, park/resume on snapshot availability), and
+//! `tuner` (the driver — sequential inline at `--jobs 1`, the
+//! always-saturated scheduler pinning read-only
 //! [`crate::costmodel::Predictor`] views at `--jobs N`).  Sessions are
 //! configured through [`AutoTuner::builder`], which validates knob
 //! combinations at build time and serializes to [`TuneConfig`].
 
 mod learner;
 mod pipeline;
+pub(crate) mod sched;
 mod session;
 mod tuner;
 

@@ -113,6 +113,12 @@ pub(crate) struct TaskPipeline {
     /// Last measured batch awaiting the AC's post-update stability
     /// observation (consumed by the next stage that sees the model).
     pending_observe: Option<(Vec<f32>, usize)>,
+    /// Scheduled (`--jobs N`) sessions defer cache commits: finalize
+    /// stashes records here and the driver lands them in task order
+    /// after every pipeline is done, so what a sibling task's warm
+    /// start sees never depends on thread timing.
+    defer_commits: bool,
+    deferred_commits: Vec<TuneRecord>,
     /// This task's trace emitter (disabled scopes reduce every span to
     /// one branch).
     scope: TraceScope,
@@ -172,8 +178,22 @@ impl TaskPipeline {
             warm_seeds_n: 0,
             neighbor_seeds_n: 0,
             pending_observe: None,
+            defer_commits: false,
+            deferred_commits: Vec::new(),
             scope,
         }
+    }
+
+    /// Stash finalize's cache records instead of committing them (the
+    /// scheduler lands them in task order once the session is done).
+    pub fn defer_cache_commits(&mut self) {
+        self.defer_commits = true;
+    }
+
+    /// The records finalize stashed under
+    /// [`TaskPipeline::defer_cache_commits`].
+    pub fn take_deferred_commits(&mut self) -> Vec<TuneRecord> {
+        std::mem::take(&mut self.deferred_commits)
     }
 
     /// Serve the pending post-update AC observation, if one is due: the
@@ -629,18 +649,21 @@ impl TaskPipeline {
             self.cache_outcomes.push((self.best_sched, self.best_latency));
             for (sched, lat) in &self.cache_outcomes {
                 let gflops = self.task.flops() / lat.max(1e-12) / 1e9;
-                cache.commit(
-                    TuneRecord::new(
-                        key,
-                        desc,
-                        &self.sim.arch.name,
-                        sched,
-                        *lat,
-                        gflops,
-                        self.cfg.trials_per_task,
-                    )
-                    .with_task(&self.task),
-                );
+                let rec = TuneRecord::new(
+                    key,
+                    desc,
+                    &self.sim.arch.name,
+                    sched,
+                    *lat,
+                    gflops,
+                    self.cfg.trials_per_task,
+                )
+                .with_task(&self.task);
+                if self.defer_commits {
+                    self.deferred_commits.push(rec);
+                } else {
+                    cache.commit(rec);
+                }
             }
         }
 

@@ -1,0 +1,531 @@
+//! The work-stealing execution plane of `--jobs N` sessions.
+//!
+//! Tasks are stealable units: each [`TaskUnit`] wraps one
+//! [`TaskPipeline`] as a resumable step-state machine (warm-start, one
+//! round per step, finalize) and lives on the [`Board`] — per-worker
+//! deques (own pops are LIFO, steals FIFO), a global injector for
+//! resumed units, and a parking lot for units waiting on a model
+//! snapshot.  A worker that drains its own deque takes resumed work
+//! from the injector, then steals the oldest unit from a sibling; it
+//! only sleeps when every task is either running on some worker or
+//! parked.  That keeps all `--jobs` workers saturated instead of
+//! idling behind a wave barrier's straggler.
+//!
+//! **Determinism contract.**  In the default mode the schedule is free
+//! but the *results* are not: the learner actor applies batches in the
+//! fixed `(seq, task_ord)` order and publishes each task's post-apply
+//! snapshot into that task's board slot ([`Board`] is the learner's
+//! [`SnapshotSink`]).  A unit blocked on its round-`r + 1` pin parks
+//! until its *own* round-`r` batch has been applied, and the slot
+//! cannot advance past that point until the task itself sends another
+//! batch — so the pinned state is independent of which worker resumes
+//! the unit or how long it slept.  Sessions are therefore
+//! bit-reproducible per `(seed, tasks)` for any worker count, while
+//! every scheduling decision (steal/park/resume, recorded on the
+//! [`Lane::Sched`](crate::obs::Lane) lanes) stays timing-dependent.
+//! In `--fast-nondeterministic` mode units never park: a blocked unit
+//! immediately pins the newest published snapshot and requeues.
+//!
+//! Cache commits are deferred through the unit
+//! ([`TaskPipeline::defer_cache_commits`]) and landed by the driver in
+//! task order after the scheduler finishes, so a sibling's warm start
+//! never races a finalize commit.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use super::learner::{SnapshotSink, ToLearner};
+use super::pipeline::{StageOutput, TaskPipeline};
+use super::session::TaskResult;
+use crate::costmodel::{Backend, ModelState, Predictor};
+use crate::device::VirtualClock;
+use crate::obs::{SpanTimer, TraceScope};
+use crate::tunecache::TuneRecord;
+
+/// What one finished task hands back to the driver.
+pub(crate) struct UnitOutput {
+    pub idx: usize,
+    pub result: TaskResult,
+    pub clock: VirtualClock,
+    /// Deferred cache records, landed by the driver in task order.
+    pub commits: Vec<TuneRecord>,
+}
+
+/// One step's outcome: the unit either sent a batch and needs its
+/// next snapshot, or ran to completion.
+enum StepResult {
+    /// Park until the task's applied-batch count reaches `want`.
+    Blocked { want: u64 },
+    Done(Box<UnitOutput>),
+}
+
+/// A task pipeline as a stealable, resumable unit of work.
+///
+/// Steps: the first `step` runs warm-start (a cache hit completes the
+/// unit outright); every later step pins the snapshot the scheduler
+/// supplied, runs one search round, and either emits the next batch
+/// (blocking on its apply) or — once the budget is exhausted —
+/// finalizes under the same snapshot.  Dropping a unit on any path
+/// sends the learner's `Finished` marker exactly once, so the actor's
+/// sweep never waits on a dead task.
+pub(crate) struct TaskUnit {
+    /// Local index on the board (`ord - ord_base`).
+    idx: usize,
+    /// Global task ordinal (the learner's slot key).
+    ord: usize,
+    pipe: TaskPipeline,
+    tx: Sender<ToLearner>,
+    /// Batches sent so far; the next pin waits for this many applies.
+    sent: u32,
+    finished_sent: bool,
+    started: bool,
+    /// Snapshot supplied by the scheduler before a resumed step.
+    pinned: Option<Arc<ModelState>>,
+    /// Open pin span covering the park wait (wall time lands in diag).
+    pin_timer: Option<SpanTimer>,
+    was_parked: bool,
+}
+
+impl TaskUnit {
+    pub fn new(idx: usize, ord: usize, pipe: TaskPipeline, tx: Sender<ToLearner>) -> TaskUnit {
+        TaskUnit {
+            idx,
+            ord,
+            pipe,
+            tx,
+            sent: 0,
+            finished_sent: false,
+            started: false,
+            pinned: None,
+            pin_timer: None,
+            was_parked: false,
+        }
+    }
+
+    /// Tell the learner this task will emit no batch at `sent` or any
+    /// later sweep (idempotent; also fired by `Drop` on error paths).
+    fn send_finished(&mut self) {
+        if !self.finished_sent {
+            self.finished_sent = true;
+            let _ = self.tx.send(ToLearner::Finished { task_ord: self.ord, seq: self.sent });
+        }
+    }
+
+    fn send_batch(&mut self, batch: super::learner::LearnBatch) {
+        let shuffle_rng = self.pipe.fork_shuffle_rng();
+        let _ = self.tx.send(ToLearner::Batch { batch, shuffle_rng });
+        self.sent += 1;
+    }
+
+    fn done(&mut self, result: TaskResult) -> StepResult {
+        StepResult::Done(Box::new(UnitOutput {
+            idx: self.idx,
+            result,
+            clock: self.pipe.clock(),
+            commits: self.pipe.take_deferred_commits(),
+        }))
+    }
+
+    /// Run the unit until it blocks on a snapshot or completes.
+    fn step(&mut self, backend: &Arc<dyn Backend>) -> Result<StepResult> {
+        if !self.started {
+            self.started = true;
+            match self.pipe.warm_start()? {
+                StageOutput::Complete(r) => {
+                    self.send_finished();
+                    return Ok(self.done(*r));
+                }
+                StageOutput::Learn(batch) => {
+                    self.send_batch(batch);
+                    self.pin_timer = Some(self.pipe.pin_timer());
+                    return Ok(StepResult::Blocked { want: 1 });
+                }
+                StageOutput::Exhausted => unreachable!("warm start never exhausts"),
+            }
+        }
+        // Resumed step: the scheduler must have pinned a snapshot; the
+        // only way it could not is a poisoned board (the learner died).
+        let Some(snapshot) = self.pinned.take() else {
+            anyhow::bail!("learner failed; no further model snapshots");
+        };
+        let model_version = snapshot.version();
+        if let Some(timer) = self.pin_timer.take() {
+            self.pipe.trace_pin(timer, self.sent as u64, model_version);
+        }
+        let view = Predictor::new(backend.clone(), snapshot);
+        match self.pipe.run_round(&view)? {
+            StageOutput::Learn(batch) => {
+                self.send_batch(batch);
+                self.pin_timer = Some(self.pipe.pin_timer());
+                Ok(StepResult::Blocked { want: self.sent as u64 })
+            }
+            StageOutput::Exhausted => {
+                // Finalize under the SAME snapshot: this task sent no
+                // further batch, so its slot cannot have advanced — the
+                // zero-wait pin span keeps the trace's stage shape.
+                let timer = self.pipe.pin_timer();
+                self.pipe.trace_pin(timer, self.sent as u64, model_version);
+                // Release the learner's sweep before the final
+                // verification measurement: no more batches will come.
+                self.send_finished();
+                let result = self.pipe.finalize(&view)?;
+                Ok(self.done(result))
+            }
+            StageOutput::Complete(_) => unreachable!("rounds never complete"),
+        }
+    }
+}
+
+impl Drop for TaskUnit {
+    fn drop(&mut self) {
+        // Error/panic paths drop the unit without finalizing; the
+        // learner still needs its Finished marker to retire the task.
+        self.send_finished();
+    }
+}
+
+/// How a worker came by a unit (drives the sched-lane trace events).
+enum Picked {
+    /// Popped from the worker's own deque.
+    Own,
+    /// Taken from the injector (resumed after a park or poison).
+    Resumed,
+    /// Stolen from worker `.0`'s deque.
+    Stolen(usize),
+}
+
+struct BoardState {
+    /// Per-worker deques: own pops are LIFO, steals FIFO.
+    queues: Vec<VecDeque<TaskUnit>>,
+    /// Units resumed by a snapshot publish; any worker may take them.
+    injector: VecDeque<TaskUnit>,
+    /// Parked units by local task index, with the applied-batch count
+    /// each is waiting for.
+    parked: Vec<Option<(u64, TaskUnit)>>,
+    /// Per-task `(applied batches, post-apply model)` snapshot slots.
+    slots: Vec<(u64, Arc<ModelState>)>,
+    /// Fast mode: the newest published model, whatever task it came
+    /// from.
+    latest: Arc<ModelState>,
+    results: Vec<Option<UnitOutput>>,
+    first_err: Option<anyhow::Error>,
+    /// Units neither completed nor failed yet.
+    active: usize,
+    poisoned: bool,
+}
+
+/// The scheduler's shared state: work queues, the parking lot, and the
+/// per-task snapshot slots the learner publishes into (one mutex — the
+/// board is only touched between steps, never during one).
+pub(crate) struct Board {
+    ord_base: usize,
+    jobs: usize,
+    deterministic: bool,
+    st: Mutex<BoardState>,
+    cv: Condvar,
+}
+
+impl Board {
+    pub fn new(
+        ord_base: usize,
+        jobs: usize,
+        deterministic: bool,
+        init: Arc<ModelState>,
+        units: Vec<TaskUnit>,
+    ) -> Board {
+        let n = units.len();
+        let mut queues: Vec<VecDeque<TaskUnit>> = (0..jobs).map(|_| VecDeque::new()).collect();
+        // Deal tasks round-robin; reversed so each worker's first LIFO
+        // pop is its lowest-ordinal task.
+        for unit in units.into_iter().rev() {
+            let w = unit.idx % jobs;
+            queues[w].push_back(unit);
+        }
+        Board {
+            ord_base,
+            jobs,
+            deterministic,
+            st: Mutex::new(BoardState {
+                queues,
+                injector: VecDeque::new(),
+                parked: (0..n).map(|_| None).collect(),
+                slots: (0..n).map(|_| (0, init.clone())).collect(),
+                latest: init,
+                results: (0..n).map(|_| None).collect(),
+                first_err: None,
+                active: n,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Next unit for worker `w`: own deque, then the injector, then a
+    /// steal; sleep only when everything is running or parked.  `None`
+    /// once every unit has completed or failed.
+    fn next_unit(&self, w: usize) -> Option<(TaskUnit, Picked)> {
+        let mut st = self.st.lock().expect("scheduler board poisoned");
+        loop {
+            if let Some(u) = st.queues[w].pop_back() {
+                return Some((u, Picked::Own));
+            }
+            if let Some(u) = st.injector.pop_front() {
+                return Some((u, Picked::Resumed));
+            }
+            for i in 1..self.jobs {
+                let v = (w + i) % self.jobs;
+                if let Some(u) = st.queues[v].pop_front() {
+                    return Some((u, Picked::Stolen(v)));
+                }
+            }
+            if st.active == 0 {
+                return None;
+            }
+            st = self.cv.wait(st).expect("scheduler board poisoned");
+        }
+    }
+
+    /// Handle a blocked unit: requeue it immediately when its snapshot
+    /// is already available (or will never come), park it otherwise.
+    /// Returns true when the unit parked.
+    fn block(&self, w: usize, mut unit: TaskUnit, want: u64) -> bool {
+        let mut st = self.st.lock().expect("scheduler board poisoned");
+        if !self.deterministic {
+            // Fast mode: pin whatever is newest and keep going.
+            unit.pinned = Some(st.latest.clone());
+            st.queues[w].push_back(unit);
+            return false;
+        }
+        let idx = unit.idx;
+        if st.slots[idx].0 >= want {
+            unit.pinned = Some(st.slots[idx].1.clone());
+            st.queues[w].push_back(unit);
+            false
+        } else if st.poisoned {
+            // No snapshot will ever arrive: resume pin-less so the next
+            // step reports the learner failure.
+            st.queues[w].push_back(unit);
+            false
+        } else {
+            unit.was_parked = true;
+            st.parked[idx] = Some((want, unit));
+            true
+        }
+    }
+
+    fn complete(&self, out: UnitOutput) {
+        let mut st = self.st.lock().expect("scheduler board poisoned");
+        let idx = out.idx;
+        st.results[idx] = Some(out);
+        st.active -= 1;
+        if st.active == 0 {
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
+    fn fail(&self, e: anyhow::Error) {
+        let mut st = self.st.lock().expect("scheduler board poisoned");
+        if st.first_err.is_none() {
+            st.first_err = Some(e);
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Tear the board down and hand the driver its outputs.
+    pub fn into_results(self) -> (Vec<Option<UnitOutput>>, Option<anyhow::Error>) {
+        let st = self.st.into_inner().expect("scheduler board poisoned");
+        (st.results, st.first_err)
+    }
+
+    /// The learner died: mark the board so blocked units fail fast, and
+    /// resume every parked unit pin-less so its next step reports the
+    /// failure instead of waiting forever.
+    pub fn poison(&self) {
+        let mut st = self.st.lock().expect("scheduler board poisoned");
+        st.poisoned = true;
+        let resumed: Vec<TaskUnit> =
+            st.parked.iter_mut().filter_map(|slot| slot.take().map(|(_, u)| u)).collect();
+        st.injector.extend(resumed);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Drop every unit the workers left behind (queued, resumed, or
+    /// parked).  A clean run leaves nothing to abandon; after a
+    /// catastrophic worker exit this releases the learner actor — each
+    /// dropped unit sends its `Finished` marker, so the actor's sweep
+    /// can retire it and exit instead of blocking on the channel.
+    pub fn abandon(&self) {
+        let mut st = self.st.lock().expect("scheduler board poisoned");
+        let mut orphans: Vec<TaskUnit> = Vec::new();
+        for q in &mut st.queues {
+            orphans.extend(q.drain(..));
+        }
+        let resumed: Vec<TaskUnit> = st.injector.drain(..).collect();
+        orphans.extend(resumed);
+        let parked: Vec<TaskUnit> =
+            st.parked.iter_mut().filter_map(|slot| slot.take().map(|(_, u)| u)).collect();
+        orphans.extend(parked);
+        st.active = st.active.saturating_sub(orphans.len());
+        drop(st);
+        // Dropping outside the lock: each unit's Drop sends Finished.
+        drop(orphans);
+    }
+}
+
+impl SnapshotSink for Board {
+    fn publish(&self, task_ord: usize, applied: u64, model: Arc<ModelState>) {
+        let mut st = self.st.lock().expect("scheduler board poisoned");
+        if !self.deterministic {
+            st.latest = model;
+            return;
+        }
+        let idx = task_ord - self.ord_base;
+        st.slots[idx] = (applied, model);
+        let ready = matches!(&st.parked[idx], Some((want, _)) if *want <= applied);
+        if ready {
+            let (_, mut unit) = st.parked[idx].take().expect("parked unit present");
+            unit.pinned = Some(st.slots[idx].1.clone());
+            st.injector.push_back(unit);
+            drop(st);
+            self.cv.notify_one();
+        }
+    }
+
+    fn poison(&self) {
+        Board::poison(self);
+    }
+}
+
+/// One scheduler worker: pull a unit (own → injector → steal), run one
+/// step, and route the outcome back to the board.  Steal/park/resume
+/// decisions are recorded as zero-virtual-time instants on this
+/// worker's sched lane — timing-dependent by nature, and exempt from
+/// the trace determinism contract (see [`crate::obs`]).
+pub(crate) fn run_worker(
+    w: usize,
+    board: &Board,
+    backend: Arc<dyn Backend>,
+    mut scope: TraceScope,
+) {
+    while let Some((mut unit, how)) = board.next_unit(w) {
+        match how {
+            Picked::Own => {}
+            Picked::Resumed => {
+                if unit.was_parked {
+                    unit.was_parked = false;
+                    scope.instant(0, "resume", 0.0, &[("task", unit.idx as f64)], &[]);
+                }
+            }
+            Picked::Stolen(victim) => {
+                scope.instant(
+                    0,
+                    "steal",
+                    0.0,
+                    &[("from", victim as f64), ("task", unit.idx as f64)],
+                    &[],
+                );
+            }
+        }
+        let idx = unit.idx as f64;
+        // A panicking step must not strand the session: convert it to a
+        // task failure and let the unit's Drop send the Finished marker.
+        let stepped = catch_unwind(AssertUnwindSafe(|| unit.step(&backend)));
+        match stepped {
+            Ok(Ok(StepResult::Done(out))) => {
+                drop(unit);
+                board.complete(*out);
+            }
+            Ok(Ok(StepResult::Blocked { want })) => {
+                if board.block(w, unit, want) {
+                    scope.instant(0, "park", 0.0, &[("task", idx), ("want", want as f64)], &[]);
+                }
+            }
+            Ok(Err(e)) => {
+                drop(unit);
+                board.fail(e);
+            }
+            Err(_) => {
+                drop(unit);
+                board.fail(anyhow::anyhow!("task worker panicked"));
+            }
+        }
+    }
+}
+
+/// Self-scheduling execution of `n` independent jobs on up to `jobs`
+/// workers: an idle worker always takes the next unstarted job, the
+/// degenerate work-stealing schedule for coarse independent work
+/// (`moses tables` grid cells).  Results land by job index, so output
+/// order is deterministic whenever each job's output is.
+pub(crate) fn run_independent<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = jobs.max(1).min(n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().expect("grid result slot poisoned") = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().expect("grid result slot poisoned").expect("job ran"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_independent_preserves_index_order() {
+        for jobs in [1, 2, 5, 16] {
+            let out = run_independent(9, jobs, |i| i * i);
+            assert_eq!(out, (0..9).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn run_independent_actually_runs_concurrently_when_asked() {
+        // With 4 workers over 4 jobs that each wait on a shared
+        // barrier, completion is only possible if all run at once.
+        let barrier = std::sync::Barrier::new(4);
+        let out = run_independent(4, 4, |i| {
+            barrier.wait();
+            i + 1
+        });
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn run_independent_handles_empty_and_oversubscribed() {
+        let out: Vec<usize> = run_independent(0, 8, |i| i);
+        assert!(out.is_empty());
+        let out = run_independent(3, 64, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+}

@@ -45,11 +45,15 @@ pub struct Session {
     /// Total virtual search time (measurements + model queries/updates),
     /// summed over every task pipeline — the device bill.
     pub clock: VirtualClock,
-    /// Critical-path virtual seconds: with `--jobs N`, tasks tune in
-    /// concurrent waves, so the session *elapses* the per-wave maximum
-    /// while still *spending* the sum.  Equals `clock.seconds()` for
-    /// sequential (`--jobs 1`) sessions.
+    /// Critical-path virtual seconds: with `--jobs N`, tasks run
+    /// concurrently on the work-stealing scheduler, so the session
+    /// *elapses* the schedule makespan while still *spending* the sum.
+    /// Equals `clock.seconds()` for sequential (`--jobs 1`) sessions.
     pub wall_s: f64,
+    /// Reference wall time under the pre-scheduler wave accounting
+    /// (sum of per-wave maxima over the same task clocks); always
+    /// `>= wall_s`, and the gap is the work-stealing win.
+    pub wave_wall_s: f64,
     /// Tune-cache counter snapshot at session end (None when tuning
     /// without a cache).
     pub cache: Option<CacheStats>,
@@ -88,6 +92,12 @@ impl Session {
     /// with `--jobs` tasks tuning concurrently.
     pub fn wall_time_s(&self) -> f64 {
         self.wall_s
+    }
+
+    /// Wall time the same session would have cost under the old
+    /// wave-barrier schedule (every wave waits for its straggler).
+    pub fn wave_wall_time_s(&self) -> f64 {
+        self.wave_wall_s
     }
 
     /// Total on-device measurements.
@@ -143,6 +153,7 @@ mod tests {
             tasks: vec![mk_task(1e-3, 2e-3, 1), mk_task(2e-3, 6e-3, 2)],
             clock: VirtualClock::new(),
             wall_s: 0.0,
+            wave_wall_s: 0.0,
             cache: None,
         };
         assert!((s.total_best_latency_ms() - (1.0 + 4.0)).abs() < 1e-9);

@@ -80,17 +80,31 @@ impl VirtualClock {
 }
 
 /// Timing of a (possibly parallel) tuning session built from per-task
-/// clocks.  Tasks run in sequential *waves* of up to `--jobs` members:
-/// `cost` sums every member's virtual seconds (what the device bill
-/// sees), while `wall` charges each wave only its slowest member —
-/// wave members run concurrently, so the session's critical path is the
-/// sum over waves of the per-wave maximum.  With one task per wave
-/// (`--jobs 1`) wall and cost coincide, reproducing the sequential
-/// accounting.
+/// clocks.  `cost` sums every member's virtual seconds (what the device
+/// bill sees); `wall` is the critical path of the schedule the members
+/// actually ran under.  Two schedule models are supported:
+///
+/// * **Waves** (`add_wave`, the pre-scheduler accounting): tasks run in
+///   sequential waves of up to `--jobs` members, so the wall charge is
+///   the sum over waves of the per-wave maximum — every wave waits for
+///   its slowest straggler.
+/// * **Work stealing** (`from_schedule`): each task is placed on the
+///   least-loaded of `jobs` lanes in task order (first lane wins ties),
+///   and the wall charge is the makespan — the load of the fullest
+///   lane.  This list-schedule model is deterministic per
+///   `(tasks, jobs)` and never exceeds the wave accounting: when the
+///   `m`-th task of a wave is placed, at most `m - 1` lanes carry work
+///   from that wave, so some lane is still at or below the previous
+///   waves' bound and the greedy choice keeps every lane within
+///   `Σ per-wave max` (induction over waves).
+///
+/// With one lane (`--jobs 1`) both models degenerate to wall == cost,
+/// reproducing the sequential accounting.
 #[derive(Debug, Clone, Default)]
 pub struct SessionTiming {
     cost: VirtualClock,
     wall_s: f64,
+    wave_wall_s: f64,
 }
 
 impl SessionTiming {
@@ -106,6 +120,38 @@ impl SessionTiming {
             slowest = slowest.max(c.seconds());
         }
         self.wall_s += slowest;
+        self.wave_wall_s += slowest;
+    }
+
+    /// Build session timing from a work-stealing schedule: `members` are
+    /// the per-task clocks in task order.  Wall time is the greedy
+    /// least-loaded makespan over `jobs` lanes; the wave accounting over
+    /// the same members is retained as `wave_wall_s()` for comparison.
+    pub fn from_schedule(members: &[VirtualClock], jobs: usize) -> SessionTiming {
+        let jobs = jobs.max(1);
+        let mut cost = VirtualClock::new();
+        let mut lanes = vec![0.0f64; jobs];
+        for c in members {
+            cost.merge(c);
+            let mut least = 0usize;
+            for (i, load) in lanes.iter().enumerate() {
+                if *load < lanes[least] {
+                    least = i;
+                }
+            }
+            lanes[least] += c.seconds();
+        }
+        let wall_s = lanes.iter().fold(0.0f64, |a, &b| a.max(b));
+        SessionTiming { cost, wall_s, wave_wall_s: Self::wave_wall(members, jobs) }
+    }
+
+    /// Reference wall time under the wave model: chunk `members` into
+    /// consecutive waves of `jobs` and sum the per-wave maxima.
+    pub fn wave_wall(members: &[VirtualClock], jobs: usize) -> f64 {
+        members
+            .chunks(jobs.max(1))
+            .map(|w| w.iter().fold(0.0f64, |a, c| a.max(c.seconds())))
+            .sum()
     }
 
     /// Total virtual cost across all workers.
@@ -120,6 +166,12 @@ impl SessionTiming {
     /// Critical-path virtual seconds (`<= cost().seconds()`).
     pub fn wall_s(&self) -> f64 {
         self.wall_s
+    }
+
+    /// What the same members would have cost under the wave model
+    /// (`>= wall_s()`); kept so sessions can report the stealing win.
+    pub fn wave_wall_s(&self) -> f64 {
+        self.wave_wall_s
     }
 }
 
@@ -178,5 +230,58 @@ mod tests {
         seq.add_wave(&[mk(1.0)]);
         seq.add_wave(&[mk(2.0)]);
         assert!((seq.wall_s() - seq.cost().seconds()).abs() < 1e-12);
+        assert!((seq.wave_wall_s() - seq.wall_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_makespan_beats_waves_on_skew() {
+        let mk = |s: f64| {
+            let mut c = VirtualClock::new();
+            c.charge_measurement(s);
+            c
+        };
+        // One straggler per wave: waves pay 10 + 9 = 19, while the
+        // least-loaded schedule packs the small tasks behind each other.
+        let members = [mk(10.0), mk(1.0), mk(9.0), mk(1.0)];
+        let t = SessionTiming::from_schedule(&members, 2);
+        assert!((t.cost().seconds() - 21.0).abs() < 1e-12);
+        assert!((t.wave_wall_s() - 19.0).abs() < 1e-12);
+        // Lane A: 10 + 1 = 11; lane B: 1 + 9 = 10 → makespan 11.
+        assert!((t.wall_s() - 11.0).abs() < 1e-12);
+        assert!(t.wall_s() < t.wave_wall_s());
+    }
+
+    #[test]
+    fn schedule_with_one_lane_is_sequential() {
+        let mk = |s: f64| {
+            let mut c = VirtualClock::new();
+            c.charge_measurement(s);
+            c
+        };
+        let members = [mk(1.0), mk(2.0), mk(3.0)];
+        let t = SessionTiming::from_schedule(&members, 1);
+        assert!((t.wall_s() - t.cost().seconds()).abs() < 1e-12);
+        assert!((t.wave_wall_s() - t.cost().seconds()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_never_exceeds_wave_accounting() {
+        let mk = |s: f64| {
+            let mut c = VirtualClock::new();
+            c.charge_measurement(s);
+            c
+        };
+        let costs = [3.0, 7.0, 2.0, 11.0, 5.0, 1.0, 8.0, 4.0, 6.0];
+        let members: Vec<VirtualClock> = costs.iter().map(|&s| mk(s)).collect();
+        for jobs in 1..=5 {
+            let t = SessionTiming::from_schedule(&members, jobs);
+            assert!(
+                t.wall_s() <= t.wave_wall_s() + 1e-12,
+                "jobs={jobs}: makespan {} > wave wall {}",
+                t.wall_s(),
+                t.wave_wall_s()
+            );
+            assert!(t.wall_s() <= t.cost().seconds() + 1e-12);
+        }
     }
 }

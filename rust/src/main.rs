@@ -108,7 +108,12 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         .opt(
             "jobs",
             "1",
-            "concurrent task pipelines (deterministic per (seed, jobs); rust backend only)",
+            "work-stealing tuning workers (deterministic per (seed, tasks); rust backend only)",
+        )
+        .switch(
+            "fast-nondeterministic",
+            "drop per-task snapshot pinning at --jobs N: workers read the freshest \
+             model snapshot, trading bit-reproducibility for lower coordination",
         )
         .opt("pretrained", "", "checkpoint path (default: auto-pretrain+cache)")
         .opt(
@@ -179,6 +184,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         backend,
         nn_radius: if p.get_bool("no-nn") { None } else { Some(nn_radius) },
         jobs,
+        deterministic: !p.get_bool("fast-nondeterministic"),
         ..TuneConfig::default()
     };
     if backend == BackendKind::Rust {
@@ -257,9 +263,10 @@ fn cmd_tune(args: &[String]) -> Result<()> {
     );
     if jobs > 1 {
         println!(
-            "virtual search time: {:.1} s wall at --jobs {jobs} ({:.1} s device cost, \
-             {} measurements)",
+            "virtual search time: {:.1} s wall at --jobs {jobs} ({:.1} s under wave \
+             scheduling, {:.1} s device cost, {} measurements)",
             session.wall_time_s(),
+            session.wave_wall_time_s(),
             session.search_time_s(),
             session.total_measurements()
         );
@@ -361,6 +368,9 @@ fn cmd_trace(args: &[String]) -> Result<()> {
             );
             trace.per_task_table().print();
             trace.per_stage_table().print();
+            if let Some(t) = trace.sched_table() {
+                t.print();
+            }
             println!("virtual search time in spans: {:.1} s", trace.vt_total_s());
             if !trace.metrics.is_empty() {
                 let mut t = Table::new("Session counters", &["counter", "value"]);
@@ -646,6 +656,7 @@ fn cmd_tables(args: &[String]) -> Result<()> {
         .opt("trials-large", "192", "large-tier trials per task (paper: 20000/5000)")
         .opt("seed", "0", "RNG seed")
         .opt("backend", "auto", "cost-model backend (auto|xla|rust)")
+        .opt("jobs", "1", "parallel grid cells for the fig4/fig5 sweep")
         .opt("fig6-model", "mobilenet", "model for the ratio ablation")
         .opt("fig6-seeds", "0,1,2", "seeds for the ratio ablation")
         .opt("out", "", "also append markdown to this file");
@@ -654,11 +665,13 @@ fn cmd_tables(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let p = flags.parse(args)?;
+    let jobs = p.get_usize("jobs")?.max(1);
     let cfg = ExpConfig {
         backend: backend_kind(p.get("backend"))?,
         seed: p.get_u64("seed")?,
         trials_small: p.get_usize("trials-small")?,
         trials_large: p.get_usize("trials-large")?,
+        jobs,
         ..ExpConfig::default()
     };
     let exp = p.get("exp").to_string();
@@ -668,10 +681,12 @@ fn cmd_tables(args: &[String]) -> Result<()> {
     if exp == "fig4" || exp == "fig5" || exp == "all" {
         let targets = [presets::rtx_2060(), presets::jetson_tx2()];
         println!(
-            "running (target × model × strategy) grid at {} trials/task ...",
+            "running (target × model × strategy) grid at {} trials/task (--jobs {jobs}) ...",
             cfg.trials_small
         );
+        let g0 = std::time::Instant::now();
         let outs = experiments::run_grid(&cfg, cfg.trials_small, &targets)?;
+        println!("(grid finished in {:.1}s at --jobs {jobs})", g0.elapsed().as_secs_f64());
         let names: Vec<&str> = targets.iter().map(|t| t.name.as_str()).collect();
         if exp == "fig4" || exp == "all" {
             let t = experiments::fig4_table(&outs, &names);
@@ -701,7 +716,7 @@ fn cmd_tables(args: &[String]) -> Result<()> {
         t.print();
         rendered.push_str(&t.to_markdown());
     }
-    println!("(tables generated in {:.1}s)", t0.elapsed().as_secs_f64());
+    println!("(tables generated in {:.1}s at --jobs {jobs})", t0.elapsed().as_secs_f64());
 
     let out = p.get("out");
     if !out.is_empty() {

@@ -50,7 +50,10 @@ pub struct ExpConfig {
     /// geometry is fixed by the AOT artifacts).
     pub rust_pred_batch: usize,
     pub rust_train_batch: usize,
-    /// Concurrent task pipelines per tuning session (`--jobs`).
+    /// Self-scheduling workers over independent grid cells (`--jobs`):
+    /// [`run_grid`] fans whole (target, model, strategy) sessions out
+    /// across threads while each inner session stays sequential — the
+    /// parallelism budget is spent where there is no coupling at all.
     pub jobs: usize,
 }
 
@@ -174,7 +177,12 @@ pub fn run_session(
             format!("{model_name}/{}/{}/{trials}", target.name, strategy.name()).as_bytes(),
         ),
         backend: cfg.backend,
-        jobs: cfg.jobs,
+        // Grid parallelism lives at the cell level (`run_grid`): inner
+        // sessions stay sequential so per-cell results are identical
+        // whatever `cfg.jobs` says, and XLA-backed grids parallelize
+        // too (one engine per worker thread; `--jobs` inside a session
+        // would be rejected on that backend).
+        jobs: 1,
         rust_pred_batch: cfg.rust_pred_batch,
         rust_train_batch: cfg.rust_train_batch,
         ..TuneConfig::default()
@@ -220,27 +228,37 @@ pub struct Outcome {
 }
 
 /// Run the full (target × model × strategy) grid once.
+///
+/// Cells are fully independent sessions — each seeds itself from a hash
+/// of `(model, target, strategy, trials)` — so `cfg.jobs > 1` fans them
+/// out over self-scheduling worker threads
+/// ([`crate::coordinator::sched::run_independent`]): an idle worker
+/// always takes the next unstarted cell, and the outcome vector is in
+/// grid order regardless of which thread ran what.
 pub fn run_grid(cfg: &ExpConfig, trials: usize, targets: &[DeviceArch]) -> Result<Vec<Outcome>> {
     let pretrained = pretrained_source_checkpoint(cfg)?;
-    let mut out = Vec::new();
+    let mut cells = Vec::new();
     for target in targets {
         for model in EVAL_MODELS {
             for strategy in eval_strategies() {
-                let session =
-                    run_session(cfg, &pretrained, model, target, strategy.clone(), trials)?;
-                out.push(Outcome {
-                    target: target.name.clone(),
-                    model: model.to_string(),
-                    strategy: strategy.name().to_string(),
-                    latency_ms: session.total_best_latency_ms(),
-                    search_time_s: session.search_time_s(),
-                    measurements: session.total_measurements(),
-                    raw_latency_ms: session.total_default_latency_ms(),
-                });
+                cells.push((target, model, strategy));
             }
         }
     }
-    Ok(out)
+    let outcomes = crate::coordinator::sched::run_independent(cells.len(), cfg.jobs, |i| {
+        let (target, model, strategy) = &cells[i];
+        let session = run_session(cfg, &pretrained, model, target, strategy.clone(), trials)?;
+        Ok(Outcome {
+            target: target.name.clone(),
+            model: model.to_string(),
+            strategy: strategy.name().to_string(),
+            latency_ms: session.total_best_latency_ms(),
+            search_time_s: session.search_time_s(),
+            measurements: session.total_measurements(),
+            raw_latency_ms: session.total_default_latency_ms(),
+        })
+    });
+    outcomes.into_iter().collect()
 }
 
 fn find<'a>(outs: &'a [Outcome], target: &str, model: &str, strategy: &str) -> &'a Outcome {

@@ -25,6 +25,17 @@
 //! emitter plus a `(lane, seq)` sort at drain time — there is no global
 //! event counter to race on.
 //!
+//! One exemption: the work-stealing scheduler's `sched:{worker}` lanes
+//! ([`Lane::Sched`]) are diagnostic *as a whole*.  Which unit a worker
+//! steals, when it parks, and when it resumes are decisions of the real
+//! thread schedule, so their steal/park/resume instants vary run to run
+//! by design.  They carry zero virtual duration (they can never perturb
+//! the vt reconcile property) and consumers that check the determinism
+//! contract must drop `sched:` lanes wholesale, as the `obs_trace`
+//! integration tests do.  Everything the scheduler *computes* — task
+//! results, snapshot pins, learn order — stays on the contract-bound
+//! task and learner lanes.
+//!
 //! # Granularity
 //!
 //! Stages trace as spans; high-frequency cache lookups and commits are

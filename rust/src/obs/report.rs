@@ -265,6 +265,42 @@ impl Trace {
         t.row(vec!["total".to_string(), format!("{total:.3}"), share(total)]);
         t
     }
+
+    /// Scheduler decisions per work-stealing worker (steal / park /
+    /// resume instants on the `sched:{worker}` lanes).  Returns `None`
+    /// for traces without scheduler traffic — sequential sessions, or
+    /// parallel ones where every worker stayed busy on its own deque —
+    /// so `moses trace report` stays unchanged for them.
+    pub fn sched_table(&self) -> Option<Table> {
+        let mut workers: BTreeMap<usize, (u64, u64, u64)> = BTreeMap::new();
+        for e in &self.events {
+            if let Lane::Sched(w) = e.lane {
+                let c = workers.entry(w).or_insert((0, 0, 0));
+                match e.name.as_str() {
+                    "steal" => c.0 += 1,
+                    "park" => c.1 += 1,
+                    "resume" => c.2 += 1,
+                    _ => {}
+                }
+            }
+        }
+        if workers.is_empty() {
+            return None;
+        }
+        let mut t = Table::new(
+            "Work-stealing scheduler (events per worker)",
+            &["worker", "steals", "parks", "resumes"],
+        );
+        for (w, (steals, parks, resumes)) in &workers {
+            t.row(vec![
+                w.to_string(),
+                steals.to_string(),
+                parks.to_string(),
+                resumes.to_string(),
+            ]);
+        }
+        Some(t)
+    }
 }
 
 #[cfg(test)]
@@ -344,5 +380,27 @@ mod tests {
         assert!(task_md.contains("warm") && task_md.contains("1.000"));
         let stage_md = trace.per_stage_table().to_markdown();
         assert!(stage_md.contains("round (other)") && stage_md.contains("total"));
+    }
+
+    #[test]
+    fn sched_table_counts_worker_decisions_or_stays_absent() {
+        // Without sched lanes the report is unchanged.
+        assert!(sample().sched_table().is_none());
+
+        let mut trace = sample();
+        trace.events.extend([
+            ev(Lane::Sched(0), 0, 0, "steal", (0.0, 0.0)),
+            ev(Lane::Sched(0), 1, 0, "resume", (0.0, 0.0)),
+            ev(Lane::Sched(1), 0, 0, "park", (0.0, 0.0)),
+            ev(Lane::Sched(1), 1, 0, "park", (0.0, 0.0)),
+        ]);
+        let md = trace.sched_table().expect("sched lanes present").to_markdown();
+        assert!(md.contains("steals"));
+        // Worker 0: 1 steal, 0 parks, 1 resume; worker 1: 0/2/0.
+        let squeezed: String = md.split_whitespace().collect::<Vec<_>>().join(" ");
+        assert!(squeezed.contains("| 0 | 1 | 0 | 1 |"), "unexpected table: {md}");
+        assert!(squeezed.contains("| 1 | 0 | 2 | 0 |"), "unexpected table: {md}");
+        // Zero-vt instants never perturb the reconciliation total.
+        assert!((trace.vt_total_s() - 3.0).abs() < 1e-12);
     }
 }

@@ -22,8 +22,8 @@ use crate::obs::recorder::Recorder;
 use crate::util::json::Json;
 
 /// The actor a trace event belongs to.  Lanes order `Session < Learner
-/// < Cache < Task(0) < Task(1) < …` — the stable sort key of a drained
-/// trace.
+/// < Cache < Task(0) < Task(1) < … < Sched(0) < Sched(1) < …` — the
+/// stable sort key of a drained trace.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Lane {
     /// The session driver (CLI / tuner).
@@ -34,6 +34,11 @@ pub enum Lane {
     Cache,
     /// One task pipeline, by its stable task ordinal.
     Task(usize),
+    /// One work-stealing scheduler worker, by worker index.  EXEMPT from
+    /// the determinism contract: which worker runs, steals, or parks a
+    /// task is thread-timing, so steal/park/resume event counts and
+    /// payloads vary across reruns (they are diagnostics, like `diag`).
+    Sched(usize),
 }
 
 impl Lane {
@@ -44,6 +49,7 @@ impl Lane {
             Lane::Learner => "learner".to_string(),
             Lane::Cache => "cache".to_string(),
             Lane::Task(ord) => format!("task:{ord}"),
+            Lane::Sched(w) => format!("sched:{w}"),
         }
     }
 
@@ -54,6 +60,9 @@ impl Lane {
             "learner" => Some(Lane::Learner),
             "cache" => Some(Lane::Cache),
             _ => {
+                if let Some(w) = s.strip_prefix("sched:") {
+                    return Some(Lane::Sched(w.parse().ok()?));
+                }
                 let ord = s.strip_prefix("task:")?.parse().ok()?;
                 Some(Lane::Task(ord))
             }
@@ -271,20 +280,43 @@ mod tests {
 
     #[test]
     fn lane_encoding_roundtrips() {
-        for lane in [Lane::Session, Lane::Learner, Lane::Cache, Lane::Task(0), Lane::Task(17)] {
+        for lane in [
+            Lane::Session,
+            Lane::Learner,
+            Lane::Cache,
+            Lane::Task(0),
+            Lane::Task(17),
+            Lane::Sched(0),
+            Lane::Sched(3),
+        ] {
             assert_eq!(Lane::decode(&lane.encode()), Some(lane));
         }
         assert_eq!(Lane::decode("task:x"), None);
+        assert_eq!(Lane::decode("sched:x"), None);
         assert_eq!(Lane::decode("nope"), None);
     }
 
     #[test]
     fn lanes_order_session_learner_cache_tasks() {
-        let mut lanes = vec![Lane::Task(1), Lane::Cache, Lane::Task(0), Lane::Session, Lane::Learner];
+        let mut lanes = vec![
+            Lane::Sched(0),
+            Lane::Task(1),
+            Lane::Cache,
+            Lane::Task(0),
+            Lane::Session,
+            Lane::Learner,
+        ];
         lanes.sort();
         assert_eq!(
             lanes,
-            vec![Lane::Session, Lane::Learner, Lane::Cache, Lane::Task(0), Lane::Task(1)]
+            vec![
+                Lane::Session,
+                Lane::Learner,
+                Lane::Cache,
+                Lane::Task(0),
+                Lane::Task(1),
+                Lane::Sched(0)
+            ]
         );
     }
 

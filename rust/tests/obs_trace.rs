@@ -1,9 +1,10 @@
 //! Observability-plane integration: a traced session round-trips
 //! through the JSONL trace format, span nesting matches the pipeline's
 //! stage order, event content is deterministic per `(seed, jobs)`
-//! (scheduling-dependent readings live in `diag` only), a disabled
-//! recorder emits nothing and perturbs nothing, and the stage spans'
-//! virtual time reconciles with `Session::search_time_s()`.
+//! (scheduling-dependent readings live in `diag`, and the work-stealing
+//! `sched:{worker}` lanes are exempt wholesale), a disabled recorder
+//! emits nothing and perturbs nothing, and the stage spans' virtual
+//! time reconciles with `Session::search_time_s()`.
 
 use std::sync::Arc;
 
@@ -104,10 +105,15 @@ fn fingerprint(s: &Session) -> Vec<u64> {
 }
 
 /// Strip the scheduling-dependent payload; everything left must be a
-/// pure function of `(seed, jobs, tasks)`.
+/// pure function of `(seed, jobs, tasks)`. Two pieces are exempt from
+/// the contract: per-event `diag` readings (wall-clock timings), and
+/// the `sched:{worker}` lanes as a whole — which unit a worker steals
+/// or when it parks is real thread scheduling, so those lanes are
+/// diagnostic by definition.
 fn deterministic_view(events: &[TraceEvent]) -> Vec<TraceEvent> {
     events
         .iter()
+        .filter(|e| !matches!(e.lane, Lane::Sched(_)))
         .map(|e| TraceEvent { diag: Vec::new(), ..e.clone() })
         .collect()
 }
