@@ -6,13 +6,13 @@
 
 use std::sync::Arc;
 
-use moses::coordinator::{AutoTuner, BackendKind, SnapshotCell, TuneConfig};
+use moses::coordinator::{AutoTuner, BackendKind, ModelSnapshot, SnapshotCell, TuneConfig};
 use moses::costmodel::{layout, CostModel, Mask, RustBackend, XlaBackend};
 use moses::device::{presets, DeviceSim};
 use moses::obs::{Lane, Recorder, TraceScope};
 use moses::program::{featurize, SpaceGenerator, Subgraph, SubgraphKind, TensorProgram};
 use moses::runtime::Engine;
-use moses::search::{EvolutionarySearch, SearchPolicy};
+use moses::search::{DraftGate, DraftState, EvolutionarySearch, SearchPolicy};
 use moses::transfer::Strategy;
 use moses::tunecache::{TuneCache, TuneRecord, TuneStore, WorkloadIndex, WorkloadKey, RECORD_VERSION};
 use moses::util::bench::Bencher;
@@ -100,8 +100,48 @@ fn main() {
     evo.generations = 3;
     let rust_view = rust_model.predictor();
     b.run("evolutionary_propose_8of64x3", || {
-        evo.propose(8, &rust_view, &|_| false, &mut rng, &mut || {})
+        evo.propose(8, &rust_view, &|_| false, &mut rng, None, &mut || {})
     });
+
+    // --- draft-then-verify propose (the speculative search tier) ----------
+    // Equal population/generations, draft off vs on (keep = 0.2): the
+    // draft ranks every fresh schedule with one 164-d dot product and
+    // the full model verifies only the top fraction.  Hard gate: the
+    // draft must cut full-model rows per propose round by >= 3x.
+    let mut draft_evo = EvolutionarySearch::with_params(sub.clone(), 128, 3);
+    let draft_pool = gen.sample_distinct(&mut rng, 128);
+    let mut dx = Vec::with_capacity(draft_pool.len() * 164);
+    for s in &draft_pool {
+        dx.extend_from_slice(&featurize(&sub, s));
+    }
+    let dy = rust_model.predict(&dx, draft_pool.len()).expect("draft labels");
+    let prior = rust_view.feature_projection();
+    let draft = DraftState::fit(&dx, &dy, draft_pool.len(), Some(&prior), 1);
+    assert!(!draft.is_passthrough(), "bench draft distillation must fit");
+    b.run("propose_draft_off", || {
+        draft_evo.propose(8, &rust_view, &|_| false, &mut rng, None, &mut || {})
+    });
+    let off_rows = draft_evo.last_draft_stats().full_rows;
+    let draft_gate = DraftGate { state: &draft, keep: 0.2 };
+    b.run("propose_draft_on", || {
+        draft_evo.propose(8, &rust_view, &|_| false, &mut rng, Some(&draft_gate), &mut || {})
+    });
+    let on_stats = draft_evo.last_draft_stats();
+    assert!(
+        on_stats.full_rows * 3 <= off_rows,
+        "gate: draft must cut full-model rows >= 3x per round (draft {} vs full {})",
+        on_stats.full_rows,
+        off_rows
+    );
+    println!(
+        "bench propose_draft                  {} full-model rows/round with draft vs {} \
+         without ({:.1}x fewer; {} drafted, {} pruned)",
+        on_stats.full_rows,
+        off_rows,
+        off_rows as f64 / on_stats.full_rows.max(1) as f64,
+        on_stats.draft_scored,
+        on_stats.pruned
+    );
 
     // --- snapshot publish/pin (the zero-copy prediction plane) ------------
     // One learner publish followed by 4 worker pins + view construction,
@@ -110,17 +150,17 @@ fn main() {
     // parameter count (contrast with the per-round deep copy this
     // replaced, which scaled with N_PARAMS).
     let publish_state = rust_model.shared_state();
-    let snap_cell = SnapshotCell::new(publish_state.clone());
+    let snap_cell = SnapshotCell::new(ModelSnapshot::from_model(publish_state.clone()));
     let snap_backend = Arc::new(RustBackend { pred_batch: 64, train_batch: 64 });
     let mut snap_version = 0u64;
     b.run("snapshot_publish_pin_jobs4", || {
         snap_version += 1;
-        snap_cell.publish(snap_version, publish_state.clone());
+        snap_cell.publish(snap_version, ModelSnapshot::from_model(publish_state.clone()));
         for _ in 0..4 {
             let pinned = snap_cell.wait_for(snap_version).expect("live cell");
             std::hint::black_box(moses::costmodel::Predictor::new(
                 snap_backend.clone(),
-                pinned,
+                pinned.model,
             ));
         }
     });

@@ -17,8 +17,10 @@
 //!   total order `(seq, task_ord)` lexicographic — sweep-major,
 //!   ascending task ordinal — independent of arrival order
 //!   (out-of-order messages wait in a stash), and after each apply it
-//!   hands that task's post-apply `Arc<ModelState>` to the
-//!   [`SnapshotSink`] — an O(1) pointer swap, never a parameter copy.
+//!   hands that task's post-apply [`ModelSnapshot`] — the model state
+//!   plus, when the speculative draft tier is on, the draft scorer
+//!   distilled from it — to the [`SnapshotSink`]: an O(1) pointer
+//!   swap, never a parameter copy.
 //!   A task's round-`r + 1` proposal pins exactly the snapshot its own
 //!   round-`r` batch produced, so results are a pure function of
 //!   `(seed, tasks)` no matter which worker runs which step.  With
@@ -40,6 +42,7 @@ use crate::costmodel::{layout, CostModel, Mask, ModelState, Predictor};
 use crate::device::VirtualClock;
 use crate::obs::TraceScope;
 use crate::program::N_FEATURES;
+use crate::search::draft::{DraftState, MAX_FIT_ROWS, MIN_FIT_ROWS};
 use crate::transfer::MosesAdapter;
 use crate::util::rng::Rng;
 
@@ -77,6 +80,9 @@ pub(crate) struct LearnerConfig {
     pub lr: f32,
     pub epochs_per_round: usize,
     pub replay_cap: usize,
+    /// Distill and publish a draft scorer with every model snapshot
+    /// (the speculative draft-then-verify search tier).
+    pub draft: bool,
 }
 
 /// The stateful learning plane for one tuner (continual across `tune`
@@ -95,6 +101,13 @@ pub(crate) struct Learner {
     /// The learning plane's trace emitter (not part of
     /// [`LearnerState`]: a scope is bound to one session's recorder).
     scope: TraceScope,
+    /// Bumped on every replay push; together with the model version it
+    /// keys the draft-distillation memo below.
+    replay_stamp: u64,
+    /// Memoized draft refresh: `(model version, replay stamp)` → the
+    /// draft distilled at that point.  Snapshot publishes between
+    /// learning events reuse the `Arc` instead of re-fitting.
+    draft_cache: Option<(u64, u64, Arc<DraftState>)>,
 }
 
 /// Everything but the backend handle — `Send`, so a learner can be
@@ -120,6 +133,8 @@ impl Learner {
             task_clocks: Vec::new(),
             full_mask: Mask::all_ones(layout::N_PARAMS),
             scope: TraceScope::disabled(),
+            replay_stamp: 0,
+            draft_cache: None,
         }
     }
 
@@ -137,6 +152,8 @@ impl Learner {
             task_clocks: state.task_clocks,
             full_mask: Mask::all_ones(layout::N_PARAMS),
             scope: TraceScope::disabled(),
+            replay_stamp: 0,
+            draft_cache: None,
         }
     }
 
@@ -185,6 +202,57 @@ impl Learner {
         self.model.shared_state()
     }
 
+    /// The current `(model, draft)` publication pair.  With the draft
+    /// tier off this is just the model handle (O(1)); with it on, the
+    /// draft is lazily re-distilled — memoized on `(model version,
+    /// replay stamp)`, so repeat publishes between learning events are
+    /// `Arc` clones.  Refreshing here, at exactly the points the model
+    /// snapshot is taken, is what keeps draft refresh on the same
+    /// `(seq, ord)`-ordered schedule as model publish and the
+    /// `(seed, jobs)` determinism contract intact.
+    pub fn snapshot(&mut self) -> ModelSnapshot {
+        let draft = if self.cfg.draft { Some(self.draft_state()) } else { None };
+        ModelSnapshot { model: self.model.shared_state(), draft }
+    }
+
+    /// The current draft scorer (see [`Learner::snapshot`] for the
+    /// refresh discipline).  Inline-mode drivers call this directly.
+    pub fn draft_state(&mut self) -> Arc<DraftState> {
+        let key = (self.model.shared_state().version(), self.replay_stamp);
+        if let Some((v, s, d)) = &self.draft_cache {
+            if (*v, *s) == key {
+                return d.clone();
+            }
+        }
+        let draft = Arc::new(self.distill_draft(key.0));
+        self.draft_cache = Some((key.0, key.1, draft.clone()));
+        draft
+    }
+
+    /// Distill a linear draft from the full model's own scores on the
+    /// most recent replay rows (capped at [`MAX_FIT_ROWS`]), shrunk
+    /// toward the MLP's first-layer feature projection.  Too little
+    /// data or a diverged model yields a passthrough draft — the
+    /// search plane then verifies everything, it never mis-prunes.
+    fn distill_draft(&self, version: u64) -> DraftState {
+        let n = self.replay.len().min(MAX_FIT_ROWS);
+        if n < MIN_FIT_ROWS {
+            return DraftState::passthrough(version);
+        }
+        let start = self.replay.len() - n;
+        let mut x = Vec::with_capacity(n * N_FEATURES);
+        for s in &self.replay[start..] {
+            x.extend_from_slice(&s.feats);
+        }
+        let predictor = self.model.predictor();
+        let y = match predictor.predict(&x, n) {
+            Ok(y) => y,
+            Err(_) => return DraftState::passthrough(version),
+        };
+        let prior = predictor.feature_projection();
+        DraftState::fit(&x, &y, n, Some(&prior), version)
+    }
+
     /// A read-only prediction view pinned to the CURRENT model state
     /// (O(1)).  Inline-mode drivers take a fresh view per stage so
     /// predictions track the live model exactly as the sequential loop
@@ -208,6 +276,7 @@ impl Learner {
             let drop = self.replay.len() - self.cfg.replay_cap;
             self.replay.drain(..drop);
         }
+        self.replay_stamp += 1;
     }
 
     /// Rebuild training arrays from the replay buffer with labels
@@ -309,14 +378,40 @@ impl Learner {
 // Actor mode: snapshot cell + message protocol + deterministic loop.
 // ---------------------------------------------------------------------
 
+/// One paired publication of the learning plane: the full model state
+/// plus — when the draft tier is on — the draft scorer distilled from
+/// it at the same `(seq, ord)`-ordered publish point.  Cloning is two
+/// `Arc` bumps; workers pin the pair atomically so a round never mixes
+/// a round-`r` model with a round-`r'` draft.
+#[derive(Clone)]
+pub struct ModelSnapshot {
+    /// The full cost-model state.
+    pub model: Arc<ModelState>,
+    /// The draft scorer distilled from `model` (`None` when the draft
+    /// tier is off).
+    pub draft: Option<Arc<DraftState>>,
+}
+
+impl ModelSnapshot {
+    /// A draft-less snapshot (how pre-draft callers publish).
+    pub fn from_model(model: Arc<ModelState>) -> ModelSnapshot {
+        ModelSnapshot { model, draft: None }
+    }
+
+    /// Version of the pinned model state.
+    pub fn version(&self) -> u64 {
+        self.model.version()
+    }
+}
+
 struct SnapState {
     version: u64,
-    model: Arc<ModelState>,
+    snap: ModelSnapshot,
     poisoned: bool,
 }
 
 /// Versioned read-snapshot of the learner's model state.  The learner
-/// publishes an `Arc<ModelState>` after every round sweep — an O(1)
+/// publishes a [`ModelSnapshot`] after every round sweep — an O(1)
 /// pointer swap regardless of parameter count; workers block until the
 /// version covering all batches their next prediction must observe,
 /// then pin the snapshot with another pointer clone.  This is the
@@ -328,19 +423,19 @@ pub struct SnapshotCell {
 }
 
 impl SnapshotCell {
-    /// A cell primed with version 0 holding `model`.
-    pub fn new(model: Arc<ModelState>) -> SnapshotCell {
+    /// A cell primed with version 0 holding `snap`.
+    pub fn new(snap: ModelSnapshot) -> SnapshotCell {
         SnapshotCell {
-            state: Mutex::new(SnapState { version: 0, model, poisoned: false }),
+            state: Mutex::new(SnapState { version: 0, snap, poisoned: false }),
             cv: Condvar::new(),
         }
     }
 
-    /// Publish `model` as snapshot `version` and wake every waiter.
-    pub fn publish(&self, version: u64, model: Arc<ModelState>) {
+    /// Publish `snap` as snapshot `version` and wake every waiter.
+    pub fn publish(&self, version: u64, snap: ModelSnapshot) {
         let mut st = self.state.lock().expect("snapshot cell poisoned");
         st.version = version;
-        st.model = model;
+        st.snap = snap;
         drop(st);
         self.cv.notify_all();
     }
@@ -354,9 +449,9 @@ impl SnapshotCell {
     }
 
     /// Block until the published version reaches `v`, then pin that
-    /// snapshot (an `Arc` clone).  `None` means the learner failed and
-    /// no further snapshot will ever arrive.
-    pub fn wait_for(&self, v: u64) -> Option<Arc<ModelState>> {
+    /// snapshot (two `Arc` clones).  `None` means the learner failed
+    /// and no further snapshot will ever arrive.
+    pub fn wait_for(&self, v: u64) -> Option<ModelSnapshot> {
         let mut st = self.state.lock().expect("snapshot cell poisoned");
         while st.version < v && !st.poisoned {
             st = self.cv.wait(st).expect("snapshot cell poisoned");
@@ -364,7 +459,7 @@ impl SnapshotCell {
         if st.poisoned {
             None
         } else {
-            Some(st.model.clone())
+            Some(st.snap.clone())
         }
     }
 }
@@ -385,9 +480,9 @@ pub(crate) enum ToLearner {
 /// in fast mode the board only tracks the newest snapshot.
 pub(crate) trait SnapshotSink: Sync {
     /// `task_ord`'s batch number `applied` (1-based count of that
-    /// task's absorbed batches) was just applied; `model` is the state
-    /// immediately after.
-    fn publish(&self, task_ord: usize, applied: u64, model: Arc<ModelState>);
+    /// task's absorbed batches) was just applied; `snap` is the
+    /// `(model, draft)` pair immediately after.
+    fn publish(&self, task_ord: usize, applied: u64, snap: ModelSnapshot);
     /// The learner died: wake every waiter with failure.
     fn poison(&self);
 }
@@ -443,7 +538,8 @@ pub(crate) fn run_learner_actor(
                     version += 1;
                     let applied = counts.entry(ord).or_insert(0);
                     *applied += 1;
-                    sink.publish(ord, *applied, learner.snapshot_state());
+                    let snap = learner.snapshot();
+                    sink.publish(ord, *applied, snap);
                     learner.trace_publish(version, 0);
                 }
                 Ok(ToLearner::Finished { .. }) => remaining -= 1,
@@ -479,7 +575,8 @@ pub(crate) fn run_learner_actor(
                     return Err(e);
                 }
                 version += 1;
-                sink.publish(ord, seq as u64 + 1, learner.snapshot_state());
+                let snap = learner.snapshot();
+                sink.publish(ord, seq as u64 + 1, snap);
                 learner.trace_publish(version, pending.len());
                 survivors.push(ord);
             }
@@ -499,7 +596,7 @@ mod tests {
         let backend = Arc::new(RustBackend { pred_batch: 8, train_batch: 8 });
         let model = CostModel::new(backend, &mut Rng::new(1));
         Learner::new(
-            LearnerConfig { lr: 1e-3, epochs_per_round: 1, replay_cap: 4 },
+            LearnerConfig { lr: 1e-3, epochs_per_round: 1, replay_cap: 4, draft: false },
             model,
             None,
         )
@@ -507,6 +604,15 @@ mod tests {
 
     fn sample(ord: usize, gflops: f64) -> Sample {
         Sample { task_ord: ord, feats: [0.1; N_FEATURES], gflops }
+    }
+
+    fn varied_sample(ord: usize, i: u64, gflops: f64) -> Sample {
+        let mut rng = Rng::new(100 + i);
+        let mut feats = [0.0f32; N_FEATURES];
+        for f in feats.iter_mut() {
+            *f = rng.normal() as f32;
+        }
+        Sample { task_ord: ord, feats, gflops }
     }
 
     #[test]
@@ -555,16 +661,16 @@ mod tests {
         assert_eq!(l.task_clock(0).model_updates(), 0);
     }
 
-    fn state_of(v: f32) -> Arc<ModelState> {
-        Arc::new(ModelState::from_params(vec![v; layout::N_PARAMS]))
+    fn state_of(v: f32) -> ModelSnapshot {
+        ModelSnapshot::from_model(Arc::new(ModelState::from_params(vec![v; layout::N_PARAMS])))
     }
 
     #[test]
     fn snapshot_cell_versions_and_poison() {
         let cell = Arc::new(SnapshotCell::new(state_of(1.0)));
-        assert_eq!(cell.wait_for(0).unwrap().params()[0], 1.0);
+        assert_eq!(cell.wait_for(0).unwrap().model.params()[0], 1.0);
         let c2 = cell.clone();
-        let h = std::thread::spawn(move || c2.wait_for(2).map(|p| p.params()[0]));
+        let h = std::thread::spawn(move || c2.wait_for(2).map(|p| p.model.params()[0]));
         cell.publish(1, state_of(2.0));
         cell.publish(2, state_of(3.0));
         assert_eq!(h.join().unwrap(), Some(3.0));
@@ -582,12 +688,47 @@ mod tests {
         // published storage exactly.
         let a = cell.wait_for(0).unwrap();
         let b = cell.wait_for(0).unwrap();
-        assert!(Arc::ptr_eq(&a, &published) && Arc::ptr_eq(&b, &published));
+        assert!(Arc::ptr_eq(&a.model, &published.model));
+        assert!(Arc::ptr_eq(&b.model, &published.model));
         cell.publish(1, state_of(2.0));
         let c = cell.wait_for(1).unwrap();
-        assert!(!Arc::ptr_eq(&c, &published));
+        assert!(!Arc::ptr_eq(&c.model, &published.model));
         // The earlier pin still reads the old parameters.
-        assert_eq!(a.params()[0], 1.0);
+        assert_eq!(a.model.params()[0], 1.0);
+    }
+
+    #[test]
+    fn snapshot_has_no_draft_when_the_tier_is_off() {
+        let mut l = learner();
+        assert!(l.snapshot().draft.is_none());
+    }
+
+    #[test]
+    fn draft_publishes_with_snapshots_and_memoizes() {
+        let backend = Arc::new(RustBackend { pred_batch: 8, train_batch: 8 });
+        let model = CostModel::new(backend, &mut Rng::new(1));
+        let mut l = Learner::new(
+            LearnerConfig { lr: 1e-3, epochs_per_round: 1, replay_cap: 64, draft: true },
+            model,
+            None,
+        );
+        // No data yet: the published draft is a passthrough, but it IS
+        // published alongside the model.
+        let d0 = l.snapshot().draft.unwrap();
+        assert!(d0.is_passthrough());
+        // Same (version, replay) point → the same Arc, not a refit.
+        assert!(Arc::ptr_eq(&l.snapshot().draft.unwrap(), &d0));
+        // Enough replay to fit: the refresh produces a live draft
+        // stamped with the model version it was distilled from.
+        let mut rng = Rng::new(2);
+        let samples: Vec<Sample> =
+            (0..16).map(|i| varied_sample(0, i, 1.0 + i as f64)).collect();
+        l.absorb(LearnBatch { task_ord: 0, seq: 0, samples, train: None }, &mut rng).unwrap();
+        let snap = l.snapshot();
+        let d1 = snap.draft.unwrap();
+        assert!(!Arc::ptr_eq(&d1, &d0), "replay growth must refresh the draft");
+        assert!(!d1.is_passthrough());
+        assert_eq!(d1.version(), snap.model.version());
     }
 
     /// Records every publish so tests can assert the apply order.
@@ -603,7 +744,7 @@ mod tests {
     }
 
     impl SnapshotSink for RecordingSink {
-        fn publish(&self, task_ord: usize, applied: u64, _model: Arc<ModelState>) {
+        fn publish(&self, task_ord: usize, applied: u64, _snap: ModelSnapshot) {
             self.published.lock().unwrap().push((task_ord, applied));
         }
         fn poison(&self) {
@@ -684,7 +825,7 @@ mod tests {
         let state = l.into_state();
         let backend = Arc::new(RustBackend { pred_batch: 8, train_batch: 8 });
         let l2 = Learner::from_state(
-            LearnerConfig { lr: 1e-3, epochs_per_round: 1, replay_cap: 4 },
+            LearnerConfig { lr: 1e-3, epochs_per_round: 1, replay_cap: 4, draft: false },
             backend,
             state,
         );

@@ -19,13 +19,14 @@
 //! four layers: `pipeline` (per-task stages: warm-start → propose →
 //! measure → learn-batch emission → finalize), `learner` (the shared
 //! learning plane: cost model, replay buffer, Moses adapter, publishing
-//! [`crate::costmodel::ModelState`] snapshots — per task slot to the
-//! work-stealing board in scheduled sessions, or through the
-//! [`SnapshotCell`] primitive directly), `sched` (the work-stealing
-//! execution plane: tasks as stealable resumable units on per-worker
-//! deques, steal-on-idle, park/resume on snapshot availability), and
-//! `tuner` (the driver — sequential inline at `--jobs 1`, the
-//! always-saturated scheduler pinning read-only
+//! [`ModelSnapshot`]s — a [`crate::costmodel::ModelState`] plus, with
+//! the draft tier on, the [`crate::search::DraftState`] distilled from
+//! it — per task slot to the work-stealing board in scheduled sessions,
+//! or through the [`SnapshotCell`] primitive directly), `sched` (the
+//! work-stealing execution plane: tasks as stealable resumable units on
+//! per-worker deques, steal-on-idle, park/resume on snapshot
+//! availability), and `tuner` (the driver — sequential inline at
+//! `--jobs 1`, the always-saturated scheduler pinning read-only
 //! [`crate::costmodel::Predictor`] views at `--jobs N`).  Sessions are
 //! configured through [`AutoTuner::builder`], which validates knob
 //! combinations at build time and serializes to [`TuneConfig`].
@@ -36,6 +37,6 @@ pub(crate) mod sched;
 mod session;
 mod tuner;
 
-pub use learner::SnapshotCell;
+pub use learner::{ModelSnapshot, SnapshotCell};
 pub use session::{Session, TaskResult};
 pub use tuner::{AutoTuner, AutoTunerBuilder, BackendKind, TuneConfig};

@@ -16,7 +16,9 @@
 //!   [`LearnBatch`].
 //! * **propose + measure** ([`TaskPipeline::run_round`]) asks the search
 //!   engine for candidates scored against a read-only [`Predictor`]
-//!   view pinned to a model snapshot,
+//!   view pinned to a model snapshot — optionally pre-pruned by the
+//!   cheap draft scorer pinned alongside it (see
+//!   [`crate::search::draft`]) —
 //!   measures them (or, on AC-terminated rounds, only the predicted
 //!   top), and emits the round's `LearnBatch`.
 //! * **learn** happens on the learning plane ([`super::learner`]) — the
@@ -40,9 +42,10 @@ use super::session::TaskResult;
 use super::tuner::TuneConfig;
 use crate::costmodel::Predictor;
 use crate::device::{DeviceSim, VirtualClock};
+use crate::metrics::search::DraftCounters;
 use crate::obs::{SpanTimer, TraceScope};
 use crate::program::{featurize, Geometry, Schedule, Subgraph, TensorProgram, N_FEATURES};
-use crate::search::{EvolutionarySearch, RandomSearch, SearchPolicy};
+use crate::search::{DraftGate, DraftState, EvolutionarySearch, RandomSearch, SearchPolicy};
 use crate::transfer::{AdaptiveController, Strategy};
 use crate::tunecache::{warmstart, TuneCache, TuneRecord, WorkloadKey};
 use crate::util::rng::Rng;
@@ -122,6 +125,9 @@ pub(crate) struct TaskPipeline {
     /// This task's trace emitter (disabled scopes reduce every span to
     /// one branch).
     scope: TraceScope,
+    /// Session-wide draft kept/pruned counters (shared across pipelines
+    /// when the draft tier is on).
+    draft_counters: Option<DraftCounters>,
 }
 
 impl TaskPipeline {
@@ -181,6 +187,7 @@ impl TaskPipeline {
             defer_commits: false,
             deferred_commits: Vec::new(),
             scope,
+            draft_counters: None,
         }
     }
 
@@ -188,6 +195,12 @@ impl TaskPipeline {
     /// scheduler lands them in task order once the session is done).
     pub fn defer_cache_commits(&mut self) {
         self.defer_commits = true;
+    }
+
+    /// Attach the session's shared draft kept/pruned counters (present
+    /// only when the draft tier is on).
+    pub fn set_draft_counters(&mut self, counters: DraftCounters) {
+        self.draft_counters = Some(counters);
     }
 
     /// The records finalize stashed under
@@ -386,16 +399,26 @@ impl TaskPipeline {
     /// `LearnBatch`, or `Exhausted` once the budget is spent or the
     /// schedule space ran dry.
     ///
+    /// When `draft` is `Some`, the evolutionary engine scores each
+    /// generation with the cheap linear draft first and asks the full
+    /// `model` to verify only the top `draft_keep` fraction
+    /// (speculative draft-then-verify); `None` reproduces the
+    /// full-verification path bit for bit.
+    ///
     /// Every call — including the terminal `Exhausted` one — records a
     /// "round" span: the exhausted path still charges the virtual clock
     /// (a trailing AC observation), and stage spans must cover every
     /// charge for the trace's virtual time to reconcile with the
     /// session total.
-    pub fn run_round(&mut self, model: &Predictor) -> Result<StageOutput> {
+    pub fn run_round(
+        &mut self,
+        model: &Predictor,
+        draft: Option<&DraftState>,
+    ) -> Result<StageOutput> {
         let timer = self.scope.begin(self.clock.seconds());
         let round = self.round;
         let measured_before = self.measured;
-        let out = self.run_round_inner(model);
+        let out = self.run_round_inner(model, draft);
         if self.scope.enabled() {
             let exhausted = matches!(out, Ok(StageOutput::Exhausted));
             self.scope.end(
@@ -414,7 +437,11 @@ impl TaskPipeline {
         out
     }
 
-    fn run_round_inner(&mut self, model: &Predictor) -> Result<StageOutput> {
+    fn run_round_inner(
+        &mut self,
+        model: &Predictor,
+        draft: Option<&DraftState>,
+    ) -> Result<StageOutput> {
         // The AC watches post-update prediction stability on the last
         // measured batch; the learner's update for it is visible in
         // `model` by the time this stage runs.
@@ -423,7 +450,10 @@ impl TaskPipeline {
             return Ok(StageOutput::Exhausted);
         }
         let round = self.round;
-        let propose_timer = self.scope.begin(self.clock.seconds());
+        let gate = draft.map(|state| DraftGate { state, keep: self.cfg.draft_keep });
+        let propose_vt = self.clock.seconds();
+        let propose_timer = self.scope.begin(propose_vt);
+        let verify_timer = self.scope.begin(propose_vt);
         let candidates = {
             let task = &self.task;
             let seen_fps = &self.seen_fps;
@@ -436,6 +466,7 @@ impl TaskPipeline {
                     model,
                     &seen,
                     &mut self.rng,
+                    gate.as_ref(),
                     &mut charge,
                 ),
                 _ => self.evo.propose(
@@ -443,10 +474,44 @@ impl TaskPipeline {
                     model,
                     &seen,
                     &mut self.rng,
+                    gate.as_ref(),
                     &mut charge,
                 ),
             }
         };
+        // The draft/verify split nests (depth 2) inside "propose": a
+        // zero-duration "draft" instant with the generation-summed
+        // kept/pruned counts, then a "verify" span covering the full
+        // predictor's share of the propose interval.  Draft-off traces
+        // stay byte-identical — neither event is emitted.
+        if gate.is_some() && !matches!(self.cfg.strategy, Strategy::RandomSearch) {
+            let stats = self.evo.last_draft_stats();
+            if let Some(c) = &self.draft_counters {
+                c.record_generation(stats.kept, stats.pruned);
+            }
+            if self.scope.enabled() {
+                self.scope.instant(
+                    2,
+                    "draft",
+                    propose_vt,
+                    &[
+                        ("kept", stats.kept as f64),
+                        ("pruned", stats.pruned as f64),
+                        ("round", round as f64),
+                        ("scored", stats.draft_scored as f64),
+                    ],
+                    &[],
+                );
+                self.scope.end(
+                    verify_timer,
+                    2,
+                    "verify",
+                    self.clock.seconds(),
+                    &[("round", round as f64), ("rows", stats.full_rows as f64)],
+                    &[],
+                );
+            }
+        }
         self.scope.end(
             propose_timer,
             1,
@@ -687,7 +752,7 @@ mod tests {
     use super::*;
     use crate::costmodel::{CostModel, RustBackend};
     use crate::device::presets;
-    use crate::obs::{Lane, Recorder};
+    use crate::obs::{Lane, Recorder, TraceEvent};
     use crate::program::SubgraphKind;
 
     fn cfg() -> TuneConfig {
@@ -735,7 +800,7 @@ mod tests {
         }
         let mut batches = 0;
         loop {
-            match pipe.run_round(&m).unwrap() {
+            match pipe.run_round(&m, None).unwrap() {
                 StageOutput::Learn(b) => {
                     assert_eq!(b.seq as usize, batches + 1);
                     batches += 1;
@@ -771,7 +836,7 @@ mod tests {
         );
         let m = model();
         pipe.warm_start().unwrap();
-        while !matches!(pipe.run_round(&m).unwrap(), StageOutput::Exhausted) {}
+        while !matches!(pipe.run_round(&m, None).unwrap(), StageOutput::Exhausted) {}
         pipe.finalize(&m).unwrap();
 
         let evs = rec.drain();
@@ -784,9 +849,63 @@ mod tests {
         for (i, e) in evs.iter().enumerate() {
             assert_eq!(e.seq, i as u64);
         }
+        // Draft-off sessions emit no depth-2 draft/verify detail at all.
+        assert!(evs.iter().all(|e| e.depth < 2));
         // Every virtual-clock charge happened inside a stage span.
         let vt_sum: f64 = evs.iter().filter(|e| e.depth == 0).map(|e| e.vt_dur_s).sum();
         assert!((vt_sum - pipe.clock().seconds()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traced_draft_rounds_nest_draft_and_verify_inside_propose() {
+        let task = Subgraph::new("pp.dense3", SubgraphKind::Dense { m: 64, n: 128, k: 256 });
+        let c = cfg();
+        let rec = Recorder::enabled();
+        let mut pipe = TaskPipeline::new(
+            task,
+            0,
+            &c,
+            DeviceSim::new(presets::rtx_2060()),
+            None,
+            Rng::new(5),
+            rec.scope(Lane::Task(0), "pp.dense3"),
+        );
+        let counters = DraftCounters::default();
+        pipe.set_draft_counters(counters.clone());
+        let m = model();
+        // A passthrough draft exercises the span plumbing without
+        // needing a fitted scorer: everything still verifies.
+        let d = DraftState::passthrough(0);
+        pipe.warm_start().unwrap();
+        while !matches!(pipe.run_round(&m, Some(&d)).unwrap(), StageOutput::Exhausted) {}
+        pipe.finalize(&m).unwrap();
+
+        let evs = rec.drain();
+        let proposes: Vec<&TraceEvent> =
+            evs.iter().filter(|e| e.depth == 1 && e.name == "propose").collect();
+        let drafts: Vec<&TraceEvent> =
+            evs.iter().filter(|e| e.depth == 2 && e.name == "draft").collect();
+        let verifies: Vec<&TraceEvent> =
+            evs.iter().filter(|e| e.depth == 2 && e.name == "verify").collect();
+        assert!(!proposes.is_empty());
+        assert_eq!(drafts.len(), proposes.len());
+        assert_eq!(verifies.len(), proposes.len());
+        for ((d, v), p) in drafts.iter().zip(&verifies).zip(&proposes) {
+            // The instant sits at propose start; verify covers the
+            // propose interval; lane order is draft < verify < propose.
+            assert_eq!(d.vt_dur_s, 0.0);
+            assert_eq!(d.vt_start_s, p.vt_start_s);
+            assert_eq!(v.vt_start_s, p.vt_start_s);
+            assert!((v.vt_dur_s - p.vt_dur_s).abs() < 1e-12);
+            assert!(d.seq < v.seq && v.seq < p.seq);
+        }
+        // Depth-0 stage spans still cover the whole virtual clock —
+        // nested detail never double-bills it.
+        let vt_sum: f64 = evs.iter().filter(|e| e.depth == 0).map(|e| e.vt_dur_s).sum();
+        assert!((vt_sum - pipe.clock().seconds()).abs() < 1e-9);
+        // Passthrough drafts verify everything, so nothing was pruned.
+        assert_eq!(counters.kept(), 0);
+        assert_eq!(counters.pruned(), 0);
     }
 
     #[test]

@@ -39,10 +39,10 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
-use super::learner::{SnapshotSink, ToLearner};
+use super::learner::{ModelSnapshot, SnapshotSink, ToLearner};
 use super::pipeline::{StageOutput, TaskPipeline};
 use super::session::TaskResult;
-use crate::costmodel::{Backend, ModelState, Predictor};
+use crate::costmodel::{Backend, Predictor};
 use crate::device::VirtualClock;
 use crate::obs::{SpanTimer, TraceScope};
 use crate::tunecache::TuneRecord;
@@ -84,8 +84,9 @@ pub(crate) struct TaskUnit {
     sent: u32,
     finished_sent: bool,
     started: bool,
-    /// Snapshot supplied by the scheduler before a resumed step.
-    pinned: Option<Arc<ModelState>>,
+    /// Snapshot supplied by the scheduler before a resumed step (the
+    /// `(model, draft)` pair is pinned atomically).
+    pinned: Option<ModelSnapshot>,
     /// Open pin span covering the park wait (wall time lands in diag).
     pin_timer: Option<SpanTimer>,
     was_parked: bool,
@@ -157,8 +158,9 @@ impl TaskUnit {
         if let Some(timer) = self.pin_timer.take() {
             self.pipe.trace_pin(timer, self.sent as u64, model_version);
         }
-        let view = Predictor::new(backend.clone(), snapshot);
-        match self.pipe.run_round(&view)? {
+        let view = Predictor::new(backend.clone(), snapshot.model);
+        let draft = snapshot.draft;
+        match self.pipe.run_round(&view, draft.as_deref())? {
             StageOutput::Learn(batch) => {
                 self.send_batch(batch);
                 self.pin_timer = Some(self.pipe.pin_timer());
@@ -207,11 +209,11 @@ struct BoardState {
     /// Parked units by local task index, with the applied-batch count
     /// each is waiting for.
     parked: Vec<Option<(u64, TaskUnit)>>,
-    /// Per-task `(applied batches, post-apply model)` snapshot slots.
-    slots: Vec<(u64, Arc<ModelState>)>,
-    /// Fast mode: the newest published model, whatever task it came
+    /// Per-task `(applied batches, post-apply snapshot)` slots.
+    slots: Vec<(u64, ModelSnapshot)>,
+    /// Fast mode: the newest published snapshot, whatever task it came
     /// from.
-    latest: Arc<ModelState>,
+    latest: ModelSnapshot,
     results: Vec<Option<UnitOutput>>,
     first_err: Option<anyhow::Error>,
     /// Units neither completed nor failed yet.
@@ -235,7 +237,7 @@ impl Board {
         ord_base: usize,
         jobs: usize,
         deterministic: bool,
-        init: Arc<ModelState>,
+        init: ModelSnapshot,
         units: Vec<TaskUnit>,
     ) -> Board {
         let n = units.len();
@@ -384,14 +386,14 @@ impl Board {
 }
 
 impl SnapshotSink for Board {
-    fn publish(&self, task_ord: usize, applied: u64, model: Arc<ModelState>) {
+    fn publish(&self, task_ord: usize, applied: u64, snap: ModelSnapshot) {
         let mut st = self.st.lock().expect("scheduler board poisoned");
         if !self.deterministic {
-            st.latest = model;
+            st.latest = snap;
             return;
         }
         let idx = task_ord - self.ord_base;
-        st.slots[idx] = (applied, model);
+        st.slots[idx] = (applied, snap);
         let ready = matches!(&st.parked[idx], Some((want, _)) if *want <= applied);
         if ready {
             let (_, mut unit) = st.parked[idx].take().expect("parked unit present");

@@ -35,12 +35,15 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::learner::{run_learner_actor, Learner, LearnerConfig, LearnerState, ToLearner};
+use super::learner::{
+    run_learner_actor, Learner, LearnerConfig, LearnerState, ModelSnapshot, ToLearner,
+};
 use super::pipeline::{StageOutput, TaskPipeline};
 use super::sched::{self, Board, TaskUnit};
 use super::session::{Session, TaskResult};
 use crate::costmodel::{layout, Backend, CostModel, RustBackend, XlaBackend};
 use crate::device::{DeviceArch, DeviceSim, SessionTiming};
+use crate::metrics::search::DraftCounters;
 use crate::obs::{Lane, Recorder};
 use crate::program::Subgraph;
 use crate::runtime::Engine;
@@ -123,6 +126,16 @@ pub struct TuneConfig {
     /// fixed by the AOT artifacts).
     pub rust_pred_batch: usize,
     pub rust_train_batch: usize,
+    /// Speculative draft-then-verify search: the learner distills a
+    /// cheap linear draft scorer from the live cost model and publishes
+    /// it alongside each snapshot; the evolutionary engine lets the
+    /// draft prune each generation and asks the full predictor to
+    /// verify only the survivors.  Requires the rust backend.
+    pub draft: bool,
+    /// Fraction of each draft-scored generation the full predictor
+    /// verifies (`0 < keep <= 1`; `1.0` reproduces `draft: false` bit
+    /// for bit).
+    pub draft_keep: f64,
 }
 
 impl Default for TuneConfig {
@@ -149,6 +162,8 @@ impl Default for TuneConfig {
             deterministic: true,
             rust_pred_batch: 512,
             rust_train_batch: 256,
+            draft: false,
+            draft_keep: 0.2,
         }
     }
 }
@@ -159,6 +174,7 @@ impl TuneConfig {
             lr: self.lr,
             epochs_per_round: self.epochs_per_round,
             replay_cap: self.replay_cap,
+            draft: self.draft,
         }
     }
 }
@@ -287,6 +303,23 @@ impl AutoTunerBuilder {
         self
     }
 
+    /// Enable the speculative draft-then-verify search tier: a cheap
+    /// linear draft scorer (distilled from the live cost model) prunes
+    /// each evolutionary generation before the full predictor ranks the
+    /// survivors.  Requires the rust backend — validated at build time.
+    pub fn draft(mut self, on: bool) -> Self {
+        self.cfg.draft = on;
+        self
+    }
+
+    /// Fraction of each draft-scored generation the full predictor
+    /// verifies (`0 < keep <= 1` — validated at build time; `1.0` is
+    /// bit-identical to draft off).
+    pub fn draft_keep(mut self, keep: f64) -> Self {
+        self.cfg.draft_keep = keep;
+        self
+    }
+
     /// Use an externally-constructed cost model (tests, checkpoints
     /// already in memory) instead of initializing one per the strategy.
     pub fn model(mut self, model: CostModel) -> Self {
@@ -338,6 +371,16 @@ impl AutoTunerBuilder {
         anyhow::ensure!(
             cfg.rust_pred_batch >= 1 && cfg.rust_train_batch >= 1,
             "rust backend batch geometry must be non-zero"
+        );
+        anyhow::ensure!(
+            cfg.draft_keep.is_finite() && cfg.draft_keep > 0.0 && cfg.draft_keep <= 1.0,
+            "draft_keep must be in (0, 1] (got {})",
+            cfg.draft_keep
+        );
+        anyhow::ensure!(
+            !cfg.draft || cfg.backend == BackendKind::Rust,
+            "--draft requires the rust cost-model backend: the draft scorer distills \
+             from the in-memory parameter vector"
         );
 
         let mut rng = Rng::new(cfg.seed);
@@ -452,6 +495,20 @@ impl AutoTuner {
         }
     }
 
+    /// Fresh per-session draft kept/pruned counters (`None` with the
+    /// draft tier off), adopted into the session recorder's metrics
+    /// registry so traced sessions fold them into the trace footer.
+    fn draft_counters(&self) -> Option<DraftCounters> {
+        if !self.config.draft {
+            return None;
+        }
+        let counters = DraftCounters::default();
+        if let Some(m) = self.recorder.metrics() {
+            m.adopt(counters.registry());
+        }
+        Some(counters)
+    }
+
     fn session(&self, tasks: Vec<TaskResult>, timing: SessionTiming) -> Session {
         Session {
             device: self.sim.arch.name.clone(),
@@ -468,6 +525,8 @@ impl AutoTuner {
     /// absorbing synchronously, every stage predicting through a fresh
     /// view of the live model.
     fn tune_inline(&mut self, tasks: &[Subgraph]) -> Result<Session> {
+        let draft_counters = self.draft_counters();
+        let use_draft = self.config.draft;
         let learner = self.learner.as_mut().expect("learner state present");
         learner.reset_task_clocks();
         learner.set_scope(self.recorder.scope(Lane::Learner, "learner"));
@@ -485,6 +544,9 @@ impl AutoTuner {
                 trng,
                 self.recorder.scope(Lane::Task(ord_base + i), &task.name),
             );
+            if let Some(c) = &draft_counters {
+                pipe.set_draft_counters(c.clone());
+            }
             let result = match pipe.warm_start()? {
                 StageOutput::Complete(r) => *r,
                 StageOutput::Learn(batch) => {
@@ -492,8 +554,12 @@ impl AutoTuner {
                     loop {
                         // A fresh O(1) view per round: inline predictions
                         // track the live model exactly as the sequential
-                        // loop did.
-                        match pipe.run_round(&learner.predictor())? {
+                        // loop did.  The draft (when on) re-distills at
+                        // the same points the model view refreshes, so
+                        // the pair stays as consistent as a published
+                        // snapshot's.
+                        let draft = if use_draft { Some(learner.draft_state()) } else { None };
+                        match pipe.run_round(&learner.predictor(), draft.as_deref())? {
                             StageOutput::Learn(b) => learner.absorb(b, pipe.rng_mut())?,
                             StageOutput::Exhausted => break,
                             StageOutput::Complete(_) => unreachable!("rounds never complete"),
@@ -535,8 +601,12 @@ impl AutoTuner {
         let n_tasks = tasks.len();
 
         let (tx, rx) = mpsc::channel::<ToLearner>();
-        // Slot 0 of every task: the pre-session state, shared by pointer.
-        let init = Arc::new(state.model.clone());
+        // Slot 0 of every task: the pre-session state, shared by
+        // pointer.  Its draft is None — before any batch is absorbed
+        // there is nothing to distill from, so round 0 verifies
+        // everything (exactly what a passthrough draft would do).
+        let init = ModelSnapshot::from_model(Arc::new(state.model.clone()));
+        let draft_counters = self.draft_counters();
         let mut units = Vec::with_capacity(n_tasks);
         for (i, task) in tasks.iter().enumerate() {
             let mut pipe = TaskPipeline::new(
@@ -550,6 +620,9 @@ impl AutoTuner {
             );
             if self.cache.is_some() {
                 pipe.defer_cache_commits();
+            }
+            if let Some(c) = &draft_counters {
+                pipe.set_draft_counters(c.clone());
             }
             units.push(TaskUnit::new(i, ord_base + i, pipe, tx.clone()));
         }
@@ -862,5 +935,41 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("rust cost-model backend"), "{err}");
+    }
+
+    #[test]
+    fn builder_refuses_draft_on_the_xla_backend() {
+        let err = AutoTuner::builder(presets::rtx_2060())
+            .strategy(Strategy::RandomSearch)
+            .backend(BackendKind::Xla)
+            .draft(true)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("rust cost-model backend"), "{err}");
+    }
+
+    #[test]
+    fn builder_refuses_out_of_range_draft_keep() {
+        for bad in [0.0, -0.25, 1.5, f64::NAN, f64::INFINITY] {
+            let err = AutoTuner::builder(presets::rtx_2060())
+                .draft_keep(bad)
+                .build()
+                .unwrap_err();
+            assert!(err.to_string().contains("draft_keep"), "{bad}: {err}");
+        }
+        // The boundary keep == 1.0 is legal (bit-identical to draft off).
+        AutoTuner::builder(presets::rtx_2060()).draft(true).draft_keep(1.0).build().unwrap();
+    }
+
+    #[test]
+    fn draft_sessions_produce_valid_results() {
+        let mut cfg = small_cfg(Strategy::Moses(transfer::MosesConfig::default()));
+        cfg.draft = true;
+        cfg.draft_keep = 0.25;
+        let mut tuner = AutoTuner::builder(presets::rtx_2060()).config(&cfg).build().unwrap();
+        let s = tuner.tune(&tiny_tasks()).unwrap();
+        assert_eq!(s.tasks.len(), 2);
+        assert!(s.speedup() >= 1.0);
+        assert!(s.total_measurements() > 0);
     }
 }

@@ -335,6 +335,42 @@ impl Predictor {
         Ok(scores)
     }
 
+    /// The pinned MLP's end-to-end linear feature projection: collapse
+    /// `w1 · (w2 · w3)` into one 164-float vector, i.e. the network's
+    /// exact input→score map if both ReLUs were identity.
+    ///
+    /// This is what the draft tier (`search::draft`) distills against:
+    /// it tells the linear draft how strongly — and with what sign —
+    /// the live model reads each feature, keeping the draft derived
+    /// from the model rather than a static heuristic (TLP, PAPERS.md).
+    /// O(HIDDEN² + N_FEATURES·HIDDEN) ≈ one forward pass of a single
+    /// row; deterministic for a given pinned state.
+    pub fn feature_projection(&self) -> Vec<f32> {
+        let v = layout::view(self.params());
+        let h = layout::HIDDEN;
+        // u = w2 · w3  (w2 is [HIDDEN x HIDDEN] row-major).
+        let mut u = vec![0.0f32; h];
+        for (i, ui) in u.iter_mut().enumerate() {
+            let w2row = &v.w2[i * h..(i + 1) * h];
+            let mut acc = 0.0f32;
+            for (a, b) in w2row.iter().zip(v.w3) {
+                acc += a * b;
+            }
+            *ui = acc;
+        }
+        // proj = w1 · u  (w1 is [N_FEATURES x HIDDEN] row-major).
+        let mut proj = vec![0.0f32; layout::N_FEATURES];
+        for (i, pi) in proj.iter_mut().enumerate() {
+            let w1row = &v.w1[i * h..(i + 1) * h];
+            let mut acc = 0.0f32;
+            for (a, b) in w1row.iter().zip(&u) {
+                acc += a * b;
+            }
+            *pi = acc;
+        }
+        proj
+    }
+
     /// ξ saliency on up to `train_batch` labeled rows.
     pub fn xi(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
         let (px, py, pw) = pad_train(self.backend.as_ref(), x, y);
@@ -641,6 +677,38 @@ mod tests {
         // Publish/pin is a pointer copy: no parameter duplication.
         assert!(Arc::ptr_eq(a.state(), b.state()));
         assert!(Arc::ptr_eq(a.state(), &model.shared_state()));
+    }
+
+    #[test]
+    fn feature_projection_matches_a_linearized_network() {
+        // Build a state whose ReLUs are provably inactive-free: make
+        // every weight non-negative and feed non-negative features, so
+        // the network IS linear and predict must equal proj · x + bias
+        // terms.  Simplest exact check: projection of a one-hot feature
+        // equals the score delta it induces on a zero baseline when no
+        // ReLU clips — use abs weights to guarantee that.
+        let mut rng = Rng::new(9);
+        let mut params = layout::init_params(&mut rng);
+        for p in params.iter_mut() {
+            *p = p.abs();
+        }
+        let model = CostModel::with_params(tiny_backend(), params);
+        let pred = model.predictor();
+        let proj = pred.feature_projection();
+        assert_eq!(proj.len(), layout::N_FEATURES);
+        assert!(proj.iter().all(|v| v.is_finite()));
+        // With all-non-negative weights and zero biases the net is
+        // exactly linear on non-negative inputs: score(e_i) - score(0)
+        // == proj[i].
+        let zero = vec![0.0f32; layout::N_FEATURES];
+        let base = pred.predict(&zero, 1).unwrap()[0];
+        for i in [0, 40, layout::N_FEATURES - 1] {
+            let mut x = vec![0.0f32; layout::N_FEATURES];
+            x[i] = 1.0;
+            let s = pred.predict(&x, 1).unwrap()[0];
+            let rel = (s - base - proj[i]).abs() / proj[i].abs().max(1e-6);
+            assert!(rel < 1e-3, "feature {i}: {} vs {}", s - base, proj[i]);
+        }
     }
 
     #[test]

@@ -115,6 +115,19 @@ fn cmd_tune(args: &[String]) -> Result<()> {
             "drop per-task snapshot pinning at --jobs N: workers read the freshest \
              model snapshot, trading bit-reproducibility for lower coordination",
         )
+        .switch(
+            "draft",
+            "speculative draft-then-verify search: a cheap linear scorer distilled \
+             from the live cost model prunes each generation before the full model \
+             ranks the survivors (rust backend only)",
+        )
+        .switch("no-draft", "force the draft tier off (overrides --draft)")
+        .opt(
+            "draft-keep",
+            "0.2",
+            "fraction of each draft-scored generation the full model verifies \
+             (0 < keep <= 1; 1.0 is bit-identical to draft off)",
+        )
         .opt("pretrained", "", "checkpoint path (default: auto-pretrain+cache)")
         .opt(
             "tune-cache",
@@ -185,6 +198,8 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         nn_radius: if p.get_bool("no-nn") { None } else { Some(nn_radius) },
         jobs,
         deterministic: !p.get_bool("fast-nondeterministic"),
+        draft: p.get_bool("draft") && !p.get_bool("no-draft"),
+        draft_keep: p.get_f64("draft-keep")?,
         ..TuneConfig::default()
     };
     if backend == BackendKind::Rust {
@@ -368,6 +383,9 @@ fn cmd_trace(args: &[String]) -> Result<()> {
             );
             trace.per_task_table().print();
             trace.per_stage_table().print();
+            if let Some(t) = trace.draft_table() {
+                t.print();
+            }
             if let Some(t) = trace.sched_table() {
                 t.print();
             }

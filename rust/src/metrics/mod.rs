@@ -1,9 +1,11 @@
 //! Evaluation metrics (paper §4.3): end-to-end latency/throughput,
-//! search-efficiency gain, the CMAT composite score, and tuning-cache
-//! hit/miss/seed counters ([`cache`]).
+//! search-efficiency gain, the CMAT composite score, tuning-cache
+//! hit/miss/seed counters ([`cache`]), and draft-tier prune counters
+//! ([`search`]).
 
 pub mod cache;
 pub mod experiments;
+pub mod search;
 
 /// CMAT — Cost Model & Auto-tuning efficiency gain score (paper §4.3):
 ///

@@ -1,0 +1,83 @@
+//! Draft-tier observability: kept/pruned counters for the speculative
+//! draft-then-verify search plane.
+//!
+//! The counters are named entries (`search.draft_kept`,
+//! `search.draft_pruned`) in a private [`MetricsRegistry`], mirroring
+//! [`crate::metrics::cache::CacheCounters`]: a traced session
+//! [`MetricsRegistry::adopt`]s them into the session-wide registry so
+//! `moses trace report` can show how much of each generation the draft
+//! scorer pruned before the full predictor ran.  The struct is `Clone`
+//! (counter storage is shared `Arc`s), so the tuner hands one handle to
+//! every task pipeline under `--jobs N` and all bumps land in the same
+//! counters.
+
+use crate::obs::{Counter, MetricsRegistry};
+
+/// Live counters owned by a tuning session's draft tier.
+#[derive(Clone, Debug)]
+pub struct DraftCounters {
+    registry: MetricsRegistry,
+    kept: Counter,
+    pruned: Counter,
+}
+
+impl Default for DraftCounters {
+    fn default() -> DraftCounters {
+        let registry = MetricsRegistry::default();
+        DraftCounters {
+            kept: registry.counter("search.draft_kept"),
+            pruned: registry.counter("search.draft_pruned"),
+            registry,
+        }
+    }
+}
+
+impl DraftCounters {
+    /// The registry holding these counters under their `search.*` names
+    /// — adopt it into a session registry to surface them in traces.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// One draft-scored generation: `kept` rows went on to the full
+    /// predictor, `pruned` rows were dropped on the draft score alone.
+    pub fn record_generation(&self, kept: u64, pruned: u64) {
+        self.kept.add(kept);
+        self.pruned.add(pruned);
+    }
+
+    /// Total schedules the full predictor verified after draft scoring.
+    pub fn kept(&self) -> u64 {
+        self.kept.get()
+    }
+
+    /// Total schedules pruned on the draft score alone.
+    pub fn pruned(&self) -> u64 {
+        self.pruned.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_across_generations() {
+        let c = DraftCounters::default();
+        c.record_generation(7, 25);
+        c.record_generation(3, 13);
+        assert_eq!(c.kept(), 10);
+        assert_eq!(c.pruned(), 38);
+    }
+
+    #[test]
+    fn clones_share_storage_and_surface_through_registry() {
+        let c = DraftCounters::default();
+        let clone = c.clone();
+        clone.record_generation(4, 12);
+        let snap = c.registry().snapshot();
+        assert_eq!(snap.get("search.draft_kept"), Some(&4));
+        assert_eq!(snap.get("search.draft_pruned"), Some(&12));
+        assert_eq!(snap.len(), 2);
+    }
+}

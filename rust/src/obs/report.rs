@@ -266,6 +266,52 @@ impl Trace {
         t
     }
 
+    /// Draft-tier split per task: how many schedules the draft scorer
+    /// ranked, how many it kept/pruned, and how many rows the full
+    /// predictor actually verified (summed from the depth-2
+    /// `draft`/`verify` events nested inside propose spans).  Returns
+    /// `None` for traces without draft events — draft-off sessions —
+    /// so `moses trace report` stays unchanged for them.
+    pub fn draft_table(&self) -> Option<Table> {
+        let mut tasks: BTreeMap<usize, (f64, f64, f64, f64)> = BTreeMap::new();
+        for e in &self.events {
+            let Lane::Task(ord) = &e.lane else { continue };
+            if e.depth != 2 {
+                continue;
+            }
+            let arg = |k: &str| {
+                e.args.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(0.0)
+            };
+            let c = tasks.entry(*ord).or_insert((0.0, 0.0, 0.0, 0.0));
+            match e.name.as_str() {
+                "draft" => {
+                    c.0 += arg("scored");
+                    c.1 += arg("kept");
+                    c.2 += arg("pruned");
+                }
+                "verify" => c.3 += arg("rows"),
+                _ => {}
+            }
+        }
+        if tasks.is_empty() {
+            return None;
+        }
+        let mut t = Table::new(
+            "Draft-then-verify split (schedules per task)",
+            &["task", "draft_scored", "kept", "pruned", "full_rows"],
+        );
+        for (ord, (scored, kept, pruned, rows)) in &tasks {
+            t.row(vec![
+                ord.to_string(),
+                format!("{scored:.0}"),
+                format!("{kept:.0}"),
+                format!("{pruned:.0}"),
+                format!("{rows:.0}"),
+            ]);
+        }
+        Some(t)
+    }
+
     /// Scheduler decisions per work-stealing worker (steal / park /
     /// resume instants on the `sched:{worker}` lanes).  Returns `None`
     /// for traces without scheduler traffic — sequential sessions, or
@@ -380,6 +426,46 @@ mod tests {
         assert!(task_md.contains("warm") && task_md.contains("1.000"));
         let stage_md = trace.per_stage_table().to_markdown();
         assert!(stage_md.contains("round (other)") && stage_md.contains("total"));
+    }
+
+    #[test]
+    fn draft_table_sums_the_split_or_stays_absent() {
+        // Draft-off traces carry no depth-2 events: the report is
+        // unchanged.
+        assert!(sample().draft_table().is_none());
+
+        let mut trace = sample();
+        let with_args = |mut e: TraceEvent, args: Vec<(&str, f64)>| {
+            e.args = args.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+            e
+        };
+        trace.events = vec![
+            ev(Lane::Task(0), 0, 0, "warm_start", (0.0, 1.0)),
+            with_args(
+                ev(Lane::Task(0), 1, 2, "draft", (1.0, 0.0)),
+                vec![("kept", 7.0), ("pruned", 25.0), ("round", 0.0), ("scored", 32.0)],
+            ),
+            with_args(
+                ev(Lane::Task(0), 2, 2, "verify", (1.0, 0.25)),
+                vec![("round", 0.0), ("rows", 39.0)],
+            ),
+            ev(Lane::Task(0), 3, 1, "propose", (1.0, 0.25)),
+            with_args(
+                ev(Lane::Task(0), 4, 2, "draft", (1.25, 0.0)),
+                vec![("kept", 7.0), ("pruned", 25.0), ("round", 1.0), ("scored", 32.0)],
+            ),
+            with_args(
+                ev(Lane::Task(0), 5, 2, "verify", (1.25, 0.25)),
+                vec![("round", 1.0), ("rows", 7.0)],
+            ),
+            ev(Lane::Task(0), 6, 1, "propose", (1.25, 0.25)),
+        ];
+        let md = trace.draft_table().expect("draft events present").to_markdown();
+        let squeezed: String = md.split_whitespace().collect::<Vec<_>>().join(" ");
+        // Task 0: 64 draft-scored, 14 kept, 50 pruned, 46 verified.
+        assert!(squeezed.contains("| 0 | 64 | 14 | 50 | 46 |"), "unexpected table: {md}");
+        // Depth-2 detail never perturbs the vt reconciliation total.
+        assert!((trace.vt_total_s() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -85,7 +85,9 @@ pub struct TraceEvent {
     /// emitter's [`TraceScope`].
     pub seq: u64,
     /// 0 = stage-level (these sum to the session's virtual search
-    /// time), 1 = nested detail (propose/measure inside a round, pins).
+    /// time), 1 = nested detail (propose/measure inside a round, pins),
+    /// 2 = the draft/verify split inside a propose (draft-tier
+    /// sessions only).
     pub depth: u8,
     pub name: String,
     /// Human label for the lane (task name), repeated per event so a

@@ -2,8 +2,15 @@
 //! paper §2.2): maintain a population, score it with `C()`, evolve by
 //! tournament selection + crossover + mutation, return the predicted
 //! top-k for on-device measurement.
+//!
+//! Scoring is speculative when a [`DraftGate`] is armed: the distilled
+//! draft ranks every fresh candidate for free and only the top
+//! `keep` fraction is verified by the full [`Predictor`] (Pruner's
+//! draft-then-verify, PAPERS.md).  Elite rows carry their feature rows
+//! *and* their verified scores across generations, so each generation
+//! only featurizes and scores its fresh offspring.
 
-use super::SearchPolicy;
+use super::{DraftGate, DraftStats, SearchPolicy};
 use crate::costmodel::Predictor;
 use crate::program::{featurize, Schedule, SpaceGenerator, Subgraph, N_FEATURES};
 use crate::util::rng::Rng;
@@ -22,9 +29,17 @@ pub struct EvolutionarySearch {
     pub elite_frac: f64,
     /// Measured good schedules seeding the next population.
     seeds: Vec<Schedule>,
-    /// Scratch: feature matrix buffer reused across rounds (perf:
-    /// avoids re-allocating ~population × 164 floats every generation).
+    /// Scratch: feature matrix of the CURRENT population, row-aligned
+    /// with it (reused across generations and rounds — never
+    /// re-allocated, and elite rows are never re-featurized).
     feat_buf: Vec<f32>,
+    /// Scratch: next generation's feature matrix, swapped with
+    /// `feat_buf` once the generation is assembled.
+    carry_buf: Vec<f32>,
+    /// Scratch: gathered shortlist features for the verify batch.
+    gather_buf: Vec<f32>,
+    /// Two-tier scoring accounting for the most recent propose call.
+    last_stats: DraftStats,
 }
 
 impl EvolutionarySearch {
@@ -39,6 +54,9 @@ impl EvolutionarySearch {
             elite_frac: 0.125,
             seeds: Vec::new(),
             feat_buf: Vec::new(),
+            carry_buf: Vec::new(),
+            gather_buf: Vec::new(),
+            last_stats: DraftStats::default(),
         }
     }
 
@@ -65,29 +83,99 @@ impl EvolutionarySearch {
         }
     }
 
-    /// Score a set of schedules with the cost model.  Non-finite
-    /// predictions (a diverging model can emit NaN/inf) are mapped to a
-    /// sentinel-worst score so ranking stays total and panic-free.
-    fn score(
+    /// Draft/verify accounting for the most recent
+    /// [`propose`](SearchPolicy::propose) call.  `full_rows` is counted
+    /// with the draft tier on or off, so the speculative-search bench
+    /// gate can compare full-Predictor work across the two modes.
+    pub fn last_draft_stats(&self) -> DraftStats {
+        self.last_stats
+    }
+
+    /// Score rows `carried..n` of the current population — whose
+    /// feature matrix sits row-aligned in `self.feat_buf` — appending
+    /// onto `scores` (which already holds the `carried` carried-over
+    /// elite scores).
+    ///
+    /// With a draft gate armed, the draft tier ranks the fresh rows
+    /// first (zero virtual-time cost) and only the top `keep` fraction
+    /// is verified by the full model; pruned rows get the
+    /// sentinel-worst score.  Draft scores pass through the same
+    /// non-finite → sentinel mapping as full predictions, so a
+    /// diverging draft fit can neither panic the ranking nor promote
+    /// garbage into the shortlist.  Exactly one `charge_query` is
+    /// issued per call with fresh rows, draft or not — which is what
+    /// keeps `keep = 1.0` (and draft-off) bitwise identical to the
+    /// pre-draft engine.
+    fn score_fresh(
         &mut self,
-        pop: &[Schedule],
+        n: usize,
+        carried: usize,
+        scores: &mut Vec<f32>,
         model: &Predictor,
+        draft: Option<&DraftGate<'_>>,
         charge_query: &mut dyn FnMut(),
-    ) -> Vec<f32> {
-        self.feat_buf.clear();
-        self.feat_buf.reserve(pop.len() * N_FEATURES);
-        for s in pop {
-            self.feat_buf.extend_from_slice(&featurize(&self.subgraph, s));
+    ) {
+        let fresh = n - carried;
+        if fresh == 0 {
+            return;
         }
-        charge_query();
-        let mut scores =
-            model.predict(&self.feat_buf, pop.len()).unwrap_or_else(|_| vec![0.0; pop.len()]);
-        for v in &mut scores {
-            if !v.is_finite() {
-                *v = f32::NEG_INFINITY;
+        let tail = &self.feat_buf[carried * N_FEATURES..n * N_FEATURES];
+        let shortlist: Option<Vec<usize>> = match draft {
+            Some(gate) if !gate.state.is_passthrough() => {
+                let mut ds = gate.state.score(tail, fresh);
+                for v in &mut ds {
+                    if !v.is_finite() {
+                        *v = f32::NEG_INFINITY;
+                    }
+                }
+                let keep = ((gate.keep * fresh as f64).ceil() as usize).clamp(1, fresh);
+                let mut order: Vec<usize> = (0..fresh).collect();
+                order.sort_by(|&a, &b| ds[b].total_cmp(&ds[a]));
+                let mut short = order[..keep].to_vec();
+                // Restore featurize order: the verify batch must be
+                // row-order stable so that keep = 1.0 reproduces the
+                // draft-off batch bitwise.
+                short.sort_unstable();
+                self.last_stats.draft_scored += fresh as u64;
+                self.last_stats.kept += short.len() as u64;
+                self.last_stats.pruned += (fresh - short.len()) as u64;
+                Some(short)
+            }
+            _ => None,
+        };
+        match shortlist {
+            Some(short) if short.len() < fresh => {
+                self.gather_buf.clear();
+                for &i in &short {
+                    self.gather_buf
+                        .extend_from_slice(&tail[i * N_FEATURES..(i + 1) * N_FEATURES]);
+                }
+                charge_query();
+                self.last_stats.full_rows += short.len() as u64;
+                let full = model
+                    .predict(&self.gather_buf, short.len())
+                    .unwrap_or_else(|_| vec![0.0; short.len()]);
+                let mut tail_scores = vec![f32::NEG_INFINITY; fresh];
+                for (j, &i) in short.iter().enumerate() {
+                    if full[j].is_finite() {
+                        tail_scores[i] = full[j];
+                    }
+                }
+                scores.extend_from_slice(&tail_scores);
+            }
+            _ => {
+                charge_query();
+                self.last_stats.full_rows += fresh as u64;
+                let mut full =
+                    model.predict(tail, fresh).unwrap_or_else(|_| vec![0.0; fresh]);
+                for v in &mut full {
+                    if !v.is_finite() {
+                        *v = f32::NEG_INFINITY;
+                    }
+                }
+                scores.extend_from_slice(&full);
             }
         }
-        scores
     }
 
     /// Tournament pick: the better of two random members.
@@ -109,8 +197,10 @@ impl SearchPolicy for EvolutionarySearch {
         model: &Predictor,
         seen: &dyn Fn(&Schedule) -> bool,
         rng: &mut Rng,
+        draft: Option<&DraftGate<'_>>,
         charge_query: &mut dyn FnMut(),
     ) -> Vec<Schedule> {
+        self.last_stats = DraftStats::default();
         // Initial population: seeds + mutated seeds + random fill.
         let mut pop: Vec<Schedule> = Vec::with_capacity(self.population);
         for s in &self.seeds {
@@ -142,15 +232,32 @@ impl SearchPolicy for EvolutionarySearch {
             attempts += 1;
         }
 
-        let mut scores = self.score(&pop, model, charge_query);
+        self.feat_buf.clear();
+        self.feat_buf.reserve(pop.len() * N_FEATURES);
+        for s in &pop {
+            self.feat_buf.extend_from_slice(&featurize(&self.subgraph, s));
+        }
+        let mut scores: Vec<f32> = Vec::with_capacity(pop.len());
+        self.score_fresh(pop.len(), 0, &mut scores, model, draft, charge_query);
 
         for _gen in 0..self.generations {
-            // Elite carry-over.
+            // Elite carry-over: the schedules, their feature rows, and
+            // their verified scores all move forward verbatim.  Per-row
+            // prediction independence makes the carried score bitwise
+            // identical to a re-score, so only fresh offspring are
+            // featurized and ranked below.
             let mut order: Vec<usize> = (0..pop.len()).collect();
             order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
             let n_elite = ((self.population as f64 * self.elite_frac) as usize).max(1);
-            let mut next: Vec<Schedule> =
-                order[..n_elite].iter().map(|&i| pop[i]).collect();
+            let mut next: Vec<Schedule> = Vec::with_capacity(self.population);
+            let mut next_scores: Vec<f32> = Vec::with_capacity(self.population);
+            self.carry_buf.clear();
+            for &i in &order[..n_elite] {
+                next.push(pop[i]);
+                next_scores.push(scores[i]);
+                self.carry_buf
+                    .extend_from_slice(&self.feat_buf[i * N_FEATURES..(i + 1) * N_FEATURES]);
+            }
             // Offspring, attempt-bounded like the random fill above.
             let mut attempts = 0usize;
             while next.len() < self.population {
@@ -165,8 +272,13 @@ impl SearchPolicy for EvolutionarySearch {
                 }
                 attempts += 1;
             }
+            for s in &next[n_elite..] {
+                self.carry_buf.extend_from_slice(&featurize(&self.subgraph, s));
+            }
+            std::mem::swap(&mut self.feat_buf, &mut self.carry_buf);
             pop = next;
-            scores = self.score(&pop, model, charge_query);
+            scores = next_scores;
+            self.score_fresh(pop.len(), n_elite, &mut scores, model, draft, charge_query);
         }
 
         // Final: predicted top-k, unseen only.
@@ -199,6 +311,7 @@ mod tests {
     use super::*;
     use crate::costmodel::{layout, CostModel, Mask, RustBackend};
     use crate::program::SubgraphKind;
+    use crate::search::DraftState;
     use std::sync::Arc;
 
     fn task() -> Subgraph {
@@ -217,6 +330,21 @@ mod tests {
         )
     }
 
+    /// A non-passthrough draft distilled from `m`'s own scores on a
+    /// random schedule sample (the same construction the learner uses).
+    fn distilled_draft(m: &CostModel, rng: &mut Rng) -> DraftState {
+        let gen = SpaceGenerator::new(task().geometry());
+        let scheds = gen.sample_distinct(rng, 64);
+        let mut x = Vec::new();
+        for s in &scheds {
+            x.extend_from_slice(&featurize(&task(), s));
+        }
+        let y = m.predict(&x, scheds.len()).unwrap();
+        let draft = DraftState::fit(&x, &y, scheds.len(), None, 0);
+        assert!(!draft.is_passthrough());
+        draft
+    }
+
     #[test]
     fn proposes_k_valid_unseen() {
         let mut es = EvolutionarySearch::new(task());
@@ -225,7 +353,7 @@ mod tests {
         let m = model(1);
         let mut rng = Rng::new(2);
         let mut queries = 0;
-        let out = es.propose(8, &m.predictor(), &|_| false, &mut rng, &mut || queries += 1);
+        let out = es.propose(8, &m.predictor(), &|_| false, &mut rng, None, &mut || queries += 1);
         assert_eq!(out.len(), 8);
         assert!(queries >= 3, "expected >=3 scoring passes, got {queries}");
         let g = es.subgraph.geometry();
@@ -256,7 +384,7 @@ mod tests {
         for _ in 0..30 {
             m.train_epoch(&x, &y, &mask, 1e-2, 0.0, &mut rng).unwrap();
         }
-        let proposed = es.propose(8, &m.predictor(), &|_| false, &mut rng, &mut || {});
+        let proposed = es.propose(8, &m.predictor(), &|_| false, &mut rng, None, &mut || {});
         let mean_prop: f64 = proposed.iter().map(|s| s.threads_per_block() as f64).sum::<f64>()
             / proposed.len() as f64;
         let random: Vec<Schedule> = gen.sample_distinct(&mut rng, 64);
@@ -281,10 +409,121 @@ mod tests {
             vec![f32::NAN; layout::N_PARAMS],
         );
         let mut rng = Rng::new(6);
-        let out = es.propose(4, &nan_model.predictor(), &|_| false, &mut rng, &mut || {});
+        let out = es.propose(4, &nan_model.predictor(), &|_| false, &mut rng, None, &mut || {});
         assert_eq!(out.len(), 4);
         let g = es.subgraph.geometry();
         assert!(out.iter().all(|s| s.is_valid(&g)));
+    }
+
+    #[test]
+    fn nan_predictions_do_not_panic_or_win_with_draft_tier() {
+        // Same guarantee through the speculative path: a healthy draft
+        // shortlists against a diverged (all-NaN) full model, and the
+        // verify batch's NaNs must map to the sentinel-worst score
+        // without panicking the ranking sorts.
+        let mut es = EvolutionarySearch::new(task());
+        es.population = 16;
+        es.generations = 2;
+        let healthy = model(9);
+        let mut rng = Rng::new(6);
+        let draft = distilled_draft(&healthy, &mut rng);
+        let gate = DraftGate { state: &draft, keep: 0.25 };
+        let nan_model = CostModel::with_params(
+            Arc::new(RustBackend { pred_batch: 64, train_batch: 64 }),
+            vec![f32::NAN; layout::N_PARAMS],
+        );
+        let out = es.propose(
+            4,
+            &nan_model.predictor(),
+            &|_| false,
+            &mut rng,
+            Some(&gate),
+            &mut || {},
+        );
+        assert_eq!(out.len(), 4);
+        let g = es.subgraph.geometry();
+        assert!(out.iter().all(|s| s.is_valid(&g)));
+        let stats = es.last_draft_stats();
+        assert!(stats.pruned > 0, "draft should have pruned: {stats:?}");
+    }
+
+    #[test]
+    fn draft_tier_cuts_full_model_rows() {
+        // The tentpole property at the unit level: with keep = 0.25 the
+        // full Predictor sees at most ~a quarter of the rows (elite
+        // score carry cuts a further slice), at the same query count.
+        let m = model(1);
+        let mut rng = Rng::new(2);
+        let draft = distilled_draft(&m, &mut rng);
+
+        let mut off = EvolutionarySearch::new(task());
+        off.population = 32;
+        off.generations = 2;
+        let mut off_q = 0;
+        off.propose(8, &m.predictor(), &|_| false, &mut Rng::new(3), None, &mut || off_q += 1);
+        let off_stats = off.last_draft_stats();
+
+        let mut on = EvolutionarySearch::new(task());
+        on.population = 32;
+        on.generations = 2;
+        let gate = DraftGate { state: &draft, keep: 0.25 };
+        let mut on_q = 0;
+        on.propose(8, &m.predictor(), &|_| false, &mut Rng::new(3), Some(&gate), &mut || {
+            on_q += 1
+        });
+        let on_stats = on.last_draft_stats();
+
+        assert_eq!(off_q, on_q, "virtual-clock query count must not change");
+        assert!(
+            on_stats.full_rows * 3 <= off_stats.full_rows,
+            "draft should cut full-model rows >=3x: on={} off={}",
+            on_stats.full_rows,
+            off_stats.full_rows
+        );
+        assert_eq!(on_stats.kept + on_stats.pruned, on_stats.draft_scored);
+    }
+
+    #[test]
+    fn keep_all_is_bitwise_identical_to_draft_off() {
+        // keep = 1.0 shortlists every fresh row in featurize order, so
+        // the verify batches — and therefore the rng stream and the
+        // proposals — are exactly the draft-off ones.
+        let m = model(1);
+        let mut rng = Rng::new(2);
+        let draft = distilled_draft(&m, &mut rng);
+        let gate = DraftGate { state: &draft, keep: 1.0 };
+
+        let mut a = EvolutionarySearch::new(task());
+        a.population = 32;
+        a.generations = 2;
+        let out_a = a.propose(8, &m.predictor(), &|_| false, &mut Rng::new(5), None, &mut || {});
+
+        let mut b = EvolutionarySearch::new(task());
+        b.population = 32;
+        b.generations = 2;
+        let out_b =
+            b.propose(8, &m.predictor(), &|_| false, &mut Rng::new(5), Some(&gate), &mut || {});
+
+        assert_eq!(out_a, out_b);
+        assert_eq!(a.last_draft_stats().full_rows, b.last_draft_stats().full_rows);
+        assert_eq!(b.last_draft_stats().pruned, 0);
+    }
+
+    #[test]
+    fn passthrough_draft_verifies_everything() {
+        let m = model(1);
+        let passthrough = DraftState::passthrough(0);
+        let gate = DraftGate { state: &passthrough, keep: 0.2 };
+        let mut es = EvolutionarySearch::new(task());
+        es.population = 16;
+        es.generations = 1;
+        let out =
+            es.propose(4, &m.predictor(), &|_| false, &mut Rng::new(5), Some(&gate), &mut || {});
+        assert_eq!(out.len(), 4);
+        let stats = es.last_draft_stats();
+        assert_eq!(stats.pruned, 0);
+        assert_eq!(stats.draft_scored, 0);
+        assert!(stats.full_rows > 0);
     }
 
     #[test]
@@ -299,7 +538,7 @@ mod tests {
         es.generations = 1;
         let m = model(7);
         let mut rng = Rng::new(8);
-        let out = es.propose(4, &m.predictor(), &|_| false, &mut rng, &mut || {});
+        let out = es.propose(4, &m.predictor(), &|_| false, &mut rng, None, &mut || {});
         assert!(!out.is_empty());
         let g = es.subgraph.geometry();
         assert!(out.iter().all(|s| s.is_valid(&g)));

@@ -1,10 +1,17 @@
 //! Search policies: how candidate schedules are proposed each tuning
 //! round (paper §2.2: "a batch of candidate programs are sampled by an
 //! evolutionary search engine" guided by the cost model).
+//!
+//! Since the speculative-search PR, scoring is optionally two-tier
+//! ([`draft`]): a cheap distilled [`DraftState`] ranks the whole
+//! population and only a `draft_keep` shortlist is verified by the full
+//! [`Predictor`].
 
+pub mod draft;
 pub mod evolutionary;
 pub mod random;
 
+pub use draft::{DraftGate, DraftState, DraftStats};
 pub use evolutionary::EvolutionarySearch;
 pub use random::RandomSearch;
 
@@ -19,14 +26,19 @@ use crate::util::rng::Rng;
 /// snapshot) and never observe — let alone cause — model mutation.
 pub trait SearchPolicy {
     /// Propose up to `k` candidates, guided by `model` scores, avoiding
-    /// fingerprints in `seen`.  `charge_query` is invoked once per
-    /// cost-model batch query so the virtual clock sees search costs.
+    /// fingerprints in `seen`.  When `draft` is armed, a policy may
+    /// pre-rank candidates with the draft tier and only verify the
+    /// shortlist against `model` (policies that never query the model
+    /// ignore it).  `charge_query` is invoked once per *full-model*
+    /// batch query so the virtual clock sees search costs; draft
+    /// scoring is never charged.
     fn propose(
         &mut self,
         k: usize,
         model: &Predictor,
         seen: &dyn Fn(&Schedule) -> bool,
         rng: &mut Rng,
+        draft: Option<&DraftGate<'_>>,
         charge_query: &mut dyn FnMut(),
     ) -> Vec<Schedule>;
 }

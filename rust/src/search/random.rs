@@ -1,7 +1,7 @@
 //! Uniform-random search: the no-cost-model baseline proposal engine
 //! (also used to seed the evolutionary population).
 
-use super::SearchPolicy;
+use super::{DraftGate, SearchPolicy};
 use crate::costmodel::Predictor;
 use crate::program::{Schedule, SpaceGenerator};
 use crate::util::rng::Rng;
@@ -24,6 +24,7 @@ impl SearchPolicy for RandomSearch {
         _model: &Predictor,
         seen: &dyn Fn(&Schedule) -> bool,
         rng: &mut Rng,
+        _draft: Option<&DraftGate<'_>>,
         _charge_query: &mut dyn FnMut(),
     ) -> Vec<Schedule> {
         let mut out: Vec<Schedule> = Vec::with_capacity(k);
@@ -57,7 +58,7 @@ mod tests {
         let mut rs = RandomSearch::new(SpaceGenerator::new(g));
         let mut rng = Rng::new(1);
         let mut charges = 0;
-        let out = rs.propose(16, &model(), &|_| false, &mut rng, &mut || charges += 1);
+        let out = rs.propose(16, &model(), &|_| false, &mut rng, None, &mut || charges += 1);
         assert_eq!(out.len(), 16);
         assert_eq!(charges, 0); // random search never queries the model
     }
@@ -74,6 +75,7 @@ mod tests {
             &model(),
             &|s| banned.contains(s),
             &mut rng,
+            None,
             &mut || {},
         );
         for s in &out {

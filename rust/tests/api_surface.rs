@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use moses::coordinator::{AutoTuner, BackendKind, SnapshotCell, TuneConfig};
+use moses::coordinator::{AutoTuner, BackendKind, ModelSnapshot, SnapshotCell, TuneConfig};
 use moses::costmodel::{layout, CostModel, Mask, ModelState, Predictor, RustBackend};
 use moses::program::{Subgraph, SubgraphKind};
 use moses::transfer::Strategy;
@@ -56,16 +56,18 @@ fn snapshot_publish_and_pin_share_storage() {
     // Publish through the cell exactly as the parallel learner actor
     // does, pin twice as two workers would: every handle aliases the
     // same storage — the publish→pin round trip never copies params.
-    let cell = SnapshotCell::new(model.shared_state());
+    let cell = SnapshotCell::new(ModelSnapshot::from_model(model.shared_state()));
     let worker_a = cell.wait_for(0).unwrap();
     let worker_b = cell.wait_for(0).unwrap();
-    assert!(Arc::ptr_eq(&worker_a, &worker_b));
-    assert!(Arc::ptr_eq(&worker_a, &model.shared_state()));
+    assert!(Arc::ptr_eq(&worker_a.model, &worker_b.model));
+    assert!(Arc::ptr_eq(&worker_a.model, &model.shared_state()));
+    // No draft tier configured: snapshots carry no draft scorer.
+    assert!(worker_a.draft.is_none());
 
     // A pinned view built from the snapshot predicts identically to the
     // source model.
     let (x, _) = labeled_rows(&mut rng, 8);
-    let view = Predictor::new(backend(), worker_a);
+    let view = Predictor::new(backend(), worker_a.model);
     assert_eq!(view.predict(&x, 8).unwrap(), model.predict(&x, 8).unwrap());
 }
 
@@ -75,18 +77,18 @@ fn publishing_a_new_state_leaves_old_pins_untouched() {
     let mut model = CostModel::new(backend(), &mut rng);
     let (x, y) = labeled_rows(&mut rng, 16);
 
-    let cell = SnapshotCell::new(model.shared_state());
+    let cell = SnapshotCell::new(ModelSnapshot::from_model(model.shared_state()));
     let pin_v0 = cell.wait_for(0).unwrap();
-    let before = Predictor::new(backend(), pin_v0.clone()).predict(&x, 16).unwrap();
+    let before = Predictor::new(backend(), pin_v0.model.clone()).predict(&x, 16).unwrap();
 
     let mask = Mask::all_ones(layout::N_PARAMS);
     model.train_step(&x, &y, &mask, 1e-2, 0.0).unwrap();
-    cell.publish(1, model.shared_state());
+    cell.publish(1, ModelSnapshot::from_model(model.shared_state()));
 
     let pin_v1 = cell.wait_for(1).unwrap();
-    assert!(!Arc::ptr_eq(&pin_v0, &pin_v1));
-    assert_eq!(Predictor::new(backend(), pin_v0).predict(&x, 16).unwrap(), before);
-    assert_ne!(Predictor::new(backend(), pin_v1).predict(&x, 16).unwrap(), before);
+    assert!(!Arc::ptr_eq(&pin_v0.model, &pin_v1.model));
+    assert_eq!(Predictor::new(backend(), pin_v0.model).predict(&x, 16).unwrap(), before);
+    assert_ne!(Predictor::new(backend(), pin_v1.model).predict(&x, 16).unwrap(), before);
 }
 
 #[test]
