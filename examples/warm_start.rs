@@ -29,10 +29,24 @@ fn cfg(seed: u64) -> TuneConfig {
     }
 }
 
+/// Total bytes across a cache directory's log files.
+fn dir_bytes(dir: &std::path::Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .filter_map(|e| e.metadata().ok())
+                .map(|m| m.len())
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
 fn main() -> anyhow::Result<()> {
     let tasks = zoo::squeezenet().tasks()[..4].to_vec();
-    let path = std::env::temp_dir().join("moses_warm_start.jsonl");
-    let _ = std::fs::remove_file(&path);
+    // A cache *directory*: multiple concurrent tuner processes could
+    // share it, each appending to its own segment.
+    let path = std::env::temp_dir().join("moses_warm_start_cache");
+    let _ = std::fs::remove_dir_all(&path);
     let cache = Arc::new(TuneCache::open(&path, 8)?);
 
     let mut table = Table::new(
@@ -86,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let s = cache.stats();
-    let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let size = dir_bytes(&path);
     println!(
         "\ncache: {} hits / {} misses, {} cross-device seeds, {} neighbor seeds, \
          {} commits; {} live records, {size} bytes on disk",
@@ -94,6 +108,6 @@ fn main() -> anyhow::Result<()> {
         cache.total_records(),
     );
     cache.compact()?;
-    println!("after compaction: {} bytes", std::fs::metadata(&path)?.len());
+    println!("after compaction: {} bytes", dir_bytes(&path));
     Ok(())
 }

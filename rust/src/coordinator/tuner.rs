@@ -33,7 +33,7 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::learner::{
     run_learner_actor, Learner, LearnerConfig, LearnerState, ModelSnapshot, ToLearner,
@@ -48,7 +48,7 @@ use crate::obs::{Lane, Recorder};
 use crate::program::Subgraph;
 use crate::runtime::Engine;
 use crate::transfer::{self, MosesAdapter, Strategy};
-use crate::tunecache::{TuneCache, DEFAULT_NN_K, DEFAULT_NN_RADIUS};
+use crate::tunecache::{FsyncPolicy, TuneCache, DEFAULT_NN_K, DEFAULT_NN_RADIUS};
 use crate::util::rng::Rng;
 
 /// Which compute backend executes the cost model.
@@ -207,6 +207,8 @@ pub struct AutoTunerBuilder {
     cfg: TuneConfig,
     model: Option<CostModel>,
     cache: Option<Arc<TuneCache>>,
+    cache_path: Option<PathBuf>,
+    cache_fsync: FsyncPolicy,
     recorder: Recorder,
 }
 
@@ -336,6 +338,25 @@ impl AutoTunerBuilder {
         self
     }
 
+    /// Open (or create) the tuning-record store at `path` during
+    /// [`AutoTunerBuilder::build`] — the convenience form of
+    /// [`AutoTunerBuilder::cache`] for callers without their own
+    /// [`TuneCache`] handle.  `path` is a segmented cache directory
+    /// safe to share across concurrent tuner processes; a legacy
+    /// single-file JSONL log is imported read-only.  Mutually
+    /// exclusive with `.cache(..)`.
+    pub fn cache_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cache_path = Some(path.into());
+        self
+    }
+
+    /// Segment-append durability for a [`AutoTunerBuilder::cache_path`]
+    /// store (ignored for an externally-opened `.cache(..)`).
+    pub fn cache_fsync(mut self, fsync: FsyncPolicy) -> Self {
+        self.cache_fsync = fsync;
+        self
+    }
+
     /// Record sessions into `recorder` (see [`crate::obs`]): pipeline
     /// stages, learner batches and snapshot publish/pin events become
     /// trace spans.  The default is a disabled recorder, whose
@@ -382,6 +403,20 @@ impl AutoTunerBuilder {
             "--draft requires the rust cost-model backend: the draft scorer distills \
              from the in-memory parameter vector"
         );
+        anyhow::ensure!(
+            self.cache.is_none() || self.cache_path.is_none(),
+            "supply either .cache(..) or .cache_path(..), not both"
+        );
+        let cache = match (&self.cache, &self.cache_path) {
+            (Some(c), _) => Some(c.clone()),
+            (None, Some(path)) => Some(Arc::new(
+                TuneCache::builder(path)
+                    .fsync(self.cache_fsync)
+                    .open()
+                    .with_context(|| format!("opening tune cache at {path:?}"))?,
+            )),
+            (None, None) => None,
+        };
 
         let mut rng = Rng::new(cfg.seed);
         let model = match self.model {
@@ -424,7 +459,7 @@ impl AutoTunerBuilder {
             config: self.cfg.clone(),
             sim: DeviceSim::new(self.target),
             rng,
-            cache: self.cache,
+            cache,
             learner: Some(Learner::new(self.cfg.learner_config(), model, adapter)),
             recorder: self.recorder,
         })
@@ -456,6 +491,8 @@ impl AutoTuner {
             cfg: TuneConfig::default(),
             model: None,
             cache: None,
+            cache_path: None,
+            cache_fsync: FsyncPolicy::default(),
             recorder: Recorder::default(),
         }
     }

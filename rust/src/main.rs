@@ -28,7 +28,7 @@ use moses::models::zoo;
 use moses::obs::{chrome, Recorder, Trace, TraceHeader, TRACE_VERSION};
 use moses::program::{featurize, SpaceGenerator, TensorProgram, N_FEATURES};
 use moses::transfer::Strategy;
-use moses::tunecache::{DEFAULT_TOPK, TuneCache};
+use moses::tunecache::{FsyncPolicy, TuneCache, DEFAULT_TOPK};
 use moses::util::cli::Flags;
 use moses::util::rng::Rng;
 use moses::util::stats;
@@ -131,8 +131,15 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         .opt("pretrained", "", "checkpoint path (default: auto-pretrain+cache)")
         .opt(
             "tune-cache",
-            "artifacts/tunecache.jsonl",
-            "persistent tuning-record store (zero-trial repeats + cross-device warm start)",
+            "artifacts/tunecache",
+            "persistent tuning-record store: a cache directory safe to share across \
+             concurrent tuners (a legacy single-file .jsonl log is imported read-only)",
+        )
+        .opt(
+            "cache-fsync",
+            "never",
+            "segment-append durability (never|always): 'always' fsyncs every \
+             committed record, 'never' leaves the tail to the OS page cache",
         )
         .switch("no-cache", "disable the tuning-record store")
         .opt(
@@ -220,7 +227,10 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         None
     } else {
         let path = PathBuf::from(p.get("tune-cache"));
-        let mut tc = TuneCache::open(&path, DEFAULT_TOPK)?;
+        let fsync = FsyncPolicy::from_name(p.get("cache-fsync")).with_context(|| {
+            format!("--cache-fsync must be never|always, got '{}'", p.get("cache-fsync"))
+        })?;
+        let mut tc = TuneCache::builder(&path).topk(DEFAULT_TOPK).fsync(fsync).open()?;
         tc.attach_recorder(&recorder);
         Some(Arc::new(tc))
     };
@@ -427,9 +437,9 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
         .opt(
             "from-tunecache",
             "",
-            "pretrain on REAL tuning history: export this tunecache log \
-             (JSONL) and train on the source device's records instead of \
-             a random-sampled corpus",
+            "pretrain on REAL tuning history: export this tunecache store \
+             (cache directory or legacy JSONL file) and train on the source \
+             device's records instead of a random-sampled corpus",
         );
     if args.iter().any(|a| a == "--help") {
         print!("{}", flags.help("pretrain", "Pre-train the source-device cost model."));
@@ -459,7 +469,7 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
         // tuning log by device and train on the source device's slice.
         let log = PathBuf::from(from_cache);
         anyhow::ensure!(log.exists(), "no tuning log at {log:?} (run `moses tune` first)");
-        let (records, malformed) = moses::tunecache::persist::load_records(&log)?;
+        let (records, malformed) = moses::tunecache::persist::load_log(&log)?;
         let report = moses::dataset::export::from_records(&records);
         let ds = report
             .datasets
@@ -556,8 +566,8 @@ fn cmd_export_dataset(args: &[String]) -> Result<()> {
     let flags = Flags::new()
         .opt(
             "tune-cache",
-            "artifacts/tunecache.jsonl",
-            "tuning-record log to export (JSONL)",
+            "artifacts/tunecache",
+            "tuning-record store to export (cache directory or legacy JSONL file)",
         )
         .opt("out", "artifacts", "output directory for per-device .moses-ds files")
         .opt("suffix", "tunecache", "output file suffix: <device>-<suffix>.moses-ds");
@@ -576,7 +586,7 @@ fn cmd_export_dataset(args: &[String]) -> Result<()> {
     let p = flags.parse(args)?;
     let path = PathBuf::from(p.get("tune-cache"));
     anyhow::ensure!(path.exists(), "no tuning log at {path:?} (run `moses tune` first)");
-    let (records, malformed) = moses::tunecache::persist::load_records(&path)?;
+    let (records, malformed) = moses::tunecache::persist::load_log(&path)?;
     let report = moses::dataset::export::from_records(&records);
     let out_dir = PathBuf::from(p.get("out"));
     std::fs::create_dir_all(&out_dir)?;

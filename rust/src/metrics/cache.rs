@@ -24,6 +24,10 @@ pub struct CacheCounters {
     commits: Counter,
     rejects: Counter,
     stale_dropped: Counter,
+    append_failed: Counter,
+    append_fsyncs: Counter,
+    segments_merged: Counter,
+    compactions: Counter,
 }
 
 impl Default for CacheCounters {
@@ -37,6 +41,10 @@ impl Default for CacheCounters {
             commits: registry.counter("cache.commits"),
             rejects: registry.counter("cache.rejects"),
             stale_dropped: registry.counter("cache.stale_dropped"),
+            append_failed: registry.counter("cache.append_failed"),
+            append_fsyncs: registry.counter("cache.append_fsyncs"),
+            segments_merged: registry.counter("cache.segments_merged"),
+            compactions: registry.counter("cache.compactions"),
             registry,
         }
     }
@@ -86,6 +94,28 @@ impl CacheCounters {
         self.rejects.incr();
     }
 
+    /// An admitted record could not be appended to its segment even
+    /// after a retry — it lives in memory only for this session.
+    pub fn record_append_failed(&self) {
+        self.append_failed.incr();
+    }
+
+    /// An append was fsynced ([`crate::tunecache::FsyncPolicy::Always`]).
+    pub fn record_append_fsync(&self) {
+        self.append_fsyncs.incr();
+    }
+
+    /// `n` log files (checkpoint + segments, or one legacy file) were
+    /// merged through admission on open.
+    pub fn record_segments_merged(&self, n: usize) {
+        self.segments_merged.add(n as u64);
+    }
+
+    /// A compaction folded the log back to the live frontier.
+    pub fn record_compaction(&self) {
+        self.compactions.incr();
+    }
+
     pub fn snapshot(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.get() as usize,
@@ -95,6 +125,10 @@ impl CacheCounters {
             commits: self.commits.get() as usize,
             rejects: self.rejects.get() as usize,
             stale_dropped: self.stale_dropped.get() as usize,
+            append_failed: self.append_failed.get() as usize,
+            append_fsyncs: self.append_fsyncs.get() as usize,
+            segments_merged: self.segments_merged.get() as usize,
+            compactions: self.compactions.get() as usize,
         }
     }
 }
@@ -109,6 +143,10 @@ pub struct CacheStats {
     pub commits: usize,
     pub rejects: usize,
     pub stale_dropped: usize,
+    pub append_failed: usize,
+    pub append_fsyncs: usize,
+    pub segments_merged: usize,
+    pub compactions: usize,
 }
 
 impl CacheStats {
@@ -138,6 +176,10 @@ mod tests {
         c.record_commit();
         c.record_reject();
         c.record_stale(2);
+        c.record_append_failed();
+        c.record_append_fsync();
+        c.record_segments_merged(3);
+        c.record_compaction();
         let s = c.snapshot();
         assert_eq!(s.hits, 2);
         assert_eq!(s.misses, 1);
@@ -146,6 +188,10 @@ mod tests {
         assert_eq!(s.commits, 1);
         assert_eq!(s.rejects, 1);
         assert_eq!(s.stale_dropped, 2);
+        assert_eq!(s.append_failed, 1);
+        assert_eq!(s.append_fsyncs, 1);
+        assert_eq!(s.segments_merged, 3);
+        assert_eq!(s.compactions, 1);
         assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 
@@ -162,6 +208,6 @@ mod tests {
         let snap = c.registry().snapshot();
         assert_eq!(snap.get("cache.hits"), Some(&1));
         assert_eq!(snap.get("cache.stale_dropped"), Some(&4));
-        assert_eq!(snap.len(), 7);
+        assert_eq!(snap.len(), 11);
     }
 }

@@ -1,5 +1,7 @@
 //! Feature-space workload index: nearest-neighbor retrieval over
-//! cached workload descriptors.
+//! cached workload descriptors.  Rebuilt from scratch at every
+//! [`super::TuneCache`] open by the same segment merge that fills the
+//! store, so it always reflects the union of every writer's records.
 //!
 //! The exact-hash cache ([`super::store`]) only helps when a workload
 //! has been seen *identically* before; this index turns the cache into

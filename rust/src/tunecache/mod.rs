@@ -11,8 +11,12 @@
 //! * [`store`] — [`TuneStore`], an `RwLock`-striped concurrent map
 //!   holding the top-k measured `(schedule, latency)` records per
 //!   (workload, device) with eviction;
-//! * [`persist`] — JSONL load-on-open / append-on-commit / compaction,
-//!   so tuning logs survive across sessions and hosts;
+//! * [`persist`] — the JSONL line format: load-on-open,
+//!   append-on-commit, atomic checkpoint rewrite;
+//! * [`seglog`] — the multi-writer directory layout: per-writer
+//!   exclusively-owned segments, a folded checkpoint, and the advisory
+//!   compaction lock, so concurrent `moses tune` processes share one
+//!   logical store without data loss;
 //! * [`index`] — [`WorkloadIndex`], a feature-space map from workload
 //!   descriptors to cached workloads, queried by nearest-neighbor
 //!   distance so genuinely new shapes can borrow similar shapes' seeds;
@@ -28,11 +32,13 @@
 pub mod index;
 pub mod key;
 pub mod persist;
+pub mod seglog;
 pub mod store;
 pub mod warmstart;
 
 pub use index::{WorkloadIndex, DEFAULT_NN_K, DEFAULT_NN_RADIUS};
 pub use key::WorkloadKey;
+pub use seglog::FsyncPolicy;
 pub use store::{TuneRecord, TuneStore};
 pub use warmstart::{SeedRecord, WarmStartOptions, WarmStartPlan};
 
@@ -44,8 +50,6 @@ pub use warmstart::{SeedRecord, WarmStartOptions, WarmStartPlan};
 /// neighbor index, so a model change can never serve stale results.
 pub const RECORD_VERSION: u32 = 1;
 
-use std::fs::{File, OpenOptions};
-use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -58,15 +62,70 @@ use crate::obs::{Lane, Recorder, TraceScope};
 /// Default top-k records kept per (workload, device).
 pub const DEFAULT_TOPK: usize = 8;
 
-/// The persistent cache: in-memory sharded store + JSONL append log +
-/// hit/miss/seed counters.  Share one instance per host via `Arc`.
+/// What a [`TuneCache`] persists to, fixed at open time.
+enum Backing {
+    /// No persistence (tests, benches, ephemeral sessions).
+    Memory,
+    /// A legacy single-file JSONL log, imported read-only: commits stay
+    /// in memory and compaction is a no-op, so a pre-directory log is
+    /// still a valid warm-start source but never mutated (two processes
+    /// appending to one file is exactly what the segmented layout
+    /// exists to prevent).
+    Legacy { path: PathBuf },
+    /// A segmented cache directory ([`seglog`]): this instance appends
+    /// to its own exclusively-owned segment.
+    Segmented {
+        dir: PathBuf,
+        writer: Mutex<seglog::SegmentWriter>,
+    },
+}
+
+/// Configures and opens a [`TuneCache`] — see [`TuneCache::builder`].
+pub struct TuneCacheBuilder {
+    path: PathBuf,
+    topk: usize,
+    fsync: FsyncPolicy,
+}
+
+impl TuneCacheBuilder {
+    /// Top-k records kept per (workload, device).
+    pub fn topk(mut self, topk: usize) -> TuneCacheBuilder {
+        self.topk = topk;
+        self
+    }
+
+    /// Durability policy for segment appends (directories only; a
+    /// legacy file import never writes).
+    pub fn fsync(mut self, fsync: FsyncPolicy) -> TuneCacheBuilder {
+        self.fsync = fsync;
+        self
+    }
+
+    /// Open the cache: an existing *file* is imported read-only
+    /// (legacy single-file log); anything else is treated as a cache
+    /// directory and created if absent.
+    pub fn open(self) -> Result<TuneCache> {
+        anyhow::ensure!(self.topk > 0, "tunecache topk must be > 0");
+        if self.path.is_file() {
+            TuneCache::open_legacy(&self.path, self.topk)
+        } else {
+            TuneCache::open_dir(&self.path, self.topk, self.fsync)
+        }
+    }
+}
+
+/// The persistent cache: in-memory sharded store + segmented append
+/// log + hit/miss/seed counters.  Share one instance per process via
+/// `Arc`; independent *processes* share the store by opening the same
+/// cache directory — each appends to its own segment and merges the
+/// others' on open.
 pub struct TuneCache {
     store: TuneStore,
     /// Workload-descriptor index over everything in `store` — the
     /// retrieval side of the cache (nearest-neighbor warm start).
     index: WorkloadIndex,
-    path: Option<PathBuf>,
-    file: Mutex<Option<File>>,
+    backing: Backing,
+    fsync: FsyncPolicy,
     counters: CacheCounters,
     /// Lines appended since open/compaction (compaction debt).
     appended: AtomicUsize,
@@ -78,69 +137,24 @@ pub struct TuneCache {
 }
 
 impl TuneCache {
-    /// Open (or create) a cache backed by a JSONL file.  Existing
-    /// records are loaded through top-k admission; malformed lines are
-    /// skipped with a warning, and records stamped by a different
+    /// Start configuring a cache at `path` (a segmented cache
+    /// directory, or a legacy single-file log imported read-only).
+    pub fn builder(path: impl Into<PathBuf>) -> TuneCacheBuilder {
+        TuneCacheBuilder {
+            path: path.into(),
+            topk: DEFAULT_TOPK,
+            fsync: FsyncPolicy::default(),
+        }
+    }
+
+    /// Open (or create) a cache at `path` with default options — see
+    /// [`TuneCache::builder`] for the fsync knob.  Existing records are
+    /// loaded through top-k admission; malformed lines are skipped with
+    /// a warning, and records stamped by a different
     /// featurizer/simulator version ([`RECORD_VERSION`]) are dropped —
     /// their latencies and descriptors are no longer comparable.
     pub fn open(path: &Path, topk: usize) -> Result<TuneCache> {
-        let store = TuneStore::new(topk);
-        let index = WorkloadIndex::new();
-        let counters = CacheCounters::default();
-        let mut dropped = 0usize;
-        if path.exists() {
-            let (records, skipped) = persist::load_records(path)?;
-            if skipped > 0 {
-                crate::warn!("tunecache: skipped {skipped} malformed line(s) in {path:?}");
-            }
-            let mut stale = 0usize;
-            for r in &records {
-                if r.version != RECORD_VERSION {
-                    stale += 1;
-                    continue;
-                }
-                if store.commit(r) {
-                    index.insert(r.workload, r.desc, r.version);
-                }
-            }
-            if stale > 0 {
-                counters.record_stale(stale);
-                crate::warn!(
-                    "tunecache: dropped {stale} stale record(s) in {path:?} \
-                     (featurizer/simulator version != {RECORD_VERSION})"
-                );
-            }
-            dropped = stale + skipped;
-        } else if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)
-                    .with_context(|| format!("creating {parent:?}"))?;
-            }
-        }
-        let file = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-            .with_context(|| format!("opening {path:?} for append"))?;
-        let cache = TuneCache {
-            store,
-            index,
-            path: Some(path.to_path_buf()),
-            file: Mutex::new(Some(file)),
-            counters,
-            appended: AtomicUsize::new(0),
-            scope: Mutex::new(TraceScope::disabled()),
-        };
-        // Purge dropped (stale/malformed) lines from disk once, here:
-        // the debt-triggered compaction in commit() never fires for
-        // them, so without this every future open would re-parse and
-        // re-warn about the same dead lines forever.
-        if dropped > 0 {
-            if let Err(e) = cache.compact() {
-                crate::warn!("tunecache: open-time compaction failed: {e:#}");
-            }
-        }
-        Ok(cache)
+        TuneCache::builder(path).topk(topk).open()
     }
 
     /// Purely in-memory cache (tests, benches, ephemeral sessions).
@@ -148,12 +162,153 @@ impl TuneCache {
         TuneCache {
             store: TuneStore::new(topk),
             index: WorkloadIndex::new(),
-            path: None,
-            file: Mutex::new(None),
+            backing: Backing::Memory,
+            fsync: FsyncPolicy::default(),
             counters: CacheCounters::default(),
             appended: AtomicUsize::new(0),
             scope: Mutex::new(TraceScope::disabled()),
         }
+    }
+
+    /// Read-only import of a legacy single-file JSONL log.
+    fn open_legacy(path: &Path, topk: usize) -> Result<TuneCache> {
+        let store = TuneStore::new(topk);
+        let index = WorkloadIndex::new();
+        let counters = CacheCounters::default();
+        let (records, skipped) = persist::load_records(path)?;
+        if skipped > 0 {
+            crate::warn!("tunecache: skipped {skipped} malformed line(s) in {path:?}");
+        }
+        let mut stale = 0usize;
+        for r in &records {
+            if r.version != RECORD_VERSION {
+                stale += 1;
+                continue;
+            }
+            if store.commit(r) {
+                index.insert(r.workload, r.desc, r.version);
+            }
+        }
+        if stale > 0 {
+            counters.record_stale(stale);
+            crate::warn!(
+                "tunecache: dropped {stale} stale record(s) in {path:?} \
+                 (featurizer/simulator version != {RECORD_VERSION})"
+            );
+        }
+        counters.record_segments_merged(1);
+        crate::warn!(
+            "tunecache: {path:?} is a legacy single-file log, imported read-only; \
+             new records persist only when --tune-cache points at a cache directory"
+        );
+        Ok(TuneCache {
+            store,
+            index,
+            backing: Backing::Legacy { path: path.to_path_buf() },
+            fsync: FsyncPolicy::Never,
+            counters,
+            appended: AtomicUsize::new(0),
+            scope: Mutex::new(TraceScope::disabled()),
+        })
+    }
+
+    /// Open (creating if needed) a segmented cache directory:
+    /// merge-on-open of checkpoint + every segment, then a fresh
+    /// exclusively-owned segment for this instance's appends.
+    fn open_dir(dir: &Path, topk: usize, fsync: FsyncPolicy) -> Result<TuneCache> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        // A concurrent compactor may fold a segment into the checkpoint
+        // and unlink it between our listing and our read; those records
+        // are then only in the *new* checkpoint.  Retry the whole merge
+        // on a vanished file so the merged view is a consistent cut
+        // (the last attempt accepts whatever is readable).
+        let mut merged = None;
+        for last_attempt in [false, false, true] {
+            match Self::merge_dir(dir, topk, last_attempt)? {
+                Some(m) => {
+                    merged = Some(m);
+                    break;
+                }
+                None => continue,
+            }
+        }
+        let m = merged.expect("final merge attempt accepts partial reads");
+        if m.skipped > 0 {
+            crate::warn!(
+                "tunecache: skipped {} malformed line(s) in {dir:?}",
+                m.skipped
+            );
+        }
+        if m.stale > 0 {
+            m.counters.record_stale(m.stale);
+            crate::warn!(
+                "tunecache: dropped {} stale record(s) in {dir:?} \
+                 (featurizer/simulator version != {RECORD_VERSION})",
+                m.stale
+            );
+        }
+        m.counters.record_segments_merged(m.segments);
+        let writer = seglog::SegmentWriter::create(dir)?;
+        let cache = TuneCache {
+            store: m.store,
+            index: m.index,
+            backing: Backing::Segmented {
+                dir: dir.to_path_buf(),
+                writer: Mutex::new(writer),
+            },
+            fsync,
+            counters: m.counters,
+            appended: AtomicUsize::new(0),
+            scope: Mutex::new(TraceScope::disabled()),
+        };
+        // Purge dead lines from disk once, here: stale/malformed lines
+        // AND frontier-evicted duplicates (lines that parse fine but
+        // lose top-k admission) never add append debt, so without this
+        // every future open would re-parse the same dead lines forever.
+        if m.stale + m.skipped + m.evicted > 0 {
+            if let Err(e) = cache.compact() {
+                crate::warn!("tunecache: open-time compaction failed: {e:#}");
+            }
+        }
+        Ok(cache)
+    }
+
+    /// One merge pass over the directory's log files.  Returns `None`
+    /// when a file vanished mid-merge (unless `accept_partial`).
+    fn merge_dir(dir: &Path, topk: usize, accept_partial: bool) -> Result<Option<MergedDir>> {
+        let store = TuneStore::new(topk);
+        let index = WorkloadIndex::new();
+        let mut m = MergedDir {
+            store,
+            index,
+            counters: CacheCounters::default(),
+            segments: 0,
+            stale: 0,
+            skipped: 0,
+            evicted: 0,
+        };
+        for file in seglog::log_files(dir)? {
+            let Some((records, skipped)) = persist::load_records_opt(&file)? else {
+                if accept_partial {
+                    continue;
+                }
+                return Ok(None);
+            };
+            m.segments += 1;
+            m.skipped += skipped;
+            for r in &records {
+                if r.version != RECORD_VERSION {
+                    m.stale += 1;
+                    continue;
+                }
+                if m.store.commit(r) {
+                    m.index.insert(r.workload, r.desc, r.version);
+                } else {
+                    m.evicted += 1;
+                }
+            }
+        }
+        Ok(Some(m))
     }
 
     /// Surface this cache in a session trace: its `cache.*` counters
@@ -166,6 +321,7 @@ impl TuneCache {
             m.adopt(self.counters.registry());
         }
         let mut scope = rec.scope(Lane::Cache, "tunecache");
+        let stats = self.stats();
         scope.instant(
             0,
             "open",
@@ -173,16 +329,22 @@ impl TuneCache {
             &[],
             &[
                 ("records", self.total_records() as f64),
-                ("stale_dropped", self.stats().stale_dropped as f64),
+                ("stale_dropped", stats.stale_dropped as f64),
                 ("workloads", self.num_workloads() as f64),
+                ("segments", stats.segments_merged as f64),
             ],
         );
         *self.scope.lock().expect("tunecache scope poisoned") = scope;
     }
 
-    /// Backing file, if any.
+    /// Backing path, if any: the cache directory, or the legacy log
+    /// file when one was imported.
     pub fn path(&self) -> Option<&Path> {
-        self.path.as_deref()
+        match &self.backing {
+            Backing::Memory => None,
+            Backing::Legacy { path } => Some(path),
+            Backing::Segmented { dir, .. } => Some(dir),
+        }
     }
 
     pub fn counters(&self) -> &CacheCounters {
@@ -193,8 +355,11 @@ impl TuneCache {
         self.counters.snapshot()
     }
 
-    /// Commit one measured record: top-k admission, then append to the
-    /// log if admitted (rejected records are never encoded).  Compacts
+    /// Commit one measured record: top-k admission, then append to this
+    /// instance's segment if admitted (rejected records are never
+    /// encoded).  A failed append is retried once on a reopened handle;
+    /// a definitively failed append counts into `cache.append_failed`
+    /// and adds *no* compaction debt (nothing reached disk).  Compacts
     /// automatically once the append debt exceeds 4× the live frontier.
     pub fn commit(&self, rec: TuneRecord) -> bool {
         let kept = self.store.commit(&rec);
@@ -204,48 +369,119 @@ impl TuneCache {
         }
         self.counters.record_commit();
         self.index.insert(rec.workload, rec.desc, rec.version);
-        if self.path.is_some() {
-            {
-                let mut guard = self.file.lock().expect("tunecache file poisoned");
-                if let Some(f) = guard.as_mut() {
-                    let line = persist::encode_line(&rec);
-                    if writeln!(f, "{line}").is_err() {
-                        crate::warn!("tunecache: append failed; record kept in memory only");
+        if let Backing::Segmented { writer, .. } = &self.backing {
+            let line = persist::encode_line(&rec);
+            let landed = {
+                let mut w = writer.lock().expect("tunecache writer poisoned");
+                w.append(&line, self.fsync)
+            };
+            match landed {
+                Ok(()) => {
+                    if self.fsync == FsyncPolicy::Always {
+                        self.counters.record_append_fsync();
+                    }
+                    let appended = self.appended.fetch_add(1, Ordering::Relaxed) + 1;
+                    // Short-circuit keeps the O(records) store walk off
+                    // the commit path until real debt has built up.
+                    if appended > 64 && appended > 4 * self.store.total_records() {
+                        if let Err(e) = self.compact() {
+                            crate::warn!("tunecache: compaction failed: {e:#}");
+                        }
                     }
                 }
-            }
-            let appended = self.appended.fetch_add(1, Ordering::Relaxed) + 1;
-            // Short-circuit keeps the O(records) store walk off the
-            // commit path until real append debt has built up.
-            if appended > 64 && appended > 4 * self.store.total_records() {
-                if let Err(e) = self.compact() {
-                    crate::warn!("tunecache: compaction failed: {e:#}");
+                Err(e) => {
+                    self.counters.record_append_failed();
+                    crate::warn!(
+                        "tunecache: append failed twice ({e}); record kept in memory only"
+                    );
                 }
             }
         }
         true
     }
 
-    /// Rewrite the log to exactly the live frontier.
+    /// Fold the on-disk log back to the live frontier.  Directory mode
+    /// takes the advisory compaction lock (skipping silently if another
+    /// live compactor holds it), rotates this instance's segment so
+    /// concurrent commits keep landing, then rewrites the checkpoint
+    /// from: our in-memory frontier (which covers our retired segment),
+    /// the on-disk checkpoint (re-read under the lock — it may hold
+    /// records folded by another process that we never saw), and every
+    /// foldable segment (sealed by a clean close, or owned by a dead
+    /// pid).  Live writers' segments are never read or removed.  Only
+    /// after the checkpoint rename + directory sync land are the folded
+    /// files unlinked, so a crash at any point loses nothing.
     pub fn compact(&self) -> Result<()> {
-        let Some(path) = &self.path else {
+        let Backing::Segmented { dir, writer } = &self.backing else {
             return Ok(());
         };
-        let mut guard = self.file.lock().expect("tunecache file poisoned");
-        persist::rewrite(path, &self.store.snapshot())?;
-        *guard = Some(
-            OpenOptions::new()
-                .append(true)
-                .open(path)
-                .with_context(|| format!("reopening {path:?}"))?,
-        );
+        let Some(_lock) = seglog::try_lock(dir)? else {
+            crate::debug!("tunecache: compaction skipped, {dir:?} is locked");
+            return Ok(());
+        };
+        // Rotate BEFORE snapshotting: a record committed after the
+        // rotation lands in the fresh segment (which survives), and a
+        // record appended to the retired segment before it was rotated
+        // away is already in the store — either way the snapshot plus
+        // surviving segments cover everything.
+        let (retired, own) = {
+            let mut w = writer.lock().expect("tunecache writer poisoned");
+            let retired = w.rotate()?;
+            (retired, w.path().to_path_buf())
+        };
+        let merged = TuneStore::new(self.store.topk());
+        for r in self.store.snapshot() {
+            merged.commit(&r);
+        }
+        let mut folded = 1usize; // our retired segment, covered by the snapshot
+        let mut dead_segments = Vec::new();
+        for file in seglog::log_files(dir)? {
+            if file == own || file == retired {
+                continue;
+            }
+            let name = file.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let is_checkpoint = seglog::is_checkpoint(name);
+            let foldable = is_checkpoint
+                || seglog::is_sealed(name)
+                || seglog::segment_pid(name).is_some_and(|pid| !seglog::pid_alive(pid));
+            if !foldable {
+                continue;
+            }
+            let Some((records, _skipped)) = persist::load_records_opt(&file)? else {
+                continue;
+            };
+            for r in &records {
+                if r.version == RECORD_VERSION {
+                    merged.commit(r);
+                }
+            }
+            folded += 1;
+            if !is_checkpoint {
+                // The checkpoint is replaced by the rename below, never
+                // unlinked — only folded segments are.
+                dead_segments.push(file);
+            }
+        }
+        let frontier = merged.snapshot();
+        persist::rewrite(&dir.join(seglog::CHECKPOINT), &frontier)?;
+        // The checkpoint is durable; now the folded files are garbage.
+        let _ = std::fs::remove_file(&retired);
+        for p in &dead_segments {
+            let _ = std::fs::remove_file(p);
+        }
+        seglog::sweep_orphan_tmps(dir);
+        let _ = seglog::fsync_dir(dir);
         self.appended.store(0, Ordering::Relaxed);
+        self.counters.record_compaction();
         self.scope.lock().expect("tunecache scope poisoned").instant(
             0,
             "compact",
             0.0,
             &[],
-            &[("records", self.store.total_records() as f64)],
+            &[
+                ("records", frontier.len() as f64),
+                ("segments_folded", folded as f64),
+            ],
         );
         Ok(())
     }
@@ -295,4 +531,28 @@ impl TuneCache {
     pub fn num_workloads(&self) -> usize {
         self.store.num_workloads()
     }
+}
+
+impl Drop for TuneCache {
+    /// Clean close of this instance's segment: unlink it if nothing
+    /// was appended, else seal it so any compactor may fold it without
+    /// waiting for this pid to exit.
+    fn drop(&mut self) {
+        if let Backing::Segmented { writer, .. } = &self.backing {
+            if let Ok(mut w) = writer.lock() {
+                w.close();
+            }
+        }
+    }
+}
+
+/// Accumulator for one [`TuneCache::merge_dir`] pass.
+struct MergedDir {
+    store: TuneStore,
+    index: WorkloadIndex,
+    counters: CacheCounters,
+    segments: usize,
+    stale: usize,
+    skipped: usize,
+    evicted: usize,
 }

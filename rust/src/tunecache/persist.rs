@@ -3,9 +3,12 @@
 //! One JSON object per line, append-on-commit: a crash loses at most
 //! the final partial line, which the tolerant loader skips.  Repeated
 //! runs append duplicate and later-evicted lines; [`super::TuneCache`]
-//! compacts the file back to the live top-k frontier once the append
-//! debt grows.  Hashes are hex *strings* because the JSON number model
-//! (f64) cannot carry a full 64-bit value.
+//! compacts back to the live top-k frontier once the append debt
+//! grows.  The line format is shared by legacy single-file logs and
+//! the segment/checkpoint files of a [`super::seglog`] cache
+//! directory — [`load_log`] reads either.  Hashes are hex *strings*
+//! because the JSON number model (f64) cannot carry a full 64-bit
+//! value.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -159,20 +162,74 @@ pub fn load_records(path: &Path) -> Result<(Vec<TuneRecord>, usize)> {
     Ok((records, skipped))
 }
 
-/// Atomically rewrite `path` to exactly `records` (compaction): write a
-/// sibling temp file, then rename over the original.
-pub fn rewrite(path: &Path, records: &[TuneRecord]) -> Result<()> {
-    let tmp = path.with_extension("tmp");
-    {
-        let file =
-            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
-        let mut w = std::io::BufWriter::new(file);
-        for r in records {
-            writeln!(w, "{}", encode_line(r))?;
-        }
-        w.flush()?;
+/// Like [`load_records`], but a file that vanished between listing and
+/// opening reads as `None`: a concurrent compactor may fold a dead
+/// segment away mid-merge, and its records are then in the checkpoint.
+pub fn load_records_opt(path: &Path) -> Result<Option<(Vec<TuneRecord>, usize)>> {
+    if !path.exists() {
+        return Ok(None);
     }
+    match load_records(path) {
+        Ok(out) => Ok(Some(out)),
+        Err(e)
+            if e.downcast_ref::<std::io::Error>()
+                .is_some_and(|io| io.kind() == std::io::ErrorKind::NotFound) =>
+        {
+            Ok(None)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Load every parseable record from a tuning log — a legacy single-file
+/// JSONL log *or* a segmented cache directory (checkpoint plus all
+/// segments, in [`super::seglog::log_files`] order).  Returns records
+/// and the malformed-line count.  Duplicates and evicted lines are
+/// returned as-is; callers wanting the frontier run them through
+/// admission.
+pub fn load_log(path: &Path) -> Result<(Vec<TuneRecord>, usize)> {
+    if !path.is_dir() {
+        return load_records(path);
+    }
+    let mut records = Vec::new();
+    let mut skipped = 0usize;
+    for file in super::seglog::log_files(path)? {
+        if let Some((mut r, s)) = load_records_opt(&file)? {
+            records.append(&mut r);
+            skipped += s;
+        }
+    }
+    Ok((records, skipped))
+}
+
+/// Atomically rewrite `path` to exactly `records` (compaction): write a
+/// uniquely-named sibling temp file, fsync it, rename it over the
+/// original, then fsync the parent directory so the rename itself is
+/// durable.  The unique temp name (pid + nonce) keeps concurrent
+/// compactors from clobbering each other's in-flight temp; a crash
+/// strands at most an orphaned `*.tmp-*` sibling that no reader ever
+/// merges.
+pub fn rewrite(path: &Path, records: &[TuneRecord]) -> Result<()> {
+    let tmp = super::seglog::unique_tmp(path);
+    let file = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    for r in records {
+        writeln!(w, "{}", encode_line(r))?;
+    }
+    w.flush()?;
+    // Rename-before-sync can surface as an *empty* log after a power
+    // loss: the rename's metadata may land while the data does not.
+    // Force the contents down first; only then is the rename an atomic
+    // old-or-new switch.
+    w.get_ref().sync_all().with_context(|| format!("syncing {tmp:?}"))?;
+    drop(w);
     std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            super::seglog::fsync_dir(parent)
+                .with_context(|| format!("syncing directory {parent:?}"))?;
+        }
+    }
     Ok(())
 }
 
@@ -322,5 +379,26 @@ mod tests {
         let (back2, skipped2) = load_records(&path).unwrap();
         assert_eq!(back2, records);
         assert_eq!(skipped2, 1);
+    }
+
+    #[test]
+    fn rewrite_uses_unique_temp_names_and_cleans_up() {
+        let dir = std::env::temp_dir().join("moses_tunecache_rewrite_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.jsonl");
+        rewrite(&path, &[sample()]).unwrap();
+        rewrite(&path, &[sample()]).unwrap();
+        // No temp droppings survive a successful rewrite, and the
+        // temp name is not the old fixed `.tmp` that two processes
+        // could collide on.
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, ["log.jsonl"]);
+        let (back, skipped) = load_records(&path).unwrap();
+        assert_eq!(back, vec![sample()]);
+        assert_eq!(skipped, 0);
     }
 }

@@ -1,0 +1,449 @@
+//! Segmented append-log layout for a multi-writer tunecache directory.
+//!
+//! A cache *directory* holds one `checkpoint.jsonl` (the folded
+//! frontier, rewritten atomically by compaction) plus any number of
+//! `seg-<pid>-<nonce>.jsonl` segments.  Every writer owns exactly one
+//! segment exclusively (`create_new` guarantees no two writers share a
+//! file), so appends never interleave across processes and no writer
+//! can clobber another's tail.  Readers merge *all* log files through
+//! top-k admission on open; nothing here requires cross-process
+//! coordination except compaction, which folds dead segments into the
+//! checkpoint under an advisory lockfile.
+//!
+//! Segment lifecycle:
+//!
+//! * **live** — `seg-<pid>-<nonce>.jsonl`, exclusively appended by the
+//!   writer that created it.  Never folded or deleted by anyone else
+//!   while the owning pid is alive.
+//! * **sealed** — `seg-<pid>-<nonce>.sealed.jsonl`, renamed on clean
+//!   close ([`SegmentWriter::close`]).  Foldable by any compactor.
+//! * **orphaned** — a live-named segment whose owning pid is dead (the
+//!   writer crashed before sealing).  Foldable: its owner can no longer
+//!   append.
+//!
+//! Empty segments are unlinked on clean close so read-mostly sessions
+//! do not litter the directory.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+/// File name of the folded frontier inside a cache directory.  Sorts
+/// before `seg-*` lexicographically and is listed first by
+/// [`log_files`] regardless, so merge order is deterministic.
+pub const CHECKPOINT: &str = "checkpoint.jsonl";
+
+/// Advisory compaction lockfile name.
+pub const LOCK: &str = "compact.lock";
+
+const SEG_PREFIX: &str = "seg-";
+const SEG_SUFFIX: &str = ".jsonl";
+const SEALED_SUFFIX: &str = ".sealed.jsonl";
+
+/// A lock older than this is presumed leaked even when the holder pid
+/// cannot be proven dead (pid liveness is unknowable off-linux, and
+/// pids recycle): compaction is short, so ten minutes is generous.
+const LOCK_STALE_AFTER: std::time::Duration = std::time::Duration::from_secs(600);
+
+/// Process-global nonce so several caches in one process never race on
+/// a segment (or temp-file) name.
+static NONCE: AtomicU64 = AtomicU64::new(0);
+
+fn next_nonce() -> u64 {
+    NONCE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Durability knob for segment appends.  Compaction always syncs its
+/// checkpoint regardless — this only governs the per-record append.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// Appends go through the OS page cache (the pre-segmented-log
+    /// behavior): an OS crash can lose the unsynced tail, a mere
+    /// process crash cannot.
+    #[default]
+    Never,
+    /// `sync_data` after every appended record: a committed record is
+    /// durable when `commit` returns, at the cost of one fsync per
+    /// admitted record.
+    Always,
+}
+
+impl FsyncPolicy {
+    /// Parse a CLI-facing policy name.
+    pub fn from_name(name: &str) -> Option<FsyncPolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "never" | "off" => Some(FsyncPolicy::Never),
+            "always" | "on" => Some(FsyncPolicy::Always),
+            _ => None,
+        }
+    }
+}
+
+/// Is this file name the checkpoint?
+pub fn is_checkpoint(name: &str) -> bool {
+    name == CHECKPOINT
+}
+
+/// Does this file name denote any log file (checkpoint or segment)
+/// that [`log_files`] would merge?
+fn is_log_name(name: &str) -> bool {
+    is_checkpoint(name) || (name.starts_with(SEG_PREFIX) && name.ends_with(SEG_SUFFIX))
+}
+
+/// Was this segment sealed by a clean close (foldable by anyone)?
+pub fn is_sealed(name: &str) -> bool {
+    name.starts_with(SEG_PREFIX) && name.ends_with(SEALED_SUFFIX)
+}
+
+/// The pid embedded in a `seg-<pid>-<nonce>[.sealed].jsonl` name.
+pub fn segment_pid(name: &str) -> Option<u32> {
+    let rest = name.strip_prefix(SEG_PREFIX)?;
+    let (pid, _) = rest.split_once('-')?;
+    pid.parse().ok()
+}
+
+/// Best-effort pid liveness.  On linux, `/proc/<pid>` existence is
+/// authoritative enough for garbage collection (a recycled pid merely
+/// delays folding).  Elsewhere we cannot tell, so claim *alive* — the
+/// conservative answer: an unfoldable segment is still merged on open,
+/// it is only garbage-collected later.
+pub fn pid_alive(pid: u32) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+        true
+    }
+}
+
+/// Every log file of a cache directory in deterministic merge order:
+/// the checkpoint first (oldest data — later segments win ties through
+/// admission), then segments sorted by file name.
+pub fn log_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut segments = Vec::new();
+    let mut checkpoint = None;
+    let rd = std::fs::read_dir(dir).with_context(|| format!("listing {dir:?}"))?;
+    for entry in rd {
+        let entry = entry.with_context(|| format!("listing {dir:?}"))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if is_checkpoint(name) {
+            checkpoint = Some(entry.path());
+        } else if is_log_name(name) {
+            segments.push(entry.path());
+        }
+    }
+    segments.sort();
+    let mut files = Vec::with_capacity(segments.len() + 1);
+    files.extend(checkpoint);
+    files.extend(segments);
+    Ok(files)
+}
+
+/// A unique sibling temp name for atomically rewriting `path`:
+/// `<name>.tmp-<pid>-<nonce>`.  Unique per process (pid) and per call
+/// (nonce), so concurrent compactors can never clobber each other's
+/// in-flight temp file; a crash strands at most one orphan, which
+/// [`sweep_orphan_tmps`] removes once its owner is dead.  The name
+/// matches neither the checkpoint nor the segment pattern, so readers
+/// never merge a half-written temp.
+pub fn unique_tmp(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    path.with_file_name(format!(
+        "{name}.tmp-{}-{}",
+        std::process::id(),
+        next_nonce()
+    ))
+}
+
+/// The owning pid of a `*.tmp-<pid>-<nonce>` orphan, if the name is one.
+fn tmp_pid(name: &str) -> Option<u32> {
+    let (_, rest) = name.rsplit_once(".tmp-")?;
+    let (pid, _) = rest.split_once('-')?;
+    pid.parse().ok()
+}
+
+/// Remove temp files stranded by crashed compactors (owner pid dead).
+/// Best-effort: a vanished or unremovable file is someone else's
+/// progress, not an error.
+pub fn sweep_orphan_tmps(dir: &Path) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(pid) = tmp_pid(name) {
+            if !pid_alive(pid) {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+/// Flush directory metadata (creations, renames, unlinks) to disk.  On
+/// non-unix platforms directories cannot be opened for syncing; the
+/// call degrades to a no-op there.
+pub fn fsync_dir(dir: &Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        File::open(dir)?.sync_all()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+        Ok(())
+    }
+}
+
+/// One writer's exclusively-owned append handle onto its segment.
+pub struct SegmentWriter {
+    dir: PathBuf,
+    path: PathBuf,
+    file: File,
+    /// Whether any append has landed — an untouched segment is simply
+    /// unlinked on close instead of sealed.
+    wrote: bool,
+}
+
+impl SegmentWriter {
+    /// Create a fresh exclusively-owned segment in `dir`.  `create_new`
+    /// makes ownership unambiguous even across pid recycling: a
+    /// leftover same-named file just pushes us to the next nonce.
+    pub fn create(dir: &Path) -> Result<SegmentWriter> {
+        let pid = std::process::id();
+        for _ in 0..1024 {
+            let path = dir.join(format!("{SEG_PREFIX}{pid}-{}{SEG_SUFFIX}", next_nonce()));
+            match OpenOptions::new().append(true).create_new(true).open(&path) {
+                Ok(file) => {
+                    return Ok(SegmentWriter {
+                        dir: dir.to_path_buf(),
+                        path,
+                        file,
+                        wrote: false,
+                    })
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+                Err(e) => {
+                    return Err(e).with_context(|| format!("creating segment {path:?}"))
+                }
+            }
+        }
+        anyhow::bail!("could not allocate a unique segment name under {dir:?}")
+    }
+
+    /// The segment this writer owns.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one encoded line.  On an I/O error the handle is reopened
+    /// and the write retried once; the retry leads with a newline so a
+    /// torn first attempt is terminated into a skippable partial line
+    /// instead of corrupting the retried record.
+    pub fn append(&mut self, line: &str, fsync: FsyncPolicy) -> std::io::Result<()> {
+        if let Err(first) = self.try_append(line, false, fsync) {
+            self.reopen().map_err(|_| first)?;
+            self.try_append(line, true, fsync)?;
+        }
+        self.wrote = true;
+        Ok(())
+    }
+
+    fn try_append(
+        &mut self,
+        line: &str,
+        lead_newline: bool,
+        fsync: FsyncPolicy,
+    ) -> std::io::Result<()> {
+        if lead_newline {
+            self.file.write_all(b"\n")?;
+        }
+        self.file.write_all(line.as_bytes())?;
+        self.file.write_all(b"\n")?;
+        if fsync == FsyncPolicy::Always {
+            self.file.sync_data()?;
+        }
+        Ok(())
+    }
+
+    fn reopen(&mut self) -> std::io::Result<()> {
+        self.file = OpenOptions::new().create(true).append(true).open(&self.path)?;
+        Ok(())
+    }
+
+    /// Swap in a fresh segment (compaction rotates *before* folding so
+    /// concurrent commits land in the new segment) and return the
+    /// retired segment's path for the caller to fold away.
+    pub fn rotate(&mut self) -> Result<PathBuf> {
+        let fresh = SegmentWriter::create(&self.dir)?;
+        let old = std::mem::replace(self, fresh);
+        Ok(old.path)
+    }
+
+    /// Clean close: unlink an untouched segment, otherwise seal it
+    /// (rename to `*.sealed.jsonl`) so compactors may fold it without
+    /// waiting for this pid to die.  Best-effort — an unsealed segment
+    /// is still correct, it just garbage-collects later.
+    pub fn close(&mut self) {
+        if !self.wrote {
+            let _ = std::fs::remove_file(&self.path);
+            return;
+        }
+        let _ = self.file.flush();
+        if let Some(name) = self.path.file_name().and_then(|n| n.to_str()) {
+            if let Some(stem) = name.strip_suffix(SEG_SUFFIX) {
+                let sealed = self.path.with_file_name(format!("{stem}{SEALED_SUFFIX}"));
+                let _ = std::fs::rename(&self.path, &sealed);
+            }
+        }
+    }
+}
+
+/// RAII advisory compaction lock: a `compact.lock` file created with
+/// `create_new`, holding the owner's pid.  Dropped (best-effort
+/// unlinked) when the guard goes out of scope — including on unwind,
+/// so a failed compaction never wedges the directory.
+pub struct CompactLock {
+    path: PathBuf,
+}
+
+impl Drop for CompactLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Try to take the advisory compaction lock.  `Ok(None)` means another
+/// live compactor holds it — callers skip compaction rather than wait,
+/// because compaction is an optimization, never required for
+/// correctness.  A stale lock (holder pid dead, or untouched for over
+/// ten minutes) is broken and the acquisition retried once.
+pub fn try_lock(dir: &Path) -> Result<Option<CompactLock>> {
+    let path = dir.join(LOCK);
+    for attempt in 0..2 {
+        match OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{}", std::process::id());
+                return Ok(Some(CompactLock { path }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                if attempt == 0 && lock_is_stale(&path) {
+                    let _ = std::fs::remove_file(&path);
+                    continue;
+                }
+                return Ok(None);
+            }
+            Err(e) => return Err(e).with_context(|| format!("creating {path:?}")),
+        }
+    }
+    Ok(None)
+}
+
+/// A lock is stale when its recorded holder pid is provably dead, or —
+/// failing that (unparseable, or liveness unknowable) — when the file
+/// has sat untouched far longer than any compaction runs.
+fn lock_is_stale(path: &Path) -> bool {
+    if let Ok(contents) = std::fs::read_to_string(path) {
+        if let Ok(pid) = contents.trim().parse::<u32>() {
+            if cfg!(target_os = "linux") {
+                return !pid_alive(pid);
+            }
+        }
+    }
+    match std::fs::metadata(path).and_then(|m| m.modified()) {
+        Ok(mtime) => match mtime.elapsed() {
+            Ok(age) => age > LOCK_STALE_AFTER,
+            Err(_) => false,
+        },
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("moses_seglog_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn names_parse_and_filter() {
+        assert!(is_checkpoint("checkpoint.jsonl"));
+        assert!(!is_checkpoint("seg-1-2.jsonl"));
+        assert_eq!(segment_pid("seg-1234-7.jsonl"), Some(1234));
+        assert_eq!(segment_pid("seg-1234-7.sealed.jsonl"), Some(1234));
+        assert!(is_sealed("seg-1234-7.sealed.jsonl"));
+        assert!(!is_sealed("seg-1234-7.jsonl"));
+        assert_eq!(segment_pid("checkpoint.jsonl"), None);
+        assert_eq!(tmp_pid("checkpoint.jsonl.tmp-99-3"), Some(99));
+        assert_eq!(tmp_pid("seg-1-2.jsonl"), None);
+        // Temp files match no log pattern: readers never merge them.
+        assert!(!is_log_name("checkpoint.jsonl.tmp-99-3"));
+        assert!(is_log_name("seg-1-2.sealed.jsonl"));
+    }
+
+    #[test]
+    fn log_files_lists_checkpoint_first_then_sorted_segments() {
+        let dir = tmp_dir("order");
+        for name in ["seg-2-0.jsonl", "checkpoint.jsonl", "seg-1-0.sealed.jsonl", "junk.txt"] {
+            std::fs::write(dir.join(name), "").unwrap();
+        }
+        let files: Vec<String> = log_files(&dir)
+            .unwrap()
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(files, ["checkpoint.jsonl", "seg-1-0.sealed.jsonl", "seg-2-0.jsonl"]);
+    }
+
+    #[test]
+    fn writers_own_distinct_segments_and_seal_on_close() {
+        let dir = tmp_dir("writers");
+        let mut a = SegmentWriter::create(&dir).unwrap();
+        let mut b = SegmentWriter::create(&dir).unwrap();
+        assert_ne!(a.path(), b.path());
+        a.append("line-a", FsyncPolicy::Never).unwrap();
+        a.close();
+        b.close();
+        // a sealed (it wrote), b unlinked (it did not).
+        let files = log_files(&dir).unwrap();
+        assert_eq!(files.len(), 1);
+        assert!(is_sealed(files[0].file_name().unwrap().to_str().unwrap()));
+        assert_eq!(std::fs::read_to_string(&files[0]).unwrap(), "line-a\n");
+    }
+
+    #[test]
+    fn lock_excludes_and_releases() {
+        let dir = tmp_dir("lock");
+        let lock = try_lock(&dir).unwrap().expect("first lock");
+        // Held by a live pid (ours): second acquisition must back off.
+        assert!(try_lock(&dir).unwrap().is_none());
+        drop(lock);
+        assert!(try_lock(&dir).unwrap().is_some(), "released on drop");
+    }
+
+    #[test]
+    fn stale_lock_from_dead_pid_is_broken() {
+        if !cfg!(target_os = "linux") {
+            return; // pid liveness unknowable; covered by the age path
+        }
+        let dir = tmp_dir("stale-lock");
+        // No pid on this box plausibly has this id (pid_max caps well
+        // below u32::MAX).
+        std::fs::write(dir.join(LOCK), format!("{}\n", u32::MAX)).unwrap();
+        let lock = try_lock(&dir).unwrap();
+        assert!(lock.is_some(), "dead holder's lock must be stolen");
+    }
+}

@@ -6,7 +6,13 @@
 //! one store.  Within a workload, records are grouped per device and
 //! kept sorted by latency, with the worst evicted beyond `topk` — the
 //! store holds the *useful frontier* of tuning history, not the full
-//! log (the JSONL file in [`super::persist`] is the log).
+//! log (the [`super::seglog`] segment files, in the [`super::persist`]
+//! line format, are the log).  Top-k admission doubles as the
+//! merge-on-open policy: replaying any set of segments through
+//! [`TuneStore::commit`] in any order converges to a latency-identical
+//! frontier (ordering matters only for exact-tie knob vectors at the
+//! eviction boundary), which is what lets concurrent writers share one
+//! cache directory without coordinating on reads.
 //!
 //! Sharding by workload (not by the combined key) is deliberate: all
 //! devices' records for one workload live in one shard, so the

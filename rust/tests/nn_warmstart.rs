@@ -146,27 +146,29 @@ fn stale_version_stamps_are_dropped_on_load_and_never_seed() {
     let path = tmp("stale.jsonl");
     let _ = std::fs::remove_file(&path);
 
-    // Write a log of records produced under a *different*
+    // Write a single-file log of records produced under a *different*
     // featurizer/simulator version.
     let similar = conv("nn.similar", 48);
+    let src_cache = Arc::new(TuneCache::in_memory(8));
     {
-        let cache = TuneCache::open(&path, 8).unwrap();
         let mut src = AutoTuner::builder(presets::rtx_2060())
             .config(&cfg(5))
-            .cache(Arc::new(cache))
+            .cache(src_cache.clone())
             .build()
             .unwrap();
         src.tune(std::slice::from_ref(&similar)).unwrap();
     }
-    let (mut records, _) = persist::load_records(&path).unwrap();
+    let mut records = src_cache.snapshot();
     assert!(!records.is_empty());
     for r in &mut records {
         r.version = RECORD_VERSION + 1;
     }
     persist::rewrite(&path, &records).unwrap();
 
-    // Reopen: every record is stale — dropped from store and index.
+    // Reopen: the single-file log imports via the legacy read-only
+    // path, and every record is stale — dropped from store and index.
     let cache = Arc::new(TuneCache::open(&path, 8).unwrap());
+    assert!(path.is_file(), "legacy import must leave the file a file");
     assert_eq!(cache.total_records(), 0);
     assert_eq!(cache.stats().stale_dropped, records.len());
 

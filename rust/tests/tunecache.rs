@@ -1,7 +1,8 @@
-//! tunecache integration: key stability, top-k eviction, JSONL
+//! tunecache integration: key stability, top-k eviction, segmented-log
 //! persistence across cache generations, and end-to-end warm start
 //! through the AutoTuner — repeats are measurement-free, cross-device
-//! records seed the target device's evolutionary search.
+//! records seed the target device's evolutionary search.  (Crash and
+//! multi-writer scenarios live in `tunecache_crash.rs`.)
 
 use std::sync::Arc;
 
@@ -63,14 +64,14 @@ fn workload_key_is_name_invariant_and_device_aware() {
 
 #[test]
 fn persist_roundtrip_tolerance_and_compaction() {
-    let path = tmp("roundtrip.jsonl");
-    let _ = std::fs::remove_file(&path);
+    let dir = tmp("roundtrip-cache");
+    let _ = std::fs::remove_dir_all(&dir);
     let task = conv_task("p.conv");
     let gen = SpaceGenerator::new(task.geometry());
     let mut rng = Rng::new(2);
     let scheds = gen.sample_distinct(&mut rng, 6);
     {
-        let cache = TuneCache::open(&path, 8).unwrap();
+        let cache = TuneCache::open(&dir, 8).unwrap();
         for (i, s) in scheds.iter().enumerate() {
             for arch in [presets::rtx_2060(), presets::jetson_tx2()] {
                 let key = WorkloadKey::new(&task, &arch);
@@ -86,27 +87,40 @@ fn persist_roundtrip_tolerance_and_compaction() {
             }
         }
         assert_eq!(cache.total_records(), 12);
-    }
+    } // clean close seals this generation's segment
 
-    // A new cache generation sees the identical frontier.
-    let reopened = TuneCache::open(&path, 8).unwrap();
+    // A new cache generation merges the sealed segment and sees the
+    // identical frontier.
+    let reopened = TuneCache::open(&dir, 8).unwrap();
     assert_eq!(reopened.total_records(), 12);
     let key = WorkloadKey::new(&task, &presets::rtx_2060());
     assert_eq!(reopened.records(&key).len(), 6);
     assert!((reopened.best(&key).unwrap().latency_s - 1e-3).abs() < 1e-15);
+    drop(reopened);
 
-    // A torn append (crash mid-write) must not poison the file.
+    // A torn append (crash mid-write) must not poison the store: plant
+    // garbage at the tail of the surviving segment.
     {
         use std::io::Write;
-        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        let seg = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .find(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("seg-"))
+            })
+            .expect("a sealed segment should survive the clean closes");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&seg).unwrap();
         writeln!(f, "{{\"workload\": trunca").unwrap();
     }
-    let tolerant = TuneCache::open(&path, 8).unwrap();
+    let tolerant = TuneCache::open(&dir, 8).unwrap();
     assert_eq!(tolerant.total_records(), 12);
 
-    // Compaction rewrites to exactly the live frontier, dropping junk.
+    // The open-time purge (and explicit compaction) fold everything
+    // into the checkpoint, dropping the junk line from disk for good.
     tolerant.compact().unwrap();
-    let (records, skipped) = persist::load_records(&path).unwrap();
+    let (records, skipped) = persist::load_log(&dir).unwrap();
     assert_eq!(records.len(), 12);
     assert_eq!(skipped, 0);
     // And the cache still appends fine after compaction.
@@ -120,7 +134,7 @@ fn persist_roundtrip_tolerance_and_compaction() {
         3.0,
         64
     )));
-    let (records2, _) = persist::load_records(&path).unwrap();
+    let (records2, _) = persist::load_log(&dir).unwrap();
     assert_eq!(records2.len(), 13);
 }
 

@@ -1,0 +1,265 @@
+//! Crash-safety and multi-writer integration for the segmented
+//! tunecache: torn temp files and dead writers' segments are recovered,
+//! an interrupted compaction (temp written, rename never happened,
+//! advisory lock leaked) loses nothing, two cache instances appending
+//! to one directory merge without record loss, and a legacy single-file
+//! log imports read-only.
+
+use std::path::{Path, PathBuf};
+
+use moses::device::presets;
+use moses::program::{SpaceGenerator, Subgraph, SubgraphKind};
+use moses::tunecache::{persist, TuneCache, TuneRecord, WorkloadKey};
+use moses::util::rng::Rng;
+
+fn conv(name: &str, cout: usize) -> Subgraph {
+    Subgraph::new(
+        name,
+        SubgraphKind::Conv2d {
+            n: 1, h: 28, w: 28, cin: 64, cout, kh: 3, kw: 3, stride: 1, pad: 1,
+        },
+    )
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("moses_tunecache_crash_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// `n` distinct-schedule records for `(task, arch)` with latencies
+/// `base, 2*base, ...` — so `base` is always the per-key best.
+fn records_for(
+    task: &Subgraph,
+    arch: &moses::device::DeviceArch,
+    n: usize,
+    seed: u64,
+    base_latency: f64,
+) -> Vec<TuneRecord> {
+    let gen = SpaceGenerator::new(task.geometry());
+    let mut rng = Rng::new(seed);
+    let scheds = gen.sample_distinct(&mut rng, n);
+    assert_eq!(scheds.len(), n, "schedule space too small for this test");
+    scheds
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            TuneRecord::new(
+                WorkloadKey::new(task, arch),
+                task.descriptor(),
+                &arch.name,
+                s,
+                base_latency * (i + 1) as f64,
+                2.0,
+                64,
+            )
+        })
+        .collect()
+}
+
+/// A pid no process on this box can hold (pid_max caps far below).
+const DEAD_PID: u32 = u32::MAX;
+
+fn write_file(path: &Path, contents: &str) {
+    std::fs::write(path, contents).unwrap();
+}
+
+#[test]
+fn torn_temp_and_dead_writer_segments_are_recovered() {
+    let dir = tmp_dir("torn");
+    let task = conv("crash.conv", 64);
+    let arch = presets::rtx_2060();
+    let recs = records_for(&task, &arch, 4, 1, 1e-3);
+    {
+        let cache = TuneCache::open(&dir, 8).unwrap();
+        for r in &recs {
+            assert!(cache.commit(r.clone()));
+        }
+    } // clean close seals the segment
+
+    // A compactor crashed mid-rewrite: a torn temp sits beside the log.
+    let torn_tmp = dir.join(format!("checkpoint.jsonl.tmp-{DEAD_PID}-0"));
+    write_file(&torn_tmp, "{\"workload\": trunc");
+    // A writer crashed before sealing: its dead-pid segment carries one
+    // good record and a torn tail.
+    let other = records_for(&conv("crash.other", 96), &arch, 1, 2, 5e-4);
+    let dead_seg = dir.join(format!("seg-{DEAD_PID}-1.jsonl"));
+    write_file(
+        &dead_seg,
+        &format!("{}\n{{\"workload\": trunc", persist::encode_line(&other[0])),
+    );
+
+    // Merge-on-open admits every record; the torn temp matches no log
+    // pattern and is never read as one.
+    let cache = TuneCache::open(&dir, 8).unwrap();
+    assert_eq!(cache.total_records(), recs.len() + 1);
+    let key = WorkloadKey::new(&task, &arch);
+    assert!((cache.best(&key).unwrap().latency_s - 1e-3).abs() < 1e-15);
+
+    if !cfg!(target_os = "linux") {
+        return; // dead-pid detection (and thus GC) needs /proc
+    }
+    // The torn line triggered the open-time purge: the crashed writer's
+    // segment folded into the checkpoint, the orphan temp was swept.
+    assert!(!torn_tmp.exists(), "orphaned temp must be swept");
+    assert!(!dead_seg.exists(), "dead writer's segment must be folded away");
+    drop(cache);
+    let (records, skipped) = persist::load_log(&dir).unwrap();
+    assert_eq!(records.len(), recs.len() + 1, "no admitted record may be lost");
+    assert_eq!(skipped, 0, "junk lines must be purged from disk");
+}
+
+#[test]
+fn interrupted_compaction_and_stale_lock_lose_nothing() {
+    let dir = tmp_dir("interrupted");
+    let task = conv("crash.rn", 64);
+    let arch = presets::jetson_tx2();
+    let recs = records_for(&task, &arch, 5, 3, 1e-3);
+    {
+        let cache = TuneCache::open(&dir, 8).unwrap();
+        for r in &recs {
+            assert!(cache.commit(r.clone()));
+        }
+    }
+    // A compactor died after writing its temp checkpoint but before the
+    // rename.  The temp holds a strict subset — trusting it would lose
+    // records; the unique `.tmp-*` name keeps it invisible to readers.
+    let stranded = dir.join(format!("checkpoint.jsonl.tmp-{DEAD_PID}-7"));
+    write_file(&stranded, &format!("{}\n", persist::encode_line(&recs[0])));
+    // ...and it leaked its advisory lock.
+    write_file(&dir.join("compact.lock"), &format!("{DEAD_PID}\n"));
+
+    // Reopen: the abandoned temp is ignored, nothing is lost.
+    let cache = TuneCache::open(&dir, 8).unwrap();
+    assert_eq!(cache.total_records(), recs.len());
+
+    if !cfg!(target_os = "linux") {
+        return; // stealing the dead holder's lock needs /proc liveness
+    }
+    // Compaction steals the stale lock, folds the sealed segment into a
+    // durable checkpoint, sweeps the orphan temp, releases the lock.
+    cache.compact().unwrap();
+    assert!(dir.join("checkpoint.jsonl").is_file());
+    assert!(!stranded.exists(), "orphaned temp must be swept");
+    assert!(!dir.join("compact.lock").exists(), "lock must be released");
+    let (records, skipped) = persist::load_log(&dir).unwrap();
+    assert_eq!(records.len(), recs.len());
+    assert_eq!(skipped, 0);
+    let best = records.iter().map(|r| r.latency_s).fold(f64::INFINITY, f64::min);
+    assert!((best - 1e-3).abs() < 1e-15);
+}
+
+#[test]
+fn two_writers_share_one_directory_without_record_loss() {
+    let dir = tmp_dir("two-writers");
+    let arch_a = presets::rtx_2060();
+    let arch_b = presets::jetson_tx2();
+    let task_a = conv("tw.a", 64);
+    let task_b = conv("tw.b", 96);
+    let task_c = conv("tw.c", 128);
+    let recs_a = records_for(&task_a, &arch_a, 5, 4, 1e-3);
+    let recs_b = records_for(&task_b, &arch_b, 5, 5, 2e-3);
+    let recs_c = records_for(&task_c, &arch_b, 3, 6, 3e-3);
+
+    // Two instances (stand-ins for two processes) on one directory,
+    // each appending to its own exclusively-owned segment.
+    let a = TuneCache::open(&dir, 8).unwrap();
+    let b = TuneCache::open(&dir, 8).unwrap();
+    for (ra, rb) in recs_a.iter().zip(&recs_b) {
+        assert!(a.commit(ra.clone()));
+        assert!(b.commit(rb.clone()));
+    }
+    // One writer compacts mid-flight: it may fold only its own rotated
+    // segment (covered by its in-memory frontier) — the other's live
+    // segment must survive untouched.
+    a.compact().unwrap();
+    for r in &recs_c {
+        assert!(b.commit(r.clone()));
+    }
+    drop(a);
+    drop(b);
+
+    // A third open merges checkpoint + both writers' output: zero
+    // admitted records lost across append + compaction + reopen.
+    let merged = TuneCache::open(&dir, 8).unwrap();
+    assert_eq!(
+        merged.total_records(),
+        recs_a.len() + recs_b.len() + recs_c.len(),
+        "merge-on-open lost records"
+    );
+    let ka = WorkloadKey::new(&task_a, &arch_a);
+    let kb = WorkloadKey::new(&task_b, &arch_b);
+    let kc = WorkloadKey::new(&task_c, &arch_b);
+    assert!((merged.best(&ka).unwrap().latency_s - 1e-3).abs() < 1e-15);
+    assert!((merged.best(&kb).unwrap().latency_s - 2e-3).abs() < 1e-15);
+    assert_eq!(merged.records(&kc).len(), recs_c.len());
+}
+
+#[test]
+fn legacy_single_file_log_imports_read_only() {
+    let parent = std::env::temp_dir().join("moses_tunecache_crash_it");
+    std::fs::create_dir_all(&parent).unwrap();
+    let path = parent.join("legacy.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let task = conv("legacy.conv", 64);
+    let arch = presets::rtx_2060();
+    let recs = records_for(&task, &arch, 4, 7, 1e-3);
+    persist::rewrite(&path, &recs).unwrap();
+    let before = std::fs::read(&path).unwrap();
+
+    let cache = TuneCache::open(&path, 8).unwrap();
+    assert!(path.is_file(), "legacy import must leave the file a file");
+    assert_eq!(cache.total_records(), recs.len());
+    // Commits are admitted in memory but never written back...
+    let extra = records_for(&conv("legacy.other", 96), &arch, 1, 8, 5e-4);
+    assert!(cache.commit(extra[0].clone()));
+    assert_eq!(cache.total_records(), recs.len() + 1);
+    // ...and compaction is a no-op: the log is never mutated.
+    cache.compact().unwrap();
+    drop(cache);
+    assert_eq!(std::fs::read(&path).unwrap(), before, "legacy log must stay untouched");
+
+    // A reopen sees the original records only — by design: one shared
+    // file cannot host concurrent appends safely, so it is frozen.
+    let reopened = TuneCache::open(&path, 8).unwrap();
+    assert_eq!(reopened.total_records(), recs.len());
+}
+
+#[test]
+fn append_debt_triggers_directory_compaction() {
+    let dir = tmp_dir("debt");
+    let task = conv("debt.conv", 64);
+    let arch = presets::rtx_2060();
+    let gen = SpaceGenerator::new(task.geometry());
+    let mut rng = Rng::new(9);
+    let sched = gen.sample_distinct(&mut rng, 1)[0];
+    let key = WorkloadKey::new(&task, &arch);
+    let cache = TuneCache::builder(&dir).topk(1).open().unwrap();
+    // 80 successive improvements of one schedule: every commit is
+    // admitted (strictly better) and appended, but the live frontier
+    // stays at ONE record — classic append debt.
+    for i in 0..80u32 {
+        let lat = 1e-3 / f64::from(i + 1);
+        assert!(cache.commit(TuneRecord::new(
+            key,
+            task.descriptor(),
+            &arch.name,
+            &sched,
+            lat,
+            2.0,
+            64,
+        )));
+    }
+    assert_eq!(cache.total_records(), 1);
+    assert!(cache.stats().compactions >= 1, "append debt must trigger compaction");
+    assert!(dir.join("checkpoint.jsonl").is_file());
+    // Disk holds far fewer lines than the 80 appends...
+    let (records, skipped) = persist::load_log(&dir).unwrap();
+    assert_eq!(skipped, 0);
+    assert!(records.len() < 40, "log was not folded: {} lines", records.len());
+    drop(cache);
+    // ...and the surviving record is the true best.
+    let reopened = TuneCache::open(&dir, 1).unwrap();
+    assert_eq!(reopened.best(&key).unwrap().latency_s, 1e-3 / 80.0);
+}
