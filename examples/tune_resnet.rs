@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("== Moses end-to-end: ResNet-18, K80 -> TX2 ==\n");
     println!("[1/3] source cost model (simulated K80 Tenset corpus, AOT/PJRT training)");
+    #[allow(clippy::disallowed_methods)] // example-driver timing only
     let t0 = std::time::Instant::now();
     let pretrained = experiments::pretrained_source_checkpoint(&cfg)?;
     println!("      ready in {:.1}s (cached across runs)\n", t0.elapsed().as_secs_f64());

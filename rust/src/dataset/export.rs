@@ -13,6 +13,11 @@
 //! featurizer/simulator version, or whose schedule no longer validates
 //! against the task geometry, are skipped and counted.
 
+// Outside the deterministic planes (detlint [rules.unordered-collections]):
+// the HashMap is a per-device dedup index; corpus order comes from the
+// BTreeMap walk and record order, never from hash iteration.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::{BTreeMap, HashMap};
 
 use crate::program::Schedule;

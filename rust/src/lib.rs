@@ -92,6 +92,21 @@
 //! `(seed, jobs)` reproducibility guarantee extends to traces modulo
 //! wall-clock fields) and free when disabled — see the [`obs`] module
 //! docs for the two-clock duality and the determinism contract.
+//!
+//! ## The determinism contract, statically enforced
+//!
+//! `cargo run -p detlint --` (rust/tools/detlint, also run by CI and by
+//! its own self-check test) lints this tree against the contract:
+//! wall-clock reads, unordered collections and ambient nondeterminism
+//! are banned from the deterministic planes, and the per-module
+//! `unwrap()/expect()` count is ratcheted against
+//! `detlint-baseline.toml`.  See `detlint.toml` for the rule scopes
+//! and ROADMAP §ARCHITECTURE for the rule-by-rule rationale.
+
+// The simulator/engine is pure Rust end to end; nothing here needs
+// unsafe, and the determinism contract is easier to audit if that
+// stays true.
+#![deny(unsafe_code)]
 
 pub mod coordinator;
 pub mod costmodel;

@@ -337,11 +337,12 @@ pub fn table1(cfg: &ExpConfig) -> Result<Table> {
     let pretrained = pretrained_source_checkpoint(cfg)?;
 
     let mut header = vec!["CMAT (%)".to_string()];
+    let initial = |m: &str| m.chars().next().map(|c| c.to_ascii_uppercase()).unwrap_or('?');
     for m in &pairs_2060 {
-        header.push(format!("2060-{}", m.chars().next().unwrap().to_ascii_uppercase()));
+        header.push(format!("2060-{}", initial(m)));
     }
     for m in &pairs_tx2 {
-        header.push(format!("TX2-{}", m.chars().next().unwrap().to_ascii_uppercase()));
+        header.push(format!("TX2-{}", initial(m)));
     }
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new("Table 1 — CMAT vs Tenset-Finetune", &header_refs);

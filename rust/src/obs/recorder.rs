@@ -91,6 +91,10 @@ impl Recorder {
     }
 
     /// A live recorder; all clones feed one event buffer.
+    // obs/ is allowlisted for detlint's wall-clock rule: the wall
+    // epoch exists so spans can carry diag wall times alongside the
+    // virtual clock.
+    #[allow(clippy::disallowed_methods)]
     pub fn enabled() -> Recorder {
         Recorder {
             sink: Some(Arc::new(Sink {

@@ -213,6 +213,9 @@ impl TraceScope {
     /// Open a span at virtual time `vt_now_s`.  Disabled scopes return
     /// a dummy timer without touching the wall clock — the no-op cost
     /// is one branch.
+    // obs/ is allowlisted for detlint's wall-clock rule: span wall
+    // times are quarantined in the diag payload.
+    #[allow(clippy::disallowed_methods)]
     pub fn begin(&self, vt_now_s: f64) -> SpanTimer {
         if self.rec.is_enabled() {
             SpanTimer { wall: Some(Instant::now()), vt_start_s: vt_now_s }

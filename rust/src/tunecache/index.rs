@@ -24,6 +24,11 @@
 //! insert, so a latency-model change can never leak stale neighbors
 //! into a fresh session.
 
+// Outside the deterministic planes (detlint [rules.unordered-collections]):
+// neighbor queries sort by (distance, workload) before returning, so map
+// iteration order never reaches a session.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::sync::RwLock;
 

@@ -232,7 +232,11 @@ impl TuneCache {
                 None => continue,
             }
         }
-        let m = merged.expect("final merge attempt accepts partial reads");
+        // The final attempt accepts partial reads, so this is only
+        // reachable if that invariant breaks — propagate instead of
+        // panicking a tuning session over a cache directory.
+        let m = merged
+            .with_context(|| format!("could not assemble a consistent merge of {dir:?}"))?;
         if m.skipped > 0 {
             crate::warn!(
                 "tunecache: skipped {} malformed line(s) in {dir:?}",

@@ -160,6 +160,7 @@ pub fn unique_tmp(path: &Path) -> PathBuf {
         .unwrap_or_default();
     path.with_file_name(format!(
         "{name}.tmp-{}-{}",
+        // detlint: allow(ambient) -- the owner pid in the temp name is the durability design
         std::process::id(),
         next_nonce()
     ))
@@ -218,6 +219,7 @@ impl SegmentWriter {
     /// makes ownership unambiguous even across pid recycling: a
     /// leftover same-named file just pushes us to the next nonce.
     pub fn create(dir: &Path) -> Result<SegmentWriter> {
+        // detlint: allow(ambient) -- segment names embed the owner pid (exclusive-writer design)
         let pid = std::process::id();
         for _ in 0..1024 {
             let path = dir.join(format!("{SEG_PREFIX}{pid}-{}{SEG_SUFFIX}", next_nonce()));
@@ -331,6 +333,7 @@ pub fn try_lock(dir: &Path) -> Result<Option<CompactLock>> {
     for attempt in 0..2 {
         match OpenOptions::new().write(true).create_new(true).open(&path) {
             Ok(mut f) => {
+                // detlint: allow(ambient) -- the lock records its holder pid for dead-holder stealing
                 let _ = writeln!(f, "{}", std::process::id());
                 return Ok(Some(CompactLock { path }));
             }

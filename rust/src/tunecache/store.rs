@@ -18,6 +18,11 @@
 //! devices' records for one workload live in one shard, so the
 //! cross-device warm-start query is a single shard read.
 
+// Outside the deterministic planes (detlint [rules.unordered-collections]):
+// shard maps never leak iteration order into session results — drains that
+// feed deterministic consumers go through top-k admission or sorting.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::sync::RwLock;
 

@@ -7,6 +7,11 @@
 //! dated `BENCH_<date>.json` via [`Bencher::write_json`] — the artifact
 //! EXPERIMENTS.md §Perf and the CI perf upload are fed from.
 
+// The bench harness IS the wall clock: allowlisted for detlint's
+// wall-clock rule in detlint.toml and for clippy's disallowed-methods
+// cross-check here.
+#![allow(clippy::disallowed_methods)]
+
 use std::cell::RefCell;
 use std::io;
 use std::path::{Path, PathBuf};

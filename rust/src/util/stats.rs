@@ -50,7 +50,7 @@ pub fn coefficient_of_variation(xs: &[f64]) -> f64 {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -66,7 +66,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let n = xs.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut r = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -149,7 +149,7 @@ pub fn top_k_recall(pred: &[f64], truth: &[f64], k: usize) -> f64 {
     }
     let top_by = |xs: &[f64]| {
         let mut idx: Vec<usize> = (0..xs.len()).collect();
-        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
         idx.truncate(k);
         idx
     };

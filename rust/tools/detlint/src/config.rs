@@ -1,0 +1,277 @@
+//! Configuration loading for `detlint.toml` and `detlint-baseline.toml`.
+//!
+//! A minimal TOML-subset parser keeps the tool dependency-free: it
+//! supports `[dotted.section]` headers, `#` comments, and `key = value`
+//! lines whose value is a bool, an integer, a `"string"`, or a
+//! single-line `["array", "of", "strings"]`.  That is all the two files
+//! use; anything else is a hard error, so a typo can never silently
+//! relax a rule.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Bool(bool),
+    Int(i64),
+    Str(String),
+    StrList(Vec<String>),
+}
+
+/// section name → key → value.  Keys before any header land in `""`.
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse_doc(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let at = |msg: &str| anyhow!("line {}: {msg}: `{}`", idx + 1, raw.trim());
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| at("unterminated section header"))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| at("expected `key = value`"))?;
+        let key = parse_key(key.trim()).ok_or_else(|| at("bad key"))?;
+        let value = parse_value(value.trim()).ok_or_else(|| at("bad value"))?;
+        let table = doc.get_mut(&section).expect("section entry exists");
+        if table.insert(key, value).is_some() {
+            return Err(at("duplicate key"));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, ignoring `#` inside double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_key(s: &str) -> Option<String> {
+    if let Some(q) = parse_quoted(s) {
+        return Some(q);
+    }
+    let ok = !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    ok.then(|| s.to_string())
+}
+
+fn parse_quoted(s: &str) -> Option<String> {
+    let inner = s.strip_prefix('"')?.strip_suffix('"')?;
+    if inner.contains('"') {
+        return None;
+    }
+    Some(inner.to_string())
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Some(q) = parse_quoted(s) {
+        return Some(Value::Str(q));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']')?;
+        let mut items = Vec::new();
+        for item in inner.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue; // trailing comma
+            }
+            items.push(parse_quoted(item)?);
+        }
+        return Some(Value::StrList(items));
+    }
+    s.parse::<i64>().ok().map(Value::Int)
+}
+
+/// Per-rule configuration: which files the rule scans and which it
+/// exempts.  Entries ending in `/` are directory prefixes, `"."`
+/// matches everything, anything else is an exact file path — all
+/// relative to the scan root (`rust/src/`), forward slashes.
+#[derive(Debug, Clone, Default)]
+pub struct RuleConfig {
+    pub scope: Vec<String>,
+    pub allow: Vec<String>,
+}
+
+impl RuleConfig {
+    /// Does this rule apply to the file at `rel`?
+    pub fn applies(&self, rel: &str) -> bool {
+        Self::matches(&self.scope, rel) && !Self::matches(&self.allow, rel)
+    }
+
+    fn matches(entries: &[String], rel: &str) -> bool {
+        entries.iter().any(|e| {
+            e == "." || (e.ends_with('/') && rel.starts_with(e.as_str())) || e == rel
+        })
+    }
+}
+
+/// The loaded `detlint.toml`.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Skip `#[cfg(test)] mod … { … }` blocks (default true): the
+    /// determinism contract governs library behavior, tests assert it.
+    pub skip_cfg_test: bool,
+    pub rules: BTreeMap<String, RuleConfig>,
+}
+
+impl Config {
+    /// Parse a config and require a `[rules.<name>]` section for every
+    /// rule in `required` — a silently missing section must not read as
+    /// "rule disabled".
+    pub fn parse(text: &str, required: &[&str]) -> Result<Config> {
+        let doc = parse_doc(text)?;
+        let skip_cfg_test = match doc.get("scan").and_then(|t| t.get("skip-cfg-test")) {
+            Some(Value::Bool(b)) => *b,
+            Some(_) => bail!("[scan] skip-cfg-test must be a bool"),
+            None => true,
+        };
+        let mut rules = BTreeMap::new();
+        for name in required {
+            let section = format!("rules.{name}");
+            let table = doc
+                .get(&section)
+                .ok_or_else(|| anyhow!("missing [{section}] in detlint.toml"))?;
+            let list = |key: &str| -> Result<Vec<String>> {
+                match table.get(key) {
+                    Some(Value::StrList(v)) => Ok(v.clone()),
+                    Some(_) => bail!("[{section}] {key} must be a string array"),
+                    None => Ok(Vec::new()),
+                }
+            };
+            let rule = RuleConfig {
+                scope: list("scope")?,
+                allow: list("allow")?,
+            };
+            if rule.scope.is_empty() {
+                bail!("[{section}] needs a non-empty scope");
+            }
+            rules.insert(name.to_string(), rule);
+        }
+        Ok(Config {
+            skip_cfg_test,
+            rules,
+        })
+    }
+
+    pub fn rule(&self, name: &str) -> &RuleConfig {
+        self.rules
+            .get(name)
+            .expect("rule sections are validated at parse time")
+    }
+}
+
+/// Parse `detlint-baseline.toml`: a single `[counts]` table mapping
+/// `"module path" = count`.
+pub fn parse_baseline(text: &str) -> Result<BTreeMap<String, usize>> {
+    let doc = parse_doc(text)?;
+    let table = doc
+        .get("counts")
+        .ok_or_else(|| anyhow!("missing [counts] in baseline"))?;
+    let mut counts = BTreeMap::new();
+    for (k, v) in table {
+        match v {
+            Value::Int(n) if *n >= 0 => counts.insert(k.clone(), *n as usize),
+            _ => bail!("baseline count for {k} must be a non-negative integer"),
+        };
+    }
+    Ok(counts)
+}
+
+/// Render a baseline file deterministically (sorted by module path).
+pub fn render_baseline(counts: &BTreeMap<String, usize>) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# Panic-surface ratchet baseline: `.unwrap()` / `.expect(` occurrences per\n\
+         # library module under rust/src/ (tests excluded).  Generated by\n\
+         # `cargo run -p detlint -- --write-baseline`; do not edit by hand.\n\
+         # detlint fails when any module's count GROWS past its entry here;\n\
+         # CI fails when this file drifts from the regenerated output.\n\n\
+         [counts]\n",
+    );
+    for (k, v) in counts {
+        out.push_str(&format!("\"{k}\" = {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_subset() {
+        let doc = parse_doc(
+            "top = 3\n# comment\n[a.b]\nflag = true\nlist = [\"x\", \"y/\",]\nname = \"s#t\" # tail\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], Value::Int(3));
+        assert_eq!(doc["a.b"]["flag"], Value::Bool(true));
+        assert_eq!(
+            doc["a.b"]["list"],
+            Value::StrList(vec!["x".into(), "y/".into()])
+        );
+        assert_eq!(doc["a.b"]["name"], Value::Str("s#t".into()));
+    }
+
+    #[test]
+    fn rejects_junk() {
+        assert!(parse_doc("[unterminated\n").is_err());
+        assert!(parse_doc("key value\n").is_err());
+        assert!(parse_doc("k = [1, 2]\n").is_err());
+        assert!(parse_doc("k = 1\nk = 2\n").is_err());
+    }
+
+    #[test]
+    fn scope_matching() {
+        let rule = RuleConfig {
+            scope: vec!["coordinator/".into(), "main.rs".into()],
+            allow: vec!["coordinator/sched.rs".into()],
+        };
+        assert!(rule.applies("coordinator/pipeline.rs"));
+        assert!(rule.applies("main.rs"));
+        assert!(!rule.applies("coordinator/sched.rs"));
+        assert!(!rule.applies("obs/span.rs"));
+        let all = RuleConfig {
+            scope: vec![".".into()],
+            allow: vec![],
+        };
+        assert!(all.applies("anything/at/all.rs"));
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let mut counts = BTreeMap::new();
+        counts.insert("coordinator/sched.rs".to_string(), 13);
+        counts.insert("util/json.rs".to_string(), 0);
+        let text = render_baseline(&counts);
+        assert_eq!(parse_baseline(&text).unwrap(), counts);
+    }
+}

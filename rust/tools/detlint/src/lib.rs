@@ -1,0 +1,96 @@
+//! detlint — a determinism-contract static analyzer for the Moses
+//! tuning engine.
+//!
+//! The engine's transfer guarantees (comparable cross-device records,
+//! replayable export corpora, draft-then-verify equivalence) rest on
+//! sessions being bitwise functions of `(seed, jobs)`.  detlint
+//! enforces that contract at the source level with four rules over
+//! `rust/src/`:
+//!
+//! * **wall-clock** — no `Instant::now` / `SystemTime::now` outside
+//!   allowlisted modules; deterministic code runs on the virtual clock.
+//! * **unordered-collections** — no `HashMap` / `HashSet` in the
+//!   deterministic planes; iteration order must be reproducible.
+//! * **ambient** — no `thread_rng`, `env::var`, `process::id`, or
+//!   `available_parallelism` in the deterministic planes.
+//! * **panic-ratchet** — `.unwrap()` / `.expect(` counts per library
+//!   module may never grow past `detlint-baseline.toml`.
+//!
+//! Rules are configured in `detlint.toml` (scope + allowlist per rule)
+//! and suppressible inline with
+//! `// detlint: allow(<rules>) -- <reason>` pragmas; the reason is
+//! mandatory.  See `rust/tools/detlint/tests/rules.rs` for each rule
+//! firing and passing, and the self-check test that keeps the real
+//! tree clean.
+
+pub mod config;
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use config::Config;
+pub use rules::Finding;
+pub use scan::FileScan;
+
+/// Walk up from `start` to the first directory containing
+/// `detlint.toml` — the workspace root.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("detlint.toml").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Collect every `.rs` file under `src_root` as `(rel_path, contents)`,
+/// sorted by path for deterministic output.
+pub fn collect_sources(src_root: &Path) -> Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    walk(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::with_capacity(files.len());
+    for rel in files {
+        let text = std::fs::read_to_string(src_root.join(&rel))
+            .with_context(|| format!("reading {rel}"))?;
+        out.push((rel, text));
+    }
+    Ok(out)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let rd = std::fs::read_dir(dir).with_context(|| format!("listing {dir:?}"))?;
+    for entry in rd {
+        let entry = entry.with_context(|| format!("listing {dir:?}"))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .expect("walk stays under root")
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Scan a set of `(rel, contents)` sources under one config.
+pub fn scan_all(sources: &[(String, String)], cfg: &Config) -> Vec<FileScan> {
+    let known = rules::rule_names();
+    sources
+        .iter()
+        .map(|(rel, text)| scan::scan_source(rel, text, &known, cfg.skip_cfg_test))
+        .collect()
+}

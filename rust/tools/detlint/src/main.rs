@@ -1,0 +1,138 @@
+//! detlint CLI.
+//!
+//! ```text
+//! cargo run -p detlint --                    # lint rust/src, human output
+//! cargo run -p detlint -- --format json      # machine-readable report
+//! cargo run -p detlint -- --write-baseline   # regenerate the ratchet file
+//! ```
+//!
+//! Exit codes: 0 clean (or suppressed-only), 1 unsuppressed findings,
+//! 2 usage/config errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use detlint::{collect_sources, config, find_root, report, rules, scan_all, Config};
+
+struct Args {
+    root: Option<PathBuf>,
+    format: String,
+    out: Option<PathBuf>,
+    write_baseline: bool,
+}
+
+const USAGE: &str = "\
+detlint — determinism-contract static analyzer (see detlint.toml)
+
+USAGE:
+    detlint [--root <dir>] [--format human|json] [--out <file>] [--write-baseline]
+
+OPTIONS:
+    --root <dir>       Workspace root (default: walk up from cwd to detlint.toml)
+    --format <fmt>     Output format: human (default) or json
+    --out <file>       Also write the report to <file>
+    --write-baseline   Regenerate detlint-baseline.toml from the current tree
+    -h, --help         This help
+";
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        root: None,
+        format: "human".to_string(),
+        out: None,
+        write_baseline: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => args.root = Some(PathBuf::from(next(&mut it, "--root")?)),
+            "--format" => args.format = next(&mut it, "--format")?,
+            "--out" => args.out = Some(PathBuf::from(next(&mut it, "--out")?)),
+            "--write-baseline" => args.write_baseline = true,
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => bail!("unknown argument `{other}`\n{USAGE}"),
+        }
+    }
+    if args.format != "human" && args.format != "json" {
+        bail!("--format must be human or json");
+    }
+    Ok(args)
+}
+
+fn next(it: &mut impl Iterator<Item = String>, flag: &str) -> Result<String> {
+    it.next().with_context(|| format!("{flag} needs a value"))
+}
+
+fn run() -> Result<ExitCode> {
+    let args = parse_args()?;
+    let root = match args.root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().context("getting cwd")?;
+            find_root(&cwd).context(
+                "no detlint.toml found between cwd and filesystem root (pass --root)",
+            )?
+        }
+    };
+    let cfg_path = root.join("detlint.toml");
+    let cfg_text = std::fs::read_to_string(&cfg_path)
+        .with_context(|| format!("reading {cfg_path:?}"))?;
+    let cfg = Config::parse(&cfg_text, &rules::rule_names())?;
+
+    let src_root = root.join("rust").join("src");
+    let sources = collect_sources(&src_root)?;
+    let scans = scan_all(&sources, &cfg);
+
+    let baseline_path = root.join("detlint-baseline.toml");
+    if args.write_baseline {
+        let counts = rules::ratchet_counts(&scans, &cfg);
+        let text = config::render_baseline(&counts);
+        std::fs::write(&baseline_path, &text)
+            .with_context(|| format!("writing {baseline_path:?}"))?;
+        println!(
+            "detlint: wrote {} module count(s) to {}",
+            counts.len(),
+            baseline_path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => config::parse_baseline(&text)?,
+        // A missing baseline reads as all-zero: every panic site then
+        // fails until --write-baseline records the starting surface.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Default::default(),
+        Err(e) => return Err(e).with_context(|| format!("reading {baseline_path:?}")),
+    };
+
+    let findings = rules::check(&scans, &cfg, &baseline);
+    let rendered = match args.format.as_str() {
+        "json" => report::json(&findings, scans.len()),
+        _ => report::human(&findings, scans.len()),
+    };
+    print!("{rendered}");
+    if let Some(out) = &args.out {
+        std::fs::write(out, &rendered).with_context(|| format!("writing {out:?}"))?;
+    }
+    let clean = findings.iter().all(|f| f.suppressed);
+    Ok(if clean {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    })
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("detlint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Human and machine-readable finding reports.
+
+use crate::rules::Finding;
+
+/// Human output: one `file:line` anchored line per finding plus a
+/// summary tail.  Paths are printed relative to the repo root
+/// (`rust/src/<rel>`) so terminal hyperlinking works from the root.
+pub fn human(findings: &[Finding], files_scanned: usize) -> String {
+    let mut out = String::new();
+    for f in findings {
+        let tag = if f.suppressed { " (suppressed)" } else { "" };
+        out.push_str(&format!(
+            "rust/src/{}:{}: [{}]{} {}\n",
+            f.file, f.line, f.rule, tag, f.message
+        ));
+    }
+    let active = findings.iter().filter(|f| !f.suppressed).count();
+    let suppressed = findings.len() - active;
+    out.push_str(&format!(
+        "detlint: {active} finding(s), {suppressed} suppressed, {files_scanned} file(s) scanned\n"
+    ));
+    out
+}
+
+/// JSON output (versioned, for the CI artifact).
+pub fn json(findings: &[Finding], files_scanned: usize) -> String {
+    let active = findings.iter().filter(|f| !f.suppressed).count();
+    let mut out = String::new();
+    out.push_str("{\"version\":1,\"files_scanned\":");
+    out.push_str(&files_scanned.to_string());
+    out.push_str(",\"findings\":");
+    out.push_str(&active.to_string());
+    out.push_str(",\"suppressed\":");
+    out.push_str(&(findings.len() - active).to_string());
+    out.push_str(",\"items\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"suppressed\":{},\"message\":\"{}\"}}",
+            esc(&f.rule),
+            esc(&f.file),
+            f.line,
+            f.suppressed,
+            esc(&f.message)
+        ));
+    }
+    out.push_str("]}\n");
+    out
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![
+            Finding {
+                rule: "wall-clock".into(),
+                file: "search/mod.rs".into(),
+                line: 7,
+                message: "`Instant::now` — \"quoted\"".into(),
+                suppressed: false,
+            },
+            Finding {
+                rule: "ambient".into(),
+                file: "coordinator/sched.rs".into(),
+                line: 3,
+                message: "ok".into(),
+                suppressed: true,
+            },
+        ]
+    }
+
+    #[test]
+    fn human_anchors_and_counts() {
+        let h = human(&sample(), 42);
+        assert!(h.contains("rust/src/search/mod.rs:7: [wall-clock]"));
+        assert!(h.contains("(suppressed)"));
+        assert!(h.contains("1 finding(s), 1 suppressed, 42 file(s)"));
+    }
+
+    #[test]
+    fn json_is_parseable_shape() {
+        let j = json(&sample(), 42);
+        assert!(j.starts_with("{\"version\":1,"));
+        assert!(j.contains("\"findings\":1"));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\"suppressed\":true"));
+    }
+}

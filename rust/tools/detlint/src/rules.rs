@@ -1,0 +1,203 @@
+//! The determinism-contract rules.
+//!
+//! Each rule is a named set of lexical patterns plus a scope/allow
+//! configuration loaded from `detlint.toml`.  Three rules are
+//! per-occurrence (wall-clock, unordered-collections, ambient); the
+//! fourth (panic-ratchet) is a per-module counter compared against the
+//! checked-in `detlint-baseline.toml`.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::scan::FileScan;
+
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const UNORDERED: &str = "unordered-collections";
+pub const AMBIENT: &str = "ambient";
+pub const PANIC_RATCHET: &str = "panic-ratchet";
+/// Pseudo-rule for malformed pragmas; never suppressible.
+pub const PRAGMA: &str = "pragma";
+
+/// A pattern-based rule.
+pub struct RuleSpec {
+    pub name: &'static str,
+    pub patterns: &'static [&'static str],
+    pub hint: &'static str,
+}
+
+/// The three per-occurrence rules.  The panic ratchet shares their
+/// scope/allow machinery but its own counting pass.
+pub const PATTERN_RULES: &[RuleSpec] = &[
+    RuleSpec {
+        name: WALL_CLOCK,
+        patterns: &["Instant::now", "SystemTime::now"],
+        hint: "deterministic modules run on the virtual clock; wall time belongs to \
+               the obs diag payload or the drivers",
+    },
+    RuleSpec {
+        name: UNORDERED,
+        patterns: &["HashMap", "HashSet"],
+        hint: "iteration order is nondeterministic in the deterministic planes; use \
+               BTreeMap/BTreeSet or sort before draining",
+    },
+    RuleSpec {
+        name: AMBIENT,
+        patterns: &[
+            "thread_rng",
+            "env::var",
+            "process::id",
+            "available_parallelism",
+        ],
+        hint: "sessions must be pure functions of (seed, jobs); ambient process state \
+               may not leak into the deterministic planes",
+    },
+];
+
+/// Patterns counted by the panic ratchet.
+pub const PANIC_PATTERNS: &[&str] = &[".unwrap()", ".expect("];
+
+/// Every rule name a pragma may reference.
+pub fn rule_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = PATTERN_RULES.iter().map(|r| r.name).collect();
+    names.push(PANIC_RATCHET);
+    names
+}
+
+/// One reported violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    /// Path relative to the scan root.
+    pub file: String,
+    /// 1-indexed.
+    pub line: usize,
+    pub message: String,
+    /// Covered by a valid pragma: reported, but does not fail the run.
+    pub suppressed: bool,
+}
+
+/// Run every rule over the scanned files.  Findings are sorted by
+/// `(file, line, rule)`.
+pub fn check(
+    scans: &[FileScan],
+    cfg: &Config,
+    baseline: &BTreeMap<String, usize>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for scan in scans {
+        for issue in &scan.pragma_issues {
+            findings.push(Finding {
+                rule: PRAGMA.to_string(),
+                file: scan.rel.clone(),
+                line: issue.line,
+                message: issue.message.clone(),
+                suppressed: false,
+            });
+        }
+        for rule in PATTERN_RULES {
+            if !cfg.rule(rule.name).applies(&scan.rel) {
+                continue;
+            }
+            for (idx, line) in scan.lines.iter().enumerate() {
+                if cfg.skip_cfg_test && line.in_test {
+                    continue;
+                }
+                for pat in rule.patterns {
+                    if !line.code.contains(pat) {
+                        continue;
+                    }
+                    findings.push(Finding {
+                        rule: rule.name.to_string(),
+                        file: scan.rel.clone(),
+                        line: idx + 1,
+                        message: format!("`{pat}` — {}", rule.hint),
+                        suppressed: line.suppress.iter().any(|s| s == rule.name),
+                    });
+                }
+            }
+        }
+    }
+    findings.extend(ratchet(scans, cfg, baseline));
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+    });
+    findings
+}
+
+/// Count `.unwrap()` / `.expect(` occurrences per in-scope module
+/// (non-test, non-suppressed lines).  Modules with zero occurrences
+/// are omitted — the baseline lists only modules with panic surface.
+pub fn ratchet_counts(scans: &[FileScan], cfg: &Config) -> BTreeMap<String, usize> {
+    let rule = cfg.rule(PANIC_RATCHET);
+    let mut counts = BTreeMap::new();
+    for scan in scans {
+        if !rule.applies(&scan.rel) {
+            continue;
+        }
+        let mut n = 0;
+        for line in &scan.lines {
+            if cfg.skip_cfg_test && line.in_test {
+                continue;
+            }
+            if line.suppress.iter().any(|s| s == PANIC_RATCHET) {
+                continue;
+            }
+            for pat in PANIC_PATTERNS {
+                n += line.code.matches(pat).count();
+            }
+        }
+        if n > 0 {
+            counts.insert(scan.rel.clone(), n);
+        }
+    }
+    counts
+}
+
+/// Compare current counts against the baseline: growth in any module
+/// is a finding, anchored at the module's first counted site.
+fn ratchet(
+    scans: &[FileScan],
+    cfg: &Config,
+    baseline: &BTreeMap<String, usize>,
+) -> Vec<Finding> {
+    let counts = ratchet_counts(scans, cfg);
+    let mut findings = Vec::new();
+    for (rel, &n) in &counts {
+        let base = baseline.get(rel).copied().unwrap_or(0);
+        if n <= base {
+            continue;
+        }
+        let line = scans
+            .iter()
+            .find(|s| &s.rel == rel)
+            .map(|s| first_panic_line(s, cfg))
+            .unwrap_or(1);
+        findings.push(Finding {
+            rule: PANIC_RATCHET.to_string(),
+            file: rel.clone(),
+            line,
+            message: format!(
+                "panic surface grew: {n} unwrap()/expect() vs baseline {base} — return \
+                 a Result instead, or regenerate detlint-baseline.toml with \
+                 --write-baseline if the growth is deliberate"
+            ),
+            suppressed: false,
+        });
+    }
+    findings
+}
+
+fn first_panic_line(scan: &FileScan, cfg: &Config) -> usize {
+    for (idx, line) in scan.lines.iter().enumerate() {
+        if cfg.skip_cfg_test && line.in_test {
+            continue;
+        }
+        if line.suppress.iter().any(|s| s == PANIC_RATCHET) {
+            continue;
+        }
+        if PANIC_PATTERNS.iter().any(|p| line.code.contains(p)) {
+            return idx + 1;
+        }
+    }
+    1
+}

@@ -1,0 +1,453 @@
+//! Lexical source scanner: comment/string-aware line model + pragmas.
+//!
+//! detlint is deliberately a *lexical* tool (no syn, no rustc): it
+//! blanks out comments, string literals and char literals so rule
+//! patterns only ever match real code, tracks `#[cfg(test)] mod`
+//! blocks so test code is exempt, and extracts
+//! `// detlint: allow(<rules>) -- <reason>` pragmas from line
+//! comments.  Block comments are blanked but never carry pragmas.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct LineInfo {
+    /// The line with comment text, string contents and char literals
+    /// removed — rule patterns match against this.
+    pub code: String,
+    /// Inside a `#[cfg(test)] mod … { … }` block.
+    pub in_test: bool,
+    /// Rules suppressed on this line by a valid pragma.
+    pub suppress: Vec<String>,
+}
+
+/// A malformed pragma (missing reason, unknown rule, bad syntax).
+#[derive(Debug, Clone)]
+pub struct PragmaIssue {
+    pub line: usize,
+    pub message: String,
+}
+
+/// One scanned file.
+#[derive(Debug, Clone)]
+pub struct FileScan {
+    /// Path relative to the scan root, forward slashes.
+    pub rel: String,
+    /// 0-indexed; line numbers in findings are `index + 1`.
+    pub lines: Vec<LineInfo>,
+    pub pragma_issues: Vec<PragmaIssue>,
+}
+
+/// A line comment captured during blanking.
+struct Comment {
+    /// 0-indexed line the comment starts on.
+    line: usize,
+    /// Text after the `//` (or `///` / `//!`) marker.
+    text: String,
+    /// Whether code precedes the comment on its line.
+    trailing: bool,
+}
+
+/// Scan one source file.  `known_rules` validates pragma rule names;
+/// `skip_cfg_test` marks test-module lines so rules can exempt them.
+pub fn scan_source(
+    rel: &str,
+    src: &str,
+    known_rules: &[&str],
+    skip_cfg_test: bool,
+) -> FileScan {
+    let (blanked, comments) = blank(src);
+    let in_test = mark_cfg_test(&blanked, skip_cfg_test);
+    let mut lines: Vec<LineInfo> = blanked
+        .into_iter()
+        .zip(in_test)
+        .map(|(code, in_test)| LineInfo {
+            code,
+            in_test,
+            suppress: Vec::new(),
+        })
+        .collect();
+
+    let mut issues = Vec::new();
+    for c in &comments {
+        let parsed = match parse_pragma(&c.text) {
+            None => continue,
+            Some(Ok(rules)) => rules,
+            Some(Err(msg)) => {
+                issues.push(PragmaIssue {
+                    line: c.line + 1,
+                    message: msg,
+                });
+                continue;
+            }
+        };
+        let mut ok = true;
+        for r in &parsed {
+            if !known_rules.contains(&r.as_str()) {
+                issues.push(PragmaIssue {
+                    line: c.line + 1,
+                    message: format!(
+                        "pragma names unknown rule `{r}` (known: {})",
+                        known_rules.join(", ")
+                    ),
+                });
+                ok = false;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        // A trailing pragma suppresses its own line; a standalone
+        // comment suppresses the next line that carries code.
+        let target = if c.trailing {
+            Some(c.line)
+        } else {
+            lines
+                .iter()
+                .enumerate()
+                .skip(c.line + 1)
+                .find(|(_, l)| !l.code.trim().is_empty())
+                .map(|(i, _)| i)
+        };
+        match target {
+            Some(i) => lines[i].suppress.extend(parsed),
+            None => issues.push(PragmaIssue {
+                line: c.line + 1,
+                message: "standalone pragma with no following code line".to_string(),
+            }),
+        }
+    }
+
+    FileScan {
+        rel: rel.to_string(),
+        lines,
+        pragma_issues: issues,
+    }
+}
+
+/// Parse a comment body as a pragma.  Returns `None` when the comment
+/// is not a pragma at all, `Some(Err)` when it tries to be one but is
+/// malformed (most importantly: a missing `-- <reason>`).
+fn parse_pragma(text: &str) -> Option<Result<Vec<String>, String>> {
+    let rest = text.trim_start().strip_prefix("detlint:")?;
+    let bad = |msg: &str| Some(Err(msg.to_string()));
+    let Some(rest) = rest.trim_start().strip_prefix("allow") else {
+        return bad("pragma must be `detlint: allow(<rules>) -- <reason>`");
+    };
+    let Some(rest) = rest.trim_start().strip_prefix('(') else {
+        return bad("pragma missing `(` after allow");
+    };
+    let Some((inside, after)) = rest.split_once(')') else {
+        return bad("pragma missing `)`");
+    };
+    let rules: Vec<String> = inside
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return bad("pragma allows no rules");
+    }
+    let Some(reason) = after.trim_start().strip_prefix("--") else {
+        return bad("pragma requires a reason: `detlint: allow(<rules>) -- <reason>`");
+    };
+    if reason.trim().is_empty() {
+        return bad("pragma reason is empty");
+    }
+    Some(Ok(rules))
+}
+
+/// Blank comments, strings and char literals out of `src`, returning
+/// the per-line code text plus every line comment (for pragma parsing).
+fn blank(src: &str) -> (Vec<String>, Vec<Comment>) {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut comments = Vec::new();
+    let mut cur = String::new();
+    let mut i = 0;
+    let mut prev_word = false; // previous code char could end an identifier
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                lines.push(std::mem::take(&mut cur));
+                prev_word = false;
+                i += 1;
+            }
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                // Line comment (incl. doc comments): capture for
+                // pragmas, blank from the code view.
+                let start = i + 2;
+                let mut end = start;
+                while end < chars.len() && chars[end] != '\n' {
+                    end += 1;
+                }
+                comments.push(Comment {
+                    line: lines.len(),
+                    text: chars[start..end].iter().collect(),
+                    trailing: !cur.trim().is_empty(),
+                });
+                i = end;
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                // Block comment; Rust block comments nest.
+                let mut depth = 1;
+                i += 2;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '\n' {
+                        lines.push(std::mem::take(&mut cur));
+                        i += 1;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                prev_word = false;
+            }
+            '"' => {
+                i = skip_string(&chars, i + 1, &mut lines, &mut cur);
+                prev_word = false;
+            }
+            'r' | 'b' if !prev_word && starts_raw_string(&chars, i) => {
+                i = skip_raw_string(&chars, i, &mut lines, &mut cur);
+                prev_word = false;
+            }
+            '\'' => {
+                // Char literal vs lifetime.  `'\…'` and `'x'` are
+                // literals (skipped); anything else is a lifetime
+                // tick, which is ordinary code.
+                if chars.get(i + 1) == Some(&'\\') {
+                    // Escaped literal: skip `\` + escaped char, then
+                    // scan to the closing quote (handles '\'' , '\\',
+                    // '\u{…}').
+                    i += 3;
+                    while i < chars.len() && chars[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else if chars.get(i + 2) == Some(&'\'') {
+                    i += 3;
+                } else {
+                    cur.push('\'');
+                    i += 1;
+                }
+                prev_word = false;
+            }
+            _ => {
+                cur.push(c);
+                prev_word = c.is_alphanumeric() || c == '_';
+                i += 1;
+            }
+        }
+    }
+    lines.push(cur);
+    (lines, comments)
+}
+
+/// Is `chars[i]` the start of a raw (or raw byte) string literal:
+/// `r"`, `r#"`, `br"`, `b"` …?  (`b"` plain byte strings go through
+/// [`skip_string`]; this detects the `r`-prefixed forms and `b"`.)
+fn starts_raw_string(chars: &[char], i: usize) -> bool {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        // b"…" plain byte string.
+        return chars.get(i) == Some(&'b');
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Skip a raw/byte string starting at its prefix; returns the index
+/// after the closing delimiter.
+fn skip_raw_string(
+    chars: &[char],
+    mut i: usize,
+    lines: &mut Vec<String>,
+    cur: &mut String,
+) -> usize {
+    if chars.get(i) == Some(&'b') {
+        i += 1;
+    }
+    if chars.get(i) == Some(&'"') {
+        // Plain byte string: same escape rules as a normal string.
+        return skip_string(chars, i + 1, lines, cur);
+    }
+    i += 1; // the `r`
+    let mut hashes = 0;
+    while chars.get(i) == Some(&'#') {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    loop {
+        match chars.get(i) {
+            None => return i,
+            Some('\n') => {
+                lines.push(std::mem::take(cur));
+                i += 1;
+            }
+            Some('"') => {
+                let mut k = 0;
+                while k < hashes && chars.get(i + 1 + k) == Some(&'#') {
+                    k += 1;
+                }
+                i += 1 + k;
+                if k == hashes {
+                    return i;
+                }
+            }
+            Some(_) => i += 1,
+        }
+    }
+}
+
+/// Skip a normal string body (opening quote already consumed);
+/// returns the index after the closing quote.
+fn skip_string(chars: &[char], mut i: usize, lines: &mut Vec<String>, cur: &mut String) -> usize {
+    loop {
+        match chars.get(i) {
+            None => return i,
+            Some('\\') => {
+                // Keep line numbering intact across `\` + newline
+                // string continuations.
+                if chars.get(i + 1) == Some(&'\n') {
+                    lines.push(std::mem::take(cur));
+                }
+                i += 2;
+            }
+            Some('\n') => {
+                lines.push(std::mem::take(cur));
+                i += 1;
+            }
+            Some('"') => return i + 1,
+            Some(_) => i += 1,
+        }
+    }
+}
+
+/// Mark lines inside `#[cfg(test)] mod … { … }` blocks via brace
+/// tracking over the blanked code.  When `enabled` is false every line
+/// reads as non-test.
+fn mark_cfg_test(blanked: &[String], enabled: bool) -> Vec<bool> {
+    let mut out = vec![false; blanked.len()];
+    if !enabled {
+        return out;
+    }
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut in_test = false;
+    let mut start_depth = 0i64;
+    for (idx, code) in blanked.iter().enumerate() {
+        if !in_test && code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let opens_mod = (code.trim_start().starts_with("mod ") || code.contains(" mod "))
+            && code.contains('{');
+        if pending && !in_test && opens_mod {
+            in_test = true;
+            pending = false;
+            start_depth = depth;
+        }
+        if in_test {
+            out[idx] = true;
+        }
+        depth += code.matches('{').count() as i64;
+        depth -= code.matches('}').count() as i64;
+        if in_test && depth <= start_depth {
+            in_test = false;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RULES: &[&str] = &["wall-clock", "ambient"];
+
+    fn scan(src: &str) -> FileScan {
+        scan_source("x.rs", src, RULES, true)
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let s = scan(
+            "let a = \"Instant::now\"; // Instant::now in prose\n/* Instant::now */ let b = 1;\n",
+        );
+        assert!(!s.lines[0].code.contains("Instant::now"));
+        assert!(!s.lines[1].code.contains("Instant::now"));
+        assert!(s.lines[1].code.contains("let b"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) -> u8 { b'\"' }\nlet c = '\\'';\nlet d = 'y';\n");
+        assert!(s.lines[0].code.contains("fn f<'a>(x: &'a str)"));
+        assert!(s.lines[1].code.contains("let c ="));
+        assert!(s.lines[2].code.contains("let d ="));
+        // Nothing after the literals leaked into a string state.
+        assert!(s.lines[0].code.contains('}'));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let s = scan("let a = r#\"Instant::now \"quoted\" \"#; let tail = 2;\n");
+        assert!(!s.lines[0].code.contains("Instant::now"));
+        assert!(s.lines[0].code.contains("let tail"));
+    }
+
+    #[test]
+    fn trailing_pragma_hits_its_line_standalone_hits_next() {
+        let s = scan(
+            "let a = 1; // detlint: allow(ambient) -- reason here\n\
+             // detlint: allow(wall-clock) -- spans need wall time\n\
+             let b = 2;\n",
+        );
+        assert_eq!(s.lines[0].suppress, vec!["ambient".to_string()]);
+        assert!(s.lines[1].suppress.is_empty());
+        assert_eq!(s.lines[2].suppress, vec!["wall-clock".to_string()]);
+        assert!(s.pragma_issues.is_empty());
+    }
+
+    #[test]
+    fn pragma_without_reason_is_an_issue() {
+        let s = scan("let a = 1; // detlint: allow(ambient)\n");
+        assert_eq!(s.pragma_issues.len(), 1);
+        assert!(s.pragma_issues[0].message.contains("reason"));
+        assert!(s.lines[0].suppress.is_empty());
+    }
+
+    #[test]
+    fn pragma_with_unknown_rule_is_an_issue() {
+        let s = scan("let a = 1; // detlint: allow(no-such-rule) -- why\n");
+        assert_eq!(s.pragma_issues.len(), 1);
+        assert!(s.pragma_issues[0].message.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_marked() {
+        let src = "fn lib() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t() { x.unwrap(); }\n\
+                   }\n\
+                   fn after() {}\n";
+        let s = scan(src);
+        assert!(!s.lines[0].in_test);
+        assert!(s.lines[3].in_test);
+        assert!(!s.lines[5].in_test);
+    }
+}

@@ -1,0 +1,210 @@
+//! Per-rule good/bad fixtures plus the self-check that keeps the real
+//! `rust/src/` tree clean against the checked-in config and baseline.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use detlint::{collect_sources, config, rules, scan_all, Config};
+
+/// A config shaped like the real one, but inline so fixtures are
+/// self-contained: deterministic planes `search/` + `coordinator/`,
+/// `obs/` allowed wall-clock reads, ratchet over everything but
+/// `main.rs`.
+fn test_config() -> Config {
+    Config::parse(
+        r#"
+[scan]
+skip-cfg-test = true
+
+[rules.wall-clock]
+scope = ["."]
+allow = ["obs/"]
+
+[rules.unordered-collections]
+scope = ["search/", "coordinator/"]
+
+[rules.ambient]
+scope = ["search/", "coordinator/"]
+
+[rules.panic-ratchet]
+scope = ["."]
+allow = ["main.rs"]
+"#,
+        &rules::rule_names(),
+    )
+    .expect("test config parses")
+}
+
+fn lint_one(rel: &str, src: &str) -> Vec<rules::Finding> {
+    lint_with_baseline(rel, src, &BTreeMap::new())
+}
+
+fn lint_with_baseline(
+    rel: &str,
+    src: &str,
+    baseline: &BTreeMap<String, usize>,
+) -> Vec<rules::Finding> {
+    let cfg = test_config();
+    let sources = vec![(rel.to_string(), src.to_string())];
+    let scans = scan_all(&sources, &cfg);
+    rules::check(&scans, &cfg, baseline)
+}
+
+fn active(findings: &[rules::Finding]) -> Vec<&rules::Finding> {
+    findings.iter().filter(|f| !f.suppressed).collect()
+}
+
+#[test]
+fn wall_clock_fires_in_deterministic_code_and_not_in_obs() {
+    let bad = "fn f() { let t = std::time::Instant::now(); }\n";
+    let f = lint_one("search/evolutionary.rs", bad);
+    assert_eq!(active(&f).len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "wall-clock");
+    assert_eq!((f[0].file.as_str(), f[0].line), ("search/evolutionary.rs", 1));
+
+    assert!(active(&lint_one("obs/span.rs", bad)).is_empty());
+    // SystemTime is the same rule.
+    let f = lint_one("coordinator/tuner.rs", "let t = SystemTime::now();\n");
+    assert_eq!(active(&f).len(), 1);
+    // Prose and strings do not trip it.
+    let good = "// Instant::now is forbidden here\nlet s = \"Instant::now\";\n";
+    assert!(active(&lint_one("search/mod.rs", good)).is_empty());
+}
+
+#[test]
+fn unordered_collections_fire_only_in_planes() {
+    let bad = "use std::collections::HashMap;\nfn f() -> HashSet<u32> { todo!() }\n";
+    let f = lint_one("coordinator/pipeline.rs", bad);
+    let a = active(&f);
+    assert_eq!(a.len(), 2, "{f:?}"); // one per offending line/pattern
+    assert!(a.iter().all(|f| f.rule == "unordered-collections"));
+
+    // BTreeMap is the sanctioned container.
+    let good = "use std::collections::BTreeMap;\n";
+    assert!(active(&lint_one("coordinator/pipeline.rs", good)).is_empty());
+    // Outside the planes (e.g. the tunecache store) HashMap is fine.
+    assert!(active(&lint_one("tunecache/store.rs", bad)).is_empty());
+}
+
+#[test]
+fn ambient_nondeterminism_fires_in_planes() {
+    for bad in [
+        "let r = rand::thread_rng();\n",
+        "let v = std::env::var(\"X\");\n",
+        "let p = std::process::id();\n",
+        "let n = std::thread::available_parallelism();\n",
+    ] {
+        let f = lint_one("coordinator/sched.rs", bad);
+        assert_eq!(active(&f).len(), 1, "{bad}: {f:?}");
+        assert_eq!(f[0].rule, "ambient");
+        assert!(active(&lint_one("device/sim.rs", bad)).is_empty(), "{bad} out of scope");
+    }
+}
+
+#[test]
+fn panic_ratchet_fails_on_growth_and_passes_at_baseline() {
+    let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\nfn g() { h().expect(\"boom\"); }\n";
+    // No baseline entry → any panic surface is growth.
+    let f = lint_one("transfer/moses.rs", src);
+    assert_eq!(active(&f).len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "panic-ratchet");
+    assert!(f[0].message.contains("2 unwrap()/expect() vs baseline 0"));
+
+    // At (or under) the recorded baseline the ratchet is quiet.
+    let mut base = BTreeMap::new();
+    base.insert("transfer/moses.rs".to_string(), 2);
+    assert!(active(&lint_with_baseline("transfer/moses.rs", src, &base)).is_empty());
+
+    // Test modules do not count against the ratchet.
+    let test_only = "#[cfg(test)]\nmod tests {\n fn t() { x.unwrap().expect(\"y\"); }\n}\n";
+    assert!(active(&lint_one("transfer/moses.rs", test_only)).is_empty());
+
+    // The bin driver is allowlisted.
+    assert!(active(&lint_one("main.rs", src)).is_empty());
+}
+
+#[test]
+fn pragmas_suppress_with_reason_and_fail_without() {
+    // Trailing pragma with a reason: finding is recorded but suppressed.
+    let ok = "let t = Instant::now(); // detlint: allow(wall-clock) -- driver-only timing\n";
+    let f = lint_one("coordinator/tuner.rs", ok);
+    assert_eq!(f.len(), 1);
+    assert!(f[0].suppressed);
+    assert!(active(&f).is_empty());
+
+    // Standalone pragma suppresses the next code line.
+    let standalone = "// detlint: allow(ambient) -- pid is part of the segment name\n\
+                      let p = std::process::id();\n";
+    let f = lint_one("coordinator/sched.rs", standalone);
+    assert_eq!(f.len(), 1);
+    assert!(f[0].suppressed);
+
+    // A reasonless pragma is itself a (never-suppressible) finding,
+    // and does not suppress.
+    let bad = "let t = Instant::now(); // detlint: allow(wall-clock)\n";
+    let f = lint_one("coordinator/tuner.rs", bad);
+    let a = active(&f);
+    assert_eq!(a.len(), 2, "{f:?}");
+    assert!(a.iter().any(|f| f.rule == "pragma"));
+    assert!(a.iter().any(|f| f.rule == "wall-clock" && !f.suppressed));
+
+    // Unknown rule names are rejected too.
+    let unk = "let x = 1; // detlint: allow(made-up) -- because\n";
+    let f = lint_one("search/mod.rs", unk);
+    assert_eq!(active(&f).len(), 1);
+    assert_eq!(f[0].rule, "pragma");
+
+    // A pragma'd line is excluded from the ratchet count.
+    let counted = "fn f() { g().expect(\"invariant\") } // detlint: allow(panic-ratchet) -- invariant\n";
+    assert!(active(&lint_one("transfer/moses.rs", counted)).is_empty());
+}
+
+#[test]
+fn write_baseline_shape_roundtrips() {
+    let cfg = test_config();
+    let sources = vec![(
+        "transfer/moses.rs".to_string(),
+        "fn f() { a.unwrap(); b.unwrap(); }\n".to_string(),
+    )];
+    let scans = scan_all(&sources, &cfg);
+    let counts = rules::ratchet_counts(&scans, &cfg);
+    let text = config::render_baseline(&counts);
+    let back = config::parse_baseline(&text).unwrap();
+    assert_eq!(back, counts);
+    assert_eq!(back.get("transfer/moses.rs"), Some(&2));
+}
+
+/// The real tree must lint clean against the checked-in `detlint.toml`
+/// and `detlint-baseline.toml`: zero unsuppressed findings, and the
+/// baseline exactly matches a fresh `--write-baseline` (no drift).
+#[test]
+fn real_tree_is_clean_and_baseline_is_current() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..")
+        .join("..");
+    let cfg_text = std::fs::read_to_string(root.join("detlint.toml"))
+        .expect("detlint.toml at workspace root");
+    let cfg = Config::parse(&cfg_text, &rules::rule_names()).expect("config parses");
+    let baseline_text = std::fs::read_to_string(root.join("detlint-baseline.toml"))
+        .expect("detlint-baseline.toml at workspace root");
+    let baseline = config::parse_baseline(&baseline_text).expect("baseline parses");
+
+    let sources = collect_sources(&root.join("rust").join("src")).expect("sources readable");
+    assert!(sources.len() > 40, "expected the full moses tree");
+    let scans = scan_all(&sources, &cfg);
+
+    let findings = rules::check(&scans, &cfg, &baseline);
+    let bad: Vec<_> = findings.iter().filter(|f| !f.suppressed).collect();
+    assert!(
+        bad.is_empty(),
+        "rust/src violates the determinism contract:\n{}",
+        detlint::report::human(&findings, scans.len())
+    );
+
+    let counts = rules::ratchet_counts(&scans, &cfg);
+    assert_eq!(
+        counts, baseline,
+        "detlint-baseline.toml drifted — regenerate with `cargo run -p detlint -- --write-baseline`"
+    );
+}
